@@ -1,0 +1,124 @@
+"""Paper Figures 3-4: CacheHash (inlined first link, per big-atomic strategy)
+vs the Chaining baseline (no inlining) vs a python-dict oracle reference.
+
+Reported per cell: Mop/s, inline-hit fraction (ops resolved with ONE cell
+access — the paper's whole point), chain steps per op (dependent pool
+gathers), serialization rounds (bucket contention).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_results, time_op
+from repro.core import cachehash as ch
+
+VARIANTS = [("cachehash/seqlock", "seqlock", True),
+            ("cachehash/cached_me", "cached_me", True),
+            ("cachehash/cached_wf", "cached_wf", True),
+            ("cachehash/indirect", "indirect", True),
+            ("chaining", "cached_me", False)]
+
+DEF = dict(nb=1 << 14, p=2048, u=0.1, z=0.0)
+
+
+def _ops(rng, *, nb, p, u, z, vw=1):
+    if z <= 0:
+        keys = rng.integers(0, nb, p)
+    else:
+        keys = (rng.zipf(max(z, 1.01), p) - 1) % nb
+    upd = rng.random(p) < u
+    ins = rng.random(p) < 0.5
+    kind = np.where(upd, np.where(ins, ch.INSERT, ch.DELETE),
+                    ch.FIND).astype(np.int32)
+    vals = rng.integers(0, 2**32, (p, vw), dtype=np.uint32)
+    return ch.OpBatch(jnp.asarray(kind), jnp.asarray(keys.astype(np.uint32)),
+                      jnp.asarray(vals))
+
+
+def run_cell(name, strategy, inline, *, nb, p, u, z, seed=0):
+    rng = np.random.default_rng(seed)
+    table = ch.CacheHash(nb, vw=1, strategy=strategy, p_max=p, inline=inline)
+    # preload ~ load factor 0.5
+    pre = _ops(rng, nb=nb, p=min(nb // 2, 4 * p), u=1.0, z=0.0)
+    pre = pre._replace(kind=jnp.full_like(pre.kind, ch.INSERT))
+    table.apply(pre)
+    ops = _ops(rng, nb=nb, p=p, u=u, z=z)
+
+    def step(state, ops):
+        return ch.apply_hash_ops(state, ops, strategy=strategy,
+                                 inline=inline, vw=1)
+
+    dt, (state, res, stats) = time_op(step, table.state, ops, reps=3)
+    live = p
+    return {
+        "variant": name, "nb": nb, "p": p, "u": u, "z": z,
+        "mops_s": p / dt / 1e6,
+        "inline_hit": float(stats.inline_hits / max(live, 1)),
+        "chain_steps_op": float(stats.chain_steps / max(live, 1)),
+        "rounds": int(stats.rounds),
+    }
+
+
+def dict_oracle_throughput(*, nb, p, u, z, seed=0):
+    """Single-threaded python dict — the 'ideal sequential' reference."""
+    rng = np.random.default_rng(seed)
+    ops = _ops(rng, nb=nb, p=p, u=u, z=z)
+    kind = np.asarray(ops.kind)
+    key = np.asarray(ops.key)
+    val = np.asarray(ops.value)
+    model = {}
+    t0 = time.perf_counter()
+    for i in range(p):
+        k = int(key[i])
+        if kind[i] == ch.FIND:
+            model.get(k)
+        elif kind[i] == ch.INSERT:
+            model.setdefault(k, val[i])
+        else:
+            model.pop(k, None)
+    dt = time.perf_counter() - t0
+    return {"variant": "python-dict(1-thread)", "nb": nb, "p": p, "u": u,
+            "z": z, "mops_s": p / dt / 1e6, "inline_hit": None,
+            "chain_steps_op": None, "rounds": None}
+
+
+def main(quick: bool = False):
+    base = dict(DEF)
+    if quick:
+        base["nb"], base["p"] = 1 << 10, 512
+    out = {}
+    for param, values in [("u", [0.0, 0.1, 0.5, 1.0]),
+                          ("z", [0.0, 0.9, 0.99]),
+                          ("nb", [1 << 10, 1 << 14] if quick else
+                           [1 << 10, 1 << 14, 1 << 18])]:
+        rows = []
+        for v in values:
+            kw = dict(base)
+            kw[param] = v
+            for name, strat, inline in VARIANTS:
+                rows.append(run_cell(name, strat, inline, **kw))
+            rows.append(dict_oracle_throughput(**kw))
+        print_table(f"Fig3/4 analogue: vary {param}", rows,
+                    ["variant", param, "mops_s", "inline_hit",
+                     "chain_steps_op", "rounds"])
+        out[param] = rows
+    save_results("bench_cachehash", out)
+    # claim check: inlining removes most chain walks
+    inl = [r for r in out["u"] if r["variant"] == "cachehash/cached_me"]
+    cha = [r for r in out["u"] if r["variant"] == "chaining"]
+    a = np.mean([r["chain_steps_op"] for r in inl])
+    b = np.mean([r["chain_steps_op"] for r in cha])
+    print(f"\n[check] chain steps/op: cachehash={a:.3f} chaining={b:.3f} "
+          f"-> {'OK' if a < b else 'UNEXPECTED'} (paper: inlining avoids "
+          "the dependent miss)")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,82 @@
+"""Beyond-paper: the mesh-sharded big-atomic table (core.distributed).
+
+Runs in a subprocess with 8 placeholder devices, measures throughput of the
+route -> apply -> return pipeline vs a single-shard table, and reports the
+modeled collective bytes per batch (the roofline term that the §Perf
+hillclimb drives down).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import print_table, save_results
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import jax, numpy as np
+    from repro.core import distributed as dsb
+    from repro.core import semantics as sem
+
+    n, k = 1 << {log_n}, 4
+    p_local = {p_local}
+    rows = []
+    for shards in (1, 2, 4, 8):
+        mesh = jax.make_mesh((shards,), ("shard",)) if shards > 1 else \
+            jax.make_mesh((1,), ("shard",))
+        rng = np.random.default_rng(0)
+        p = shards * p_local
+        ops = sem.random_batch(rng, p=p, n=n, k=k, update_frac=0.2)
+        ops_hot = sem.random_batch(rng, p=p, n=n, k=k, update_frac=0.1,
+                                   zipf=1.2)
+        variants = [("baseline", dict()),
+                    ("opt(dedup+interleave+cap/4)",
+                     dict(dedup_loads=True, interleave=True,
+                          route_capacity=max(p_local // 4, 8)))]
+        for vname, kw in variants:
+            table = dsb.init_sharded(mesh, "shard", n, k)
+            apply_ops = dsb.make_apply(mesh, "shard", n, k, p_local, **kw)
+            out = apply_ops(table, ops); jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            reps = 10
+            for _ in range(reps):
+                table, res, ovf = apply_ops(table, ops)
+            jax.block_until_ready(res)
+            dt = (time.perf_counter() - t0) / reps
+            _, _, ovf_hot = apply_ops(table, ops_hot)
+            cap = kw.get("route_capacity", p_local)
+            coll = 2 * cap * (2 * k + 5) * 4 * (shards - 1) / max(shards, 1) \
+                * shards / max(shards, 1)
+            rows.append(dict(variant=vname, shards=shards, p_global=p,
+                             mops_s=p / dt / 1e6, overflow=int(ovf),
+                             overflow_z1_2=int(ovf_hot),
+                             coll_bytes_dev=coll))
+    print("JSON:" + json.dumps(rows))
+""")
+
+
+def main(quick: bool = False):
+    script = SCRIPT.format(log_n=12 if quick else 16,
+                           p_local=256 if quick else 1024)
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    line = [l for l in r.stdout.splitlines() if l.startswith("JSON:")]
+    assert line, r.stdout + r.stderr[-2000:]
+    import json
+    rows = json.loads(line[0][5:])
+    print_table("Distributed big-atomic table (8 placeholder devices)", rows,
+                ["variant", "shards", "p_global", "mops_s", "overflow",
+                 "overflow_z1_2", "coll_bytes_dev"])
+    save_results("bench_distributed", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

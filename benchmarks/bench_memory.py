@@ -1,0 +1,43 @@
+"""Paper Table 1 / §5.5: exact memory accounting per strategy, validated
+against the actual bytes held by the pytree layouts."""
+
+from __future__ import annotations
+
+from benchmarks.common import print_table, save_results
+from repro.core import bigatomic as ba
+
+CASES = [(1 << 14, 4, 256), (1 << 17, 4, 256), (1 << 14, 16, 1024)]
+
+
+def main(quick: bool = False):
+    rows = []
+    for n, k, p in CASES[:2] if quick else CASES:
+        for strategy in ["plain", "seqlock", "simplock", "indirect",
+                         "cached_wf", "cached_me"]:
+            pred = ba.memory_bytes(n, k, p, ba.Strategy(strategy))
+            state = ba.init(n, k, ba.Strategy(strategy), p)
+            actual = ba.state_nbytes(state)
+            rows.append({
+                "strategy": strategy, "n": n, "k": k, "p": p,
+                "model_bytes": pred, "actual_bytes": actual,
+                "ratio": actual / pred,
+                "per_cell_words": actual / n / 4,
+            })
+    print_table("Table 1 / §5.5 memory accounting", rows,
+                ["strategy", "n", "k", "p", "model_bytes", "actual_bytes",
+                 "ratio", "per_cell_words"])
+    save_results("bench_memory", rows)
+    # Table-1 structure: cached_wf ~ 2x cell space of cached_me at large n
+    big = [r for r in rows if r["n"] == max(c[0] for c in CASES[:2])]
+    wf = next(r for r in big if r["strategy"] == "cached_wf")
+    me = next(r for r in big if r["strategy"] == "cached_me")
+    print(f"\n[check] cached_wf/cached_me cell space = "
+          f"{wf['actual_bytes']/me['actual_bytes']:.2f}x "
+          f"(paper: 2nk vs nk) -> "
+          f"{'OK' if wf['actual_bytes'] > 1.5 * me['actual_bytes'] else 'UNEXPECTED'}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,64 @@
+"""Roofline report: reads dryrun_results.json (produced by
+`python -m repro.launch.dryrun`) and prints the per-(arch x shape x mesh)
+three-term table + bottleneck diagnosis that EXPERIMENTS.md §Roofline embeds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import print_table, save_results
+
+
+def load(path="dryrun_results.json"):
+    if not os.path.exists(path):
+        raise SystemExit(f"{path} not found — run "
+                         "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_from(records, mesh="single"):
+    rows = []
+    for r in records:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "coll_s": rl["collective_s"], "bneck": rl["bottleneck"],
+            "useful_ratio": rl.get("useful_flops_ratio"),
+            "mfu_bound": rl.get("mfu_bound"),
+            "resident_GiB": r["bytes_per_device"]["resident"] / 2**30,
+            "fits": r["bytes_per_device"]["fits"],
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def main(quick: bool = False, path="dryrun_results.json"):
+    records = load(path)
+    out = {}
+    for mesh in ("single", "multi"):
+        rows = rows_from(records, mesh)
+        if rows:
+            print_table(f"Roofline terms per cell ({mesh}-pod, per device, "
+                        "seconds/step)", rows,
+                        ["arch", "shape", "compute_s", "memory_s", "coll_s",
+                         "bneck", "useful_ratio", "mfu_bound",
+                         "resident_GiB", "fits"])
+            out[mesh] = rows
+    # summary: bottleneck census
+    for mesh, rows in out.items():
+        census: dict = {}
+        for r in rows:
+            census[r["bneck"]] = census.get(r["bneck"], 0) + 1
+        print(f"\n[{mesh}] bottleneck census: {census}")
+    save_results("bench_roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Shared benchmark machinery: timing, result I/O, table printing.
+
+Wall-clock numbers here are CPU/XLA throughput — they reproduce the paper's
+*relative* strategy ordering and contention curves (Figs 1-5).  The absolute
+TPU numbers come from the modeled Traffic terms (bytes, dependency depth,
+RMWs) that every bench also records; EXPERIMENTS.md reads both.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_results(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def time_op(fn, *args, reps: int = 5, warmup: int = 2):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]):
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,59 @@
+"""Per-site HBM/collective profile of one dry-run cell — the 'profiler' of
+the §Perf hypothesis loop (no TPU, so the profile is the compiled HLO).
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch mixtral-8x7b \
+      --shape train_4k [--opt] [--top 15]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--opt", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    import jax
+    from repro import dist
+    from repro.analysis import analyze_hlo
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.launch.dryrun import build_cell, optimize_cfg
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.opt:
+        cfg = optimize_cfg(cfg, shape)
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    rules = dist.make_rules(cfg, mesh)
+    fn, arg_specs, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+    with dist.axis_rules(mesh, rules):
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*arg_specs).compile()
+    cost = analyze_hlo(compiled.as_text())
+    print(f"cell: {args.arch} x {args.shape} x {args.mesh} "
+          f"opt={args.opt}")
+    print(f"flops/dev: {cost.flops:.3e}  bytes/dev: {cost.bytes_hbm:.3e}  "
+          f"coll/dev: {cost.coll_bytes:.3e}")
+    print(f"coll by kind: "
+          f"{ {k: f'{v:.2e}' for k, v in cost.coll_by_kind.items()} }")
+    print(f"\ntop {args.top} HBM sites (trip-corrected bytes/device):")
+    total = cost.bytes_hbm
+    for name, b in cost.top_sites(args.top):
+        print(f"  {b:12.3e}  {100*b/total:5.1f}%  {name}")
+    if cost.coll_site:
+        print(f"\ntop collective sites (ICI bytes/device):")
+        for name, b in cost.top_coll_sites(args.top):
+            print(f"  {b:12.3e}  {100*b/max(cost.coll_bytes,1):5.1f}%  {name}")
+
+
+if __name__ == "__main__":
+    main()

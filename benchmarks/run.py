@@ -1,0 +1,70 @@
+"""Benchmark harness entry point: one bench per paper table/figure plus the
+framework's roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+--quick shrinks sizes for CI; default finishes in a few minutes on one CPU
+core.  Results land in benchmarks/results/*.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (bench_atomics, bench_cachehash, bench_distributed,
+                        bench_memory, bench_torn)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip", default="", help="comma-list to skip")
+    args, _ = ap.parse_known_args()
+    skip = set(s for s in args.skip.split(",") if s)
+
+    benches = [
+        ("atomics (Fig 2)", bench_atomics.main),
+        ("cachehash (Figs 3-4)", bench_cachehash.main),
+        ("torn-state / oversubscription (Fig 2 right)", bench_torn.main),
+        ("memory (Table 1)", bench_memory.main),
+        ("distributed table (beyond paper)", bench_distributed.main),
+    ]
+    failures = []
+    for name, fn in benches:
+        if any(s in name for s in skip):
+            print(f"\n##### SKIP {name}")
+            continue
+        print(f"\n##### {name}")
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"##### done in {time.time()-t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+
+    # roofline report (needs dryrun_results.json; optional)
+    try:
+        from benchmarks import bench_roofline
+        print("\n##### roofline (from dry-run)")
+        bench_roofline.main()
+    except SystemExit as e:
+        print(e)
+    except Exception:
+        failures.append("roofline")
+        traceback.print_exc()
+
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        raise SystemExit(1)
+    print("\nAll benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

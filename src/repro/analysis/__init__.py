@@ -1,0 +1,4 @@
+from repro.analysis.hlo import (  # noqa: F401
+    HloCost, analyze_hlo, parse_computations, roofline_terms,
+    TPU_V5E,
+)

@@ -1,0 +1,83 @@
+"""Analytic "useful" FLOPs per (architecture x shape) step.
+
+MODEL_FLOPS follows the assignment's definition — 6*N*D for dense training,
+6*N_active*D for MoE — extended with the attention quadratic term (which
+6ND omits) and with forward-only factors for serving steps:
+
+  train    : 6 * N_active * tokens  +  3 * attn_fwd_flops
+  prefill  : 2 * N_active * tokens  +      attn_fwd_flops
+  decode   : 2 * N_active * batch   +      attn_decode_flops
+
+Attention fwd = 4 * B * S^2 * h * hd per layer (QK^T + AV), halved when
+causal, windowed S^2 -> S*W.  SSM/RG-LRU layers have linear-in-S state
+updates whose FLOPs are inside the projection counts (the recurrence itself
+is O(S*d*state), added explicitly).  The ratio MODEL_FLOPS / HLO_FLOPS in
+the roofline table measures compiled-compute waste (remat, dropped-token
+capacity padding, dead work).
+"""
+
+from __future__ import annotations
+
+from repro.configs.shapes import Shape
+from repro.models.common import ModelConfig
+
+
+def _attn_layer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    hd = cfg.hd
+    if cfg.window > 0:
+        eff = min(S, cfg.window)
+        pairs = B * S * eff - (B * eff * (eff - 1) / 2 if cfg.causal else 0)
+    elif cfg.causal:
+        pairs = B * S * (S + 1) / 2
+    else:
+        pairs = B * S * S
+    return 4.0 * pairs * cfg.n_heads * hd
+
+
+def _ssm_layer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    d_in = cfg.ssm_expand * cfg.d_model
+    # SSD state update + output: O(S * d_in * state) each
+    return 6.0 * B * S * d_in * cfg.ssm_state
+
+
+def _rglru_layer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    w = cfg.rglru_width or cfg.d_model
+    return 10.0 * B * S * w          # gates + recurrence, elementwise-dominated
+
+
+def _mixer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind == "attn":
+            total += _attn_layer_fwd(cfg, B, S)
+        elif kind == "ssm":
+            total += _ssm_layer_fwd(cfg, B, S)
+        elif kind == "rglru":
+            total += _rglru_layer_fwd(cfg, B, S)
+    return total
+
+
+def _attn_decode(cfg: ModelConfig, B: int, S: int) -> float:
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind == "attn":
+            eff = min(S, cfg.window) if cfg.window > 0 else S
+            total += 4.0 * B * eff * cfg.n_heads * cfg.hd
+        elif kind == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            total += 6.0 * B * d_in * cfg.ssm_state
+        elif kind == "rglru":
+            total += 10.0 * B * (cfg.rglru_width or cfg.d_model)
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: Shape) -> float:
+    """Global useful FLOPs of ONE step of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S + 3.0 * _mixer_fwd(cfg, B, S)
+    if shape.kind == "prefill":
+        return 2.0 * n_active * B * S + _mixer_fwd(cfg, B, S)
+    # decode: one token per sequence against an S-long cache
+    return 2.0 * n_active * B + _attn_decode(cfg, B, S)

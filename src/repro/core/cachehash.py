@@ -1,0 +1,444 @@
+"""CacheHash — the paper's §4 separate-chaining hash table with the first
+link *inlined* into the bucket array as a big atomic, plus the no-inline
+`Chaining` baseline.
+
+Bucket cell layout (a big atomic of ``cellw = 2 + vw`` words):
+    [key, value(vw words), next]
+``next`` codes: EMPTY (no first link — length-0 list), NULLP (no successor —
+length-1 list), else an index into the chain-node pool.  The distinction
+between EMPTY and NULLP is the paper's stolen flag bit.
+
+Semantics (faithful to §4):
+  find    — walk the chain, return the value if present.
+  insert  — add-if-absent; new elements become the *inlined first link*, the
+            previous first link is copied out to a fresh pool node.
+  delete  — inline hit: the successor node (if any) is copied INTO the bucket
+            and retired; chain hit: *path copying* — links ahead of the victim
+            are copied to fresh nodes, the bucket's big-atomic cell is CAS'd
+            to the new chain head, old links retired.
+
+Chain nodes are written once and are immutable until retired (that is what
+makes the scheme lock-free given a big-atomic bucket cell); only the bucket
+cell mutates, which is exactly why it must be a big atomic.  The bucket array
+is a `bigatomic.TableState` parameterized by strategy, and layout maintenance
+is shared via `bigatomic.commit_layout`, so the Fig-3 comparison (CacheHash
+over seqlock / cached_me / cached_wf / indirect vs Chaining) falls out of one
+implementation.
+
+Batch execution mirrors `semantics.apply_batch`: ops are grouped by bucket and
+serialized per bucket in lane order (`L = max ops per bucket` rounds); rounds
+touch disjoint buckets so all scatters are conflict-free.  Pool slots come
+from an explicit FIFO ring (head = alloc cursor, tail = free cursor), the
+deterministic stand-in for the paper's hazard-pointer reclamation: a retired
+node is reused only after all free slots ahead of it are consumed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bigatomic as ba
+from repro.core import semantics as sem
+from repro.core.semantics import _segmented_scan_max
+
+FIND = 0
+INSERT = 1
+DELETE = 2
+IDLE = 3
+
+EMPTY = jnp.uint32(0xFFFFFFFF)   # bucket has no first link
+NULLP = jnp.uint32(0xFFFFFFFE)   # link has no successor
+_CODE_MIN = jnp.uint32(0xFFFFFFFE)  # next >= this <=> not a pool index
+
+
+class HashState(NamedTuple):
+    table: ba.TableState      # bucket cells [nb, cellw] (+ strategy fields)
+    pool: jax.Array           # chain nodes [cap, 2+vw]
+    free_ring: jax.Array      # FIFO ring of free pool slots
+    ring_head: jax.Array      # uint32 alloc cursor (monotonic, used mod cap)
+    ring_tail: jax.Array      # uint32 free cursor  (monotonic, used mod cap)
+    count: jax.Array          # live elements
+
+
+class HashResult(NamedTuple):
+    found: jax.Array          # FIND: key present; INSERT/DELETE: op succeeded
+    value: jax.Array          # FIND: the value (zeros if absent)
+    overflow: jax.Array       # walk exceeded max_chain (should never fire)
+
+
+class HashStats(NamedTuple):
+    rounds: jax.Array         # bucket-contention serialization rounds
+    chain_steps: jax.Array    # total dependent pool gathers (indirection cost)
+    inline_hits: jax.Array    # live ops resolved at the inlined first link
+    allocs: jax.Array
+    frees: jax.Array
+
+
+class OpBatch(NamedTuple):
+    kind: jax.Array      # int32[q]
+    key: jax.Array       # uint32[q]
+    value: jax.Array     # uint32[q, vw]
+
+
+def hash_u32(key: jax.Array) -> jax.Array:
+    """splitmix-style avalanche; buckets = hash & (nb-1)."""
+    h = key.astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    return h ^ (h >> 16)
+
+
+def init(nb: int, vw: int, strategy: str | ba.Strategy, p_max: int,
+         *, inline: bool = True, chain_factor: float = 2.0) -> HashState:
+    """`nb` power-of-two buckets; `vw` value words; `inline=False` gives the
+    Chaining baseline (bucket holds only the chain head pointer)."""
+    assert nb & (nb - 1) == 0, "nb must be a power of two"
+    cellw = (2 + vw) if inline else 1
+    empty_cell = np.zeros((cellw,), np.uint32)
+    empty_cell[-1] = 0xFFFFFFFF
+    data = np.broadcast_to(empty_cell, (nb, cellw))
+    table = ba.init(nb, cellw, ba.Strategy(strategy), p_max, initial=data)
+    cap = int(nb * chain_factor) + 2 * p_max
+    pool = jnp.zeros((cap, 2 + vw), sem.WORD_DTYPE)
+    return HashState(table, pool, jnp.arange(cap, dtype=jnp.int32),
+                     jnp.uint32(0), jnp.uint32(cap), jnp.uint32(0))
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (python dict) — defines the semantics.
+# ---------------------------------------------------------------------------
+
+def apply_reference(model: dict, ops: OpBatch, vw: int):
+    kind = np.asarray(ops.kind)
+    key = np.asarray(ops.key)
+    value = np.asarray(ops.value)
+    q = kind.shape[0]
+    found = np.zeros(q, bool)
+    out = np.zeros((q, vw), np.uint32)
+    for i in range(q):
+        k = int(key[i])
+        if kind[i] == FIND:
+            if k in model:
+                found[i] = True
+                out[i] = model[k]
+        elif kind[i] == INSERT:
+            if k not in model:        # add-if-absent (paper semantics)
+                model[k] = value[i].copy()
+                found[i] = True
+        elif kind[i] == DELETE:
+            if k in model:
+                del model[k]
+                found[i] = True
+    return model, HashResult(found, out, np.zeros(q, bool))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized batched ops.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("strategy", "inline", "max_chain", "vw"))
+def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
+                   inline: bool, vw: int, max_chain: int = 8):
+    """Apply a batch of FIND/INSERT/DELETE ops, linearized in lane order.
+
+    Returns (new_state, HashResult, HashStats).
+    """
+    strategy = ba.Strategy(strategy)
+    nb = state.table.version.shape[0]
+    cap = state.pool.shape[0]
+    q = ops.kind.shape[0]
+    cellw = state.table.data.shape[1]
+    cellw_pool = 2 + vw
+    grab_n = min(q * max_chain, cap)   # per-round allocation upper bound
+
+    active = ops.kind != IDLE
+    bucket = jnp.where(
+        active, (hash_u32(ops.key) & jnp.uint32(nb - 1)).astype(jnp.int32), nb)
+    order = jnp.argsort(bucket, stable=True)
+    inv_order = jnp.argsort(order, stable=True)
+    s_bucket = bucket[order]
+    s_kind = ops.kind[order]
+    s_key = ops.key[order]
+    s_value = ops.value[order]
+
+    idx = jnp.arange(q, dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool),
+                                 s_bucket[1:] != s_bucket[:-1]])
+    start_idx = _segmented_scan_max(jnp.where(seg_start, idx, -1), seg_start)
+    rank = idx - start_idx
+    n_rounds = jnp.where(jnp.any(active),
+                         jnp.max(jnp.where(s_bucket < nb, rank, -1)) + 1, 0)
+
+    lanes = jnp.arange(q, dtype=jnp.int32)
+
+    def walk(data, pool, b_idx, key):
+        """Vectorized bounded chain walk.  Returns per-lane info."""
+        cell = data[jnp.minimum(b_idx, nb - 1)]
+        if inline:
+            c_key = cell[:, 0]
+            c_next = cell[:, cellw - 1]
+            is_empty = c_next == EMPTY
+            found0 = (~is_empty) & (c_key == key)
+            head = jnp.where(found0 | is_empty, NULLP, c_next)
+        else:
+            c_next = cell[:, 0]
+            is_empty = c_next == EMPTY
+            found0 = jnp.zeros_like(is_empty)
+            head = jnp.where(is_empty, NULLP, c_next)
+
+        vis = jnp.full((q, max_chain), -1, jnp.int32)
+        found_depth = jnp.where(found0, 0, -1)
+        cur = head
+        steps = jnp.zeros((q,), jnp.int32)
+        for j in range(max_chain):
+            is_node = (cur < _CODE_MIN) & (found_depth < 0)
+            nidx = jnp.where(is_node, cur.astype(jnp.int32), 0)
+            nkey = pool[nidx, 0]
+            nnext = pool[nidx, cellw_pool - 1]
+            hit = is_node & (nkey == key)
+            found_depth = jnp.where(hit, j + 1, found_depth)
+            vis = vis.at[:, j].set(jnp.where(is_node, cur.astype(jnp.int32), -1))
+            steps = steps + is_node.astype(jnp.int32)
+            cur = jnp.where(is_node & ~hit, nnext, NULLP)
+        overflow = (cur < _CODE_MIN) & (found_depth < 0)
+        return dict(cell=cell, is_empty=is_empty, found_depth=found_depth,
+                    vis=vis, steps=steps, overflow=overflow)
+
+    def round_body(carry):
+        (t, data, ver, pool, ring, head, tail, count,
+         r_found, r_value, r_over, chain_steps, inline_hits,
+         allocs, frees) = carry
+        live = active[order] & (rank == t) & (s_bucket < nb)
+        w = walk(data, pool, s_bucket, s_key)
+        fd = w["found_depth"]
+        vis = w["vis"]
+        cell = w["cell"]
+        is_empty = w["is_empty"]
+        found = fd >= 0
+        chain_steps = chain_steps + jnp.sum(jnp.where(live, w["steps"], 0))
+        inline_hits = inline_hits + jnp.sum(
+            (live & ((fd == 0) | is_empty)).astype(jnp.int32))
+
+        # ---- FIND ----------------------------------------------------------
+        f_live = live & (s_kind == FIND)
+        node_at_fd = vis[lanes, jnp.clip(fd - 1, 0, max_chain - 1)]
+        if inline:
+            inline_val = cell[:, 1:1 + vw]
+        else:
+            inline_val = jnp.zeros((q, vw), sem.WORD_DTYPE)
+        pool_val = pool[jnp.maximum(node_at_fd, 0), 1:1 + vw]
+        fval = jnp.where((fd == 0)[:, None], inline_val, pool_val)
+        r_value = jnp.where((f_live & found)[:, None], fval, r_value)
+        r_found = jnp.where(f_live, found, r_found)
+
+        # ---- allocation plan (conflict-free: disjoint buckets) -------------
+        i_live = live & (s_kind == INSERT) & ~found & ~w["overflow"]
+        d_live = live & (s_kind == DELETE) & found
+        if inline:
+            ins_need = jnp.where(i_live & ~is_empty, 1, 0)
+        else:
+            ins_need = jnp.where(i_live, 1, 0)
+        del_need = jnp.where(d_live & (fd >= 1), jnp.maximum(fd - 1, 0), 0)
+        need = (ins_need + del_need).astype(jnp.int32)
+        off = jnp.cumsum(need) - need
+        total = jnp.sum(need).astype(jnp.uint32)
+
+        ranks = jnp.arange(grab_n, dtype=jnp.uint32)
+        grab = ring[((head + ranks) % jnp.uint32(cap)).astype(jnp.int32)]
+        slot_at = lambda o: grab[jnp.clip(o, 0, grab_n - 1)]
+        head_new = head + total
+        allocs = allocs + total
+
+        # ---- INSERT ---------------------------------------------------------
+        if inline:
+            disp = i_live & ~is_empty          # displaced first link
+            dst = jnp.where(disp, slot_at(off), cap)
+            pool = pool.at[dst].set(cell, mode="drop")
+            new_next = jnp.where(is_empty, NULLP,
+                                 slot_at(off).astype(jnp.uint32))
+            new_cell = jnp.concatenate(
+                [s_key[:, None], s_value, new_next[:, None]], axis=1)
+            w_idx = jnp.where(i_live, s_bucket, nb)
+            data = data.at[w_idx].set(new_cell, mode="drop")
+        else:
+            dst = jnp.where(i_live, slot_at(off), cap)
+            old_head = jnp.where(is_empty, NULLP, cell[:, 0])
+            node = jnp.concatenate(
+                [s_key[:, None], s_value, old_head[:, None]], axis=1)
+            pool = pool.at[dst].set(node, mode="drop")
+            w_idx = jnp.where(i_live, s_bucket, nb)
+            data = data.at[w_idx, 0].set(slot_at(off).astype(jnp.uint32),
+                                         mode="drop")
+        r_found = jnp.where(live & (s_kind == INSERT), i_live, r_found)
+
+        # ---- DELETE ---------------------------------------------------------
+        # Case A (inline only): victim is the inlined first link (fd == 0).
+        freedA = jnp.full((q,), -1, jnp.int32)
+        if inline:
+            a_live = d_live & (fd == 0)
+            succ = cell[:, cellw - 1]
+            has_succ = succ < _CODE_MIN
+            empty_cell = jnp.zeros((cellw,), sem.WORD_DTYPE).at[-1].set(EMPTY)
+            w_idx = jnp.where(a_live & ~has_succ, s_bucket, nb)
+            data = data.at[w_idx].set(empty_cell, mode="drop")
+            succ_i = jnp.where(has_succ, succ.astype(jnp.int32), 0)
+            w_idx = jnp.where(a_live & has_succ, s_bucket, nb)
+            data = data.at[w_idx].set(pool[succ_i], mode="drop")
+            freedA = jnp.where(a_live & has_succ, succ_i, freedA)
+
+        # Case B: victim at chain depth fd >= 1 -> path copy.
+        b_live = d_live & (fd >= 1)
+        victim = node_at_fd
+        tail_code = pool[jnp.maximum(victim, 0), cellw_pool - 1]
+        ncopies = jnp.where(b_live, jnp.maximum(fd - 1, 0), 0)
+        copy_base = off + ins_need
+        new_head_code = jnp.where(
+            ncopies > 0, slot_at(copy_base).astype(jnp.uint32), tail_code)
+        for j in range(max_chain - 1):
+            c_live = b_live & (j < ncopies)
+            src = vis[:, j]                      # original node at depth j+1
+            nxt = jnp.where(j + 1 < ncopies,
+                            slot_at(copy_base + j + 1).astype(jnp.uint32),
+                            tail_code)
+            row = pool[jnp.maximum(src, 0)]
+            row = jnp.concatenate([row[:, :cellw_pool - 1], nxt[:, None]],
+                                  axis=1)
+            dstj = jnp.where(c_live, slot_at(copy_base + j), cap)
+            pool = pool.at[dstj].set(row, mode="drop")
+        if inline:
+            w_idx = jnp.where(b_live, s_bucket, nb)
+            data = data.at[w_idx, cellw - 1].set(new_head_code, mode="drop")
+        else:
+            w_idx = jnp.where(b_live, s_bucket, nb)
+            hcode = jnp.where(new_head_code == NULLP, EMPTY, new_head_code)
+            data = data.at[w_idx, 0].set(hcode, mode="drop")
+        r_found = jnp.where(live & (s_kind == DELETE), d_live, r_found)
+        r_over = jnp.where(live, w["overflow"], r_over)
+
+        # ---- retire: case A successor, case B originals(1..fd-1) + victim --
+        n_retired = (jnp.where(b_live, fd, 0)
+                     + jnp.where(freedA >= 0, 1, 0)).astype(jnp.int32)
+        roff = jnp.cumsum(n_retired) - n_retired
+        rtotal = jnp.sum(n_retired).astype(jnp.uint32)
+        for j in range(max_chain):
+            srcB = vis[:, min(j, max_chain - 1)]
+            src = jnp.where(b_live, srcB,
+                            jnp.where(jnp.int32(j) == 0, freedA, -1))
+            r_live = (j < n_retired) & (src >= 0)
+            pos = ((tail + (roff + j).astype(jnp.uint32)) % jnp.uint32(cap)
+                   ).astype(jnp.int32)
+            ring = ring.at[jnp.where(r_live, pos, cap)].set(src, mode="drop")
+        tail_new = tail + rtotal
+        frees = frees + rtotal
+
+        count = (count + jnp.sum(i_live.astype(jnp.uint32))
+                 - jnp.sum(d_live.astype(jnp.uint32)))
+        modified = i_live | d_live
+        ver = ver.at[jnp.where(modified, s_bucket, nb)].add(
+            jnp.uint32(2), mode="drop")
+        return (t + 1, data, ver, pool, ring, head_new, tail_new, count,
+                r_found, r_value, r_over, chain_steps, inline_hits,
+                allocs, frees)
+
+    init_carry = (jnp.int32(0), state.table.data, state.table.version,
+                  state.pool, state.free_ring, state.ring_head,
+                  state.ring_tail, state.count,
+                  jnp.zeros((q,), bool), jnp.zeros((q, vw), sem.WORD_DTYPE),
+                  jnp.zeros((q,), bool), jnp.int32(0), jnp.int32(0),
+                  jnp.uint32(0), jnp.uint32(0))
+    out = lax.while_loop(lambda c: c[0] < n_rounds, round_body, init_carry)
+    (_, data, ver, pool, ring, head, tail, count,
+     r_found, r_value, r_over, chain_steps, inline_hits, allocs, frees) = out
+
+    n_upd = ((ver - state.table.version) // 2).sum().astype(jnp.int32)
+    table = ba.commit_layout(state.table, data, ver, n_upd,
+                             strategy, min(q, nb))
+    new_state = HashState(table, pool, ring, head, tail, count)
+    result = HashResult(r_found[inv_order], r_value[inv_order],
+                        r_over[inv_order])
+    stats = HashStats(n_rounds, chain_steps, inline_hits, allocs, frees)
+    return new_state, result, stats
+
+
+# ---------------------------------------------------------------------------
+# Host-side inspection (tests): enumerate the table's contents.
+# ---------------------------------------------------------------------------
+
+def items(state: HashState, *, inline: bool, vw: int) -> dict:
+    data = np.asarray(state.table.data)
+    pool = np.asarray(state.pool)
+    nb = data.shape[0]
+    out = {}
+    for b in range(nb):
+        if inline:
+            nxt = data[b, -1]
+            if nxt == np.uint32(0xFFFFFFFF):
+                continue
+            out[int(data[b, 0])] = data[b, 1:1 + vw].copy()
+            cur = nxt
+        else:
+            cur = data[b, 0]
+        guard = 0
+        while cur < np.uint32(0xFFFFFFFE) and guard < 10_000:
+            row = pool[int(cur)]
+            out[int(row[0])] = row[1:1 + vw].copy()
+            cur = row[-1]
+            guard += 1
+    return out
+
+
+def free_slots_available(state: HashState) -> int:
+    """Free pool slots remaining (tail - head in the FIFO ring)."""
+    return int((int(state.ring_tail) - int(state.ring_head)) % (1 << 32))
+
+
+class CacheHash:
+    """Stateful wrapper.  strategy + inline select the paper's variants:
+    CacheHash = inline=True over {seqlock, cached_me, cached_wf, indirect};
+    Chaining baseline = inline=False."""
+
+    def __init__(self, nb: int, vw: int = 1,
+                 strategy: str = "cached_me", p_max: int = 1024,
+                 *, inline: bool = True, max_chain: int = 8,
+                 chain_factor: float = 2.0):
+        self.nb, self.vw = nb, vw
+        self.strategy = ba.Strategy(strategy).value
+        self.inline = inline
+        self.max_chain = max_chain
+        self.state = init(nb, vw, strategy, p_max, inline=inline,
+                          chain_factor=chain_factor)
+
+    def apply(self, ops: OpBatch):
+        self.state, result, stats = apply_hash_ops(
+            self.state, ops, strategy=self.strategy, inline=self.inline,
+            vw=self.vw, max_chain=self.max_chain)
+        return result, stats
+
+    def find(self, keys):
+        return self.apply(self._ops(FIND, keys))
+
+    def insert(self, keys, values):
+        q = len(keys)
+        ops = OpBatch(jnp.full((q,), INSERT, jnp.int32),
+                      jnp.asarray(keys, jnp.uint32),
+                      jnp.asarray(values, sem.WORD_DTYPE).reshape(q, self.vw))
+        return self.apply(ops)
+
+    def delete(self, keys):
+        return self.apply(self._ops(DELETE, keys))
+
+    def _ops(self, kind, keys):
+        q = len(keys)
+        return OpBatch(jnp.full((q,), kind, jnp.int32),
+                       jnp.asarray(keys, jnp.uint32),
+                       jnp.zeros((q, self.vw), sem.WORD_DTYPE))
+
+    def items(self) -> dict:
+        return items(self.state, inline=self.inline, vw=self.vw)

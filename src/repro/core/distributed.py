@@ -1,0 +1,237 @@
+"""Mesh-sharded big-atomic table (beyond-paper: the paper is single-node).
+
+The table's n cells shard over one mesh axis; each device owns a contiguous
+range of cells plus its own lane-slice of the op batch.  One collective
+round-trip executes a globally linearizable batch:
+
+  1. route   — each device buckets its ops by owner shard and exchanges them
+               with a fixed-capacity `all_to_all` (capacity = p_local per
+               (src, dst) pair; overflow beyond capacity is reported, not
+               silently dropped);
+  2. apply   — every shard runs the LOCAL deterministic linearization
+               (`semantics.apply_batch`) on the ops it owns.  Linearization
+               order is (src_device, lane) — a fixed total order, so the
+               result equals a global sequential application in that order;
+  3. return  — results ride the inverse `all_to_all` back to the issuing
+               lane.
+
+Collective cost per batch: 2 all_to_alls of p_local * (2k+4) words each —
+this is the '(most representative of the paper)' roofline cell and hillclimb
+target; see benchmarks/bench_distributed.py.
+
+Device-local code runs under `shard_map`, so the same `semantics` engine is
+reused unchanged — the distribution layer is ~150 lines on top of it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import semantics as sem
+
+
+class ShardedTable(NamedTuple):
+    data: jax.Array        # word[n, k], sharded over axis 0
+    version: jax.Array     # uint32[n], sharded over axis 0
+
+
+def init_sharded(mesh: Mesh, axis: str, n: int, k: int,
+                 initial: np.ndarray | None = None) -> ShardedTable:
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    assert n % n_shards == 0, (n, n_shards)
+    data = jnp.zeros((n, k), sem.WORD_DTYPE) if initial is None \
+        else jnp.asarray(initial, sem.WORD_DTYPE)
+    ver = jnp.zeros((n,), jnp.uint32)
+    sh = NamedSharding(mesh, P(axis))
+    return ShardedTable(jax.device_put(data, NamedSharding(mesh, P(axis, None))),
+                        jax.device_put(ver, sh))
+
+
+def make_apply(mesh: Mesh, axis: str, n: int, k: int, p_local: int,
+               *, route_capacity: int | None = None,
+               dedup_loads: bool = False, interleave: bool = False):
+    """Build the jitted distributed apply for a fixed op-batch geometry.
+
+    Returned fn: (table, ops) -> (table', result, overflow_count) where
+    `ops` is an OpBatch of p_global = p_local * n_shards lanes, sharded on
+    lane axis.  Lanes whose slot routes beyond a (src,dst) pair's capacity
+    are rejected (kind treated as IDLE) and counted in overflow_count —
+    at uniform load the capacity is ~n_shards x the mean, so overflow means
+    severe skew (raise capacity or rebalance).
+
+    §Perf levers (hillclimb C, EXPERIMENTS.md):
+      route_capacity — per-(src,dst) slots in the all_to_all buffers.  The
+          collective bytes are EXACTLY proportional to this (fixed-shape
+          exchange), so shrinking it below p_local cuts the wire cost;
+      dedup_loads — loads of the same cell from the same source device with
+          no same-source update to that cell route ONCE; duplicates are
+          filled in locally from the representative's answer.  Safe because
+          the linearization order is source-major: such loads are adjacent
+          in the global order and must return identical values.  Under
+          Zipfian skew this collapses the routed load count by ~the mean
+          duplicate multiplicity, letting route_capacity shrink without
+          overflow."""
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    cells_per = n // n_shards
+    cap = route_capacity or p_local
+
+    def local(data, ver, kind, slot, expected, desired):
+        # data: [cells_per, k]; ops: this device's [p_local] lanes
+        my = lax.axis_index(axis)
+
+        rep = jnp.arange(p_local, dtype=jnp.int32)   # dedup representative
+        if dedup_loads:
+            d_order = jnp.argsort(slot, stable=True)
+            d_inv = jnp.argsort(d_order, stable=True)
+            d_slot = slot[d_order]
+            d_kind = kind[d_order]
+            idxs = jnp.arange(p_local, dtype=jnp.int32)
+            d_start = jnp.concatenate([jnp.ones((1,), bool),
+                                       d_slot[1:] != d_slot[:-1]])
+            start_idx = sem._segmented_scan_max(
+                jnp.where(d_start, idxs, -1), d_start)
+            is_upd_l = (d_kind == sem.STORE) | (d_kind == sem.CAS)
+            # does this segment contain any update? (fwd+bwd broadcast)
+            seg_end = jnp.concatenate([d_start[1:], jnp.ones((1,), bool)])
+            any_upd = jnp.flip(sem._segmented_scan_max(
+                jnp.flip(is_upd_l.astype(jnp.int32)), jnp.flip(seg_end))) > 0
+            dup = (d_kind == sem.LOAD) & ~any_upd & ~d_start
+            rep_sorted = jnp.where(dup, d_order[start_idx], d_order)
+            rep = rep_sorted[d_inv]
+            kind = jnp.where(rep != jnp.arange(p_local), sem.IDLE, kind)
+
+        if interleave:
+            owner = slot % n_shards
+            local_slot = slot // n_shards
+        else:
+            owner = jnp.clip(slot // cells_per, 0, n_shards - 1)
+            local_slot = slot % cells_per
+        owner = jnp.where(kind != sem.IDLE, owner, n_shards)  # idle -> drop
+
+        # --- route out: bucket by owner, capacity p_local per destination --
+        # rank of each lane within its destination bucket
+        order = jnp.argsort(owner, stable=True)
+        inv = jnp.argsort(order, stable=True)
+        s_owner = owner[order]
+        idx = jnp.arange(p_local, dtype=jnp.int32)
+        seg_start = jnp.concatenate([jnp.ones((1,), bool),
+                                     s_owner[1:] != s_owner[:-1]])
+        start = sem._segmented_scan_max(jnp.where(seg_start, idx, -1),
+                                        seg_start)
+        rank_sorted = idx - start
+        rank = rank_sorted[inv]
+        fits = (rank < cap) & (owner < n_shards)
+        overflow = jnp.sum((~fits & (kind != sem.IDLE)).astype(jnp.int32))
+
+        # pack into [n_shards, cap] send buffers (IDLE padding)
+        dst = jnp.where(fits, owner * cap + rank, n_shards * cap)
+        pack = lambda x, fill: jnp.full(
+            (n_shards * cap,) + x.shape[1:], fill, x.dtype
+        ).at[dst].set(x, mode="drop")
+        snd_kind = pack(jnp.where(fits, kind, sem.IDLE), sem.IDLE)
+        snd_slot = pack(local_slot, 0)
+        snd_exp = pack(expected, 0)
+        snd_des = pack(desired, 0)
+        # remember where each of my lanes went (dst shard, position)
+        src_pos = jnp.where(fits, rank, -1)
+
+        a2a = lambda x: lax.all_to_all(
+            x.reshape((n_shards, cap) + x.shape[1:]), axis,
+            split_axis=0, concat_axis=0, tiled=False)
+        r_kind = a2a(snd_kind).reshape(n_shards * cap)
+        r_slot = a2a(snd_slot).reshape(n_shards * cap)
+        r_exp = a2a(snd_exp).reshape((n_shards * cap, k))
+        r_des = a2a(snd_des).reshape((n_shards * cap, k))
+
+        # --- apply locally: linearization order = (src shard, lane rank) ---
+        ops = sem.OpBatch(r_kind, r_slot, r_exp, r_des)
+        data, ver, res, _ = sem.apply_batch(data, ver, ops)
+
+        # --- route back ------------------------------------------------------
+        back = lambda x: lax.all_to_all(
+            x.reshape((n_shards, cap) + x.shape[1:]), axis,
+            split_axis=0, concat_axis=0, tiled=False)
+        b_val = back(res.value).reshape((n_shards, cap) + (k,))
+        b_suc = back(res.success).reshape((n_shards, cap))
+        # my lane i's answer sits at [owner[i], src_pos[i]]
+        safe_owner = jnp.clip(owner, 0, n_shards - 1)
+        safe_pos = jnp.maximum(src_pos, 0)
+        value = b_val[safe_owner, safe_pos]
+        success = jnp.where(fits, b_suc[safe_owner, safe_pos], False)
+        if dedup_loads:
+            # duplicates copy their representative's answer locally
+            value = value[rep]
+            success = success[rep]
+        return data, ver, value, success, overflow[None]
+
+    spec_tab = P(axis, None)
+    spec_ver = P(axis)
+    spec_lane = P(axis)
+    spec_lane2 = P(axis, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(spec_tab, spec_ver, spec_lane, spec_lane, spec_lane2,
+                  spec_lane2),
+        out_specs=(spec_tab, spec_ver, spec_lane2, spec_lane, spec_lane),
+        check_rep=False)
+
+    @jax.jit
+    def apply_ops(table: ShardedTable, ops: sem.OpBatch):
+        data, ver, value, success, overflow = fn(
+            table.data, table.version, ops.kind, ops.slot, ops.expected,
+            ops.desired)
+        return (ShardedTable(data, ver), sem.ApplyResult(value, success),
+                jnp.sum(overflow))
+
+    return apply_ops
+
+
+def reference_apply(data, version, ops: sem.OpBatch, *, n_shards: int,
+                    p_local: int, interleave: bool = False):
+    """Sequential oracle in the distributed linearization order
+    (src shard-major, then destination-bucket rank order == lane order
+    within each src)."""
+    kind = np.asarray(ops.kind)
+    slot = np.asarray(ops.slot)
+    n = data.shape[0]
+    cells_per = n // n_shards
+    # order ops as each owner shard sees them: for owner o, for src s, the
+    # lanes of src s with owner o in lane order (capacity p_local per pair)
+    per_src = np.split(np.arange(kind.shape[0]), n_shards)
+    owner_of = (lambda x: x % n_shards) if interleave \
+        else (lambda x: x // cells_per)
+    seq = []
+    dropped = []
+    for o in range(n_shards):
+        for s in range(n_shards):
+            cnt = 0
+            for i in per_src[s]:
+                if kind[i] == sem.IDLE:
+                    continue
+                if owner_of(slot[i]) == o:
+                    if cnt < p_local:
+                        seq.append(i)
+                        cnt += 1
+                    else:
+                        dropped.append(i)
+    reordered = sem.OpBatch(
+        jnp.asarray(kind[seq]), jnp.asarray(slot[seq]),
+        jnp.asarray(np.asarray(ops.expected)[seq]),
+        jnp.asarray(np.asarray(ops.desired)[seq]))
+    d2, v2, res = sem.apply_batch_reference(data, version, reordered)
+    # scatter results back to lane order
+    p = kind.shape[0]
+    k = data.shape[1]
+    value = np.zeros((p, k), data.dtype)
+    success = np.zeros((p,), bool)
+    value[seq] = np.asarray(res.value)
+    success[seq] = np.asarray(res.success)
+    return d2, v2, sem.ApplyResult(value, success), dropped

@@ -1,0 +1,130 @@
+"""Versioned snapshot store — the paper's multiversioning application
+(§2: "allows the first version, most commonly accessed, to be stored inline
+and updated atomically"), adapted to the thing a training framework actually
+multi-versions: the train state.
+
+The writer (optimizer loop) `publish()`es each new state into a ring of S
+slots using the Cached-ME protocol:
+
+    1. bump the slot's version to ODD  (slot locked / mid-copy),
+    2. copy the pytree into the slot,
+    3. bump to EVEN,
+    4. atomically swing `head` to the slot  (the linearization point).
+
+Async readers (`snapshot()`) — checkpointer, evaluator, elastic joiners —
+read `head`, then the slot, then validate the slot's version is even and
+unchanged.  A reader never blocks the writer and never observes a torn
+state: if the writer lapped it mid-read (possible only after S further
+publishes), validation fails and the reader retries on the new head.  This
+is exactly the paper's fast-path invariant "validated pointer => cache equals
+backup", with the ring playing the role of the backup pool and `head` the
+role of the backup pointer.
+
+Everything is functional (pytrees in, pytrees out) so it works under jit and
+across process boundaries (the checkpoint package serializes snapshots).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VersionedStore(NamedTuple):
+    slots: Any                # pytree, each leaf stacked to [S, ...]
+    version: jax.Array        # uint32[S], even = consistent
+    step: jax.Array           # int32[S], training step held by each slot
+    head: jax.Array           # int32[], freshest consistent slot
+
+
+def init_store(state, n_slots: int = 2) -> VersionedStore:
+    """Ring of `n_slots` copies of `state` (slot 0 = the initial state)."""
+    slots = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_slots,) + x.shape), state)
+    return VersionedStore(
+        slots=slots,
+        version=jnp.zeros((n_slots,), jnp.uint32),
+        step=jnp.zeros((n_slots,), jnp.int32),
+        head=jnp.int32(0),
+    )
+
+
+@jax.jit
+def publish(store: VersionedStore, state, step) -> VersionedStore:
+    """Writer: install `state` as the freshest snapshot.  O(bytes) copy, no
+    reader can block it (lock-free by construction: readers only validate)."""
+    n = store.version.shape[0]
+    slot = (store.head + 1) % n
+    # 1. lock (odd) — readers of THIS slot start failing validation
+    ver = store.version.at[slot].add(jnp.uint32(1))
+    # 2. copy
+    slots = jax.tree.map(lambda buf, x: buf.at[slot].set(x),
+                         store.slots, state)
+    # 3. unlock (even, advanced)
+    ver = ver.at[slot].add(jnp.uint32(1))
+    stepv = store.step.at[slot].set(jnp.asarray(step, jnp.int32))
+    # 4. linearization point: swing head
+    return VersionedStore(slots, ver, stepv, slot)
+
+
+class Snapshot(NamedTuple):
+    state: Any
+    step: jax.Array
+    slot: jax.Array
+    version: jax.Array
+
+
+def snapshot(store: VersionedStore) -> Snapshot:
+    """Reader fast path: head -> slot -> validate.  Under jit-level atomicity
+    of a step this always validates; the cross-step race (writer lapping the
+    reader) is exercised by `snapshot_with_validation` below."""
+    slot = store.head
+    state = jax.tree.map(lambda buf: buf[slot], store.slots)
+    return Snapshot(state, store.step[slot], slot, store.version[slot])
+
+
+def validate(store: VersionedStore, snap: Snapshot) -> jax.Array:
+    """True iff `snap` is still a consistent snapshot (version unchanged and
+    even).  A checkpointer calls this AFTER serializing: if False, the bytes
+    written may be torn across publishes — retry from the new head."""
+    v = store.version[snap.slot]
+    return jnp.logical_and(v == snap.version, v % 2 == 0)
+
+
+def snapshot_with_validation(store: VersionedStore, *, max_retries: int = 3):
+    """Host-side reader loop (not jitted): snapshot, validate, retry.  This
+    is the paper's load retry loop; with S >= 2 slots a single retry suffices
+    unless the writer publishes S times during one read."""
+    for _ in range(max_retries):
+        snap = snapshot(store)
+        if bool(validate(store, snap)):
+            return snap
+    raise RuntimeError("snapshot validation failed after retries "
+                       "(writer lapped the reader repeatedly)")
+
+
+# ---------------------------------------------------------------------------
+# Torn-state simulation (the oversubscription analogue, for tests/benchmarks)
+# ---------------------------------------------------------------------------
+
+def begin_publish(store: VersionedStore, state) -> VersionedStore:
+    """Freeze the writer mid-copy (steps 1-2 done, 3-4 pending): the target
+    slot is odd/torn, head still points at the previous slot.  Readers using
+    the protocol keep returning the OLD consistent snapshot; a naive reader
+    of the torn slot returns garbage (negative control in tests)."""
+    n = store.version.shape[0]
+    slot = (store.head + 1) % n
+    ver = store.version.at[slot].add(jnp.uint32(1))      # odd = locked
+
+    def half_copy(buf, x):
+        flat = x.reshape(-1)
+        half = flat.shape[0] // 2
+        cur = buf[slot].reshape(-1)
+        torn = jnp.concatenate([flat[:half], cur[half:]]).reshape(x.shape)
+        return buf.at[slot].set(torn)
+
+    slots = jax.tree.map(half_copy, store.slots, state)
+    return store._replace(slots=slots, version=ver)

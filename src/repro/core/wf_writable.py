@@ -1,0 +1,193 @@
+"""Cached-WaitFree-Writable (paper §3.3, Algorithm 3): wait-free load +
+store + CAS built over a Load/CAS big atomic, via a write-buffer W and
+mark-matching help protocol.
+
+Faithful state per atomic i:
+    Z[i]       — the central (k+2)-word triple (value, seq, zmark), held in a
+                 `bigatomic` table (our Load/CAS object);
+    W[i]       — write-buffer: index into a node pool, plus a wmark bit.
+Invariant: zmark != wmark  <=>  there is a PENDING store (installed in W,
+not yet transferred to Z).  Transfer = CAS on Z that copies *W's* value,
+bumps seq, and flips zmark to re-match — done by ANY helper (writers and
+CASers both help; that is what makes stores wait-free).
+
+TPU adaptation: one SPMD step applies a batch of ops.  The protocol's
+cross-thread interleavings become cross-STEP interleavings: `begin_store`
+installs into W and returns *without* transferring (the descheduled-writer
+case); any later batch — even one containing only CAS ops — transfers the
+pending write first (helping), exactly like Algorithm 3's help_write call in
+cas().  Tests drive these interleavings explicitly and check linearizability
+against a sequential oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semantics as sem
+
+NULLW = jnp.int32(-1)
+
+
+class WritableState(NamedTuple):
+    z_value: jax.Array        # word[n, k]  — Z.value
+    z_seq: jax.Array          # uint32[n]   — Z.seq (ABA guard)
+    z_mark: jax.Array         # bool[n]     — Z.mark
+    w_node: jax.Array         # int32[n]    — W pointer (pool index, -1 none)
+    w_mark: jax.Array         # bool[n]     — mark carried by W
+    pool: jax.Array           # word[m, k]  — write-buffer nodes
+    pool_next: jax.Array      # uint32[]    — bump allocator (ring)
+
+
+def init(n: int, k: int, p_max: int = 64,
+         initial: np.ndarray | None = None) -> WritableState:
+    data = jnp.zeros((n, k), sem.WORD_DTYPE) if initial is None else \
+        jnp.asarray(initial, sem.WORD_DTYPE)
+    m = max(2 * p_max, 2)
+    return WritableState(
+        z_value=data,
+        z_seq=jnp.zeros((n,), jnp.uint32),
+        z_mark=jnp.zeros((n,), bool),
+        w_node=jnp.full((n,), NULLW),
+        w_mark=jnp.zeros((n,), bool),
+        pool=jnp.zeros((m, k), sem.WORD_DTYPE),
+        pool_next=jnp.uint32(0),
+    )
+
+
+def pending(st: WritableState) -> jax.Array:
+    """bool[n]: marks mismatched <=> a store is installed but untransferred."""
+    return st.z_mark != st.w_mark
+
+
+def load(st: WritableState, slots: jax.Array) -> jax.Array:
+    """Wait-free: one read of Z.value (Line 11).  Pending writes in W are
+    invisible until transferred — they linearize at transfer time."""
+    return st.z_value[slots]
+
+
+def help_write(st: WritableState) -> WritableState:
+    """Transfer every pending write from W to Z (Lines 35-41).  In a batched
+    step the helper resolves ALL mismatched cells at once; seq += 1 and
+    zmark flips to re-match (the CAS on Z of Algorithm 3)."""
+    mism = pending(st)
+    w_val = st.pool[jnp.maximum(st.w_node, 0)]
+    z_value = jnp.where(mism[:, None], w_val, st.z_value)
+    z_seq = jnp.where(mism, st.z_seq + 1, st.z_seq)
+    z_mark = jnp.where(mism, st.w_mark, st.z_mark)
+    return st._replace(z_value=z_value, z_seq=z_seq, z_mark=z_mark)
+
+
+def begin_store(st: WritableState, slot: int, value) -> WritableState:
+    """First half of store(): install the node in W and mismatch the marks
+    (Lines 19-20), then 'get descheduled' — NO transfer.  Returns with the
+    store pending; any later operation completes it (helping).
+
+    If a pending write already exists on this slot the new writer linearizes
+    silently before it (Line 18 branch: it does not even install) —
+    mirrored here by returning the state unchanged."""
+    value = jnp.asarray(value, sem.WORD_DTYPE)
+    already = pending(st)[slot]
+    same = jnp.all(st.z_value[slot] == value)
+    m = st.pool.shape[0]
+    node = (st.pool_next % jnp.uint32(m)).astype(jnp.int32)
+    do = jnp.logical_not(jnp.logical_or(already, same))
+    pool = st.pool.at[jnp.where(do, node, m)].set(value, mode="drop")
+    w_node = st.w_node.at[slot].set(jnp.where(do, node, st.w_node[slot]))
+    w_mark = st.w_mark.at[slot].set(
+        jnp.where(do, jnp.logical_not(st.z_mark[slot]), st.w_mark[slot]))
+    return st._replace(pool=pool, w_node=w_node, w_mark=w_mark,
+                       pool_next=st.pool_next + do.astype(jnp.uint32))
+
+
+def store(st: WritableState, slot: int, value) -> WritableState:
+    """Complete store: install + help twice (Line 23: one help can fail to a
+    racing CAS at most once, so two suffice — here batched help is total)."""
+    st = begin_store(st, slot, value)
+    return help_write(st)
+
+
+def cas_batch(st: WritableState, slots, expected, desired):
+    """Batched CAS (Lines 25-33): helpers first (transfer pending writes),
+    then the compare-exchange on Z with seq bump.  Within the batch, same-slot
+    CASes serialize in lane order via the shared combining scan.
+
+    Returns (state', success bool[p])."""
+    st = help_write(st)                      # Line 30: casers help writers
+    ops = sem.OpBatch(
+        jnp.full((slots.shape[0],), sem.CAS, jnp.int32),
+        jnp.asarray(slots, jnp.int32),
+        jnp.asarray(expected, sem.WORD_DTYPE),
+        jnp.asarray(desired, sem.WORD_DTYPE))
+    new_val, new_seq_x2, res, _ = sem.apply_batch(
+        st.z_value, st.z_seq * 2, ops)       # reuse parity-versioned engine
+    return st._replace(z_value=new_val, z_seq=new_seq_x2 // 2), res.success
+
+
+def store_batch(st: WritableState, slots, values) -> WritableState:
+    """Batched stores: install every lane's write (last lane per slot wins,
+    = lane-order linearization), then transfer."""
+    slots = jnp.asarray(slots, jnp.int32)
+    values = jnp.asarray(values, sem.WORD_DTYPE)
+    n = st.z_value.shape[0]
+    m = st.pool.shape[0]
+    p = slots.shape[0]
+    # last write per slot wins: scatter in lane order
+    base = (st.pool_next % jnp.uint32(m)).astype(jnp.int32)
+    nodes = (base + jnp.arange(p, dtype=jnp.int32)) % m
+    pool = st.pool.at[nodes].set(values)
+    w_node = st.w_node.at[slots].set(nodes)
+    w_mark = st.w_mark.at[slots].set(jnp.logical_not(st.z_mark[slots]))
+    st = st._replace(pool=pool, w_node=w_node, w_mark=w_mark,
+                     pool_next=st.pool_next + jnp.uint32(p))
+    return help_write(st)
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle for linearizability tests
+# ---------------------------------------------------------------------------
+
+def oracle_apply(values: np.ndarray, script: list[tuple]) -> tuple:
+    """Apply a script of ('load',s) / ('store',s,v) / ('cas',s,e,d) /
+    ('help',) sequentially; pending stores take effect at the next help or
+    op that helps.  Returns (values, outputs)."""
+    values = np.array(values, copy=True)
+    pending_w: dict[int, np.ndarray] = {}
+    out = []
+
+    def flush():
+        for s, v in list(pending_w.items()):
+            values[s] = v
+        pending_w.clear()
+
+    for op in script:
+        if op[0] == "load":
+            out.append(values[op[1]].copy())
+        elif op[0] == "begin_store":
+            s, v = op[1], np.asarray(op[2])
+            if s not in pending_w and not np.array_equal(values[s], v):
+                pending_w[s] = v
+        elif op[0] == "store":
+            s, v = op[1], np.asarray(op[2])
+            had_pending = s in pending_w
+            flush()
+            # Algorithm 3: a store that finds a pending write on its slot
+            # linearizes SILENTLY immediately before that write's transfer —
+            # its own value never appears (Line 18 false-branch).  Same for
+            # a store of the current value (Line 17).
+            if not had_pending and not np.array_equal(values[s], v):
+                values[s] = v
+        elif op[0] == "help":
+            flush()
+        elif op[0] == "cas":
+            flush()                       # casers help first
+            s, e, d = op[1], np.asarray(op[2]), np.asarray(op[3])
+            ok = np.array_equal(values[s], e)
+            if ok:
+                values[s] = d
+            out.append(ok)
+    return values, out

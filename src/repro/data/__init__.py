@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataPipeline, synthetic_batch, make_memmap_corpus,
+)

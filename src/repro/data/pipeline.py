@@ -1,0 +1,110 @@
+"""Deterministic, sharded, resumable data pipeline.
+
+Design invariants (these are what make preemption/elasticity cheap):
+  * batch(step) is a PURE FUNCTION of (seed, step, host_id, n_hosts) — the
+    pipeline has no cursor state to checkpoint; resume = restart at step N;
+  * each host materializes ONLY its shard of the global batch;
+  * the same global batch is produced for any (n_hosts, host_id)
+    factorization, so elastic rescale mid-run does not change the data
+    stream (verified in tests by comparing 1-host vs 4-host assembly).
+
+Two sources:
+  synthetic — seeded Zipf-ish token stream (self-contained, used by the
+      examples and tests; the Zipf skew gives the loss a realistic shape);
+  memmap — fixed-length documents from a token memmap on disk (np.memmap,
+      zero-copy reads; build one with `make_memmap_corpus`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.shapes import Shape
+from repro.models.common import ModelConfig
+
+
+def _rng_for(seed: int, step: int, shard: int) -> np.random.Generator:
+    # Philox is counter-based: O(1) construction per (step, shard), no
+    # sequential state -> random access over the step axis.
+    return np.random.Generator(np.random.Philox(key=seed,
+                                                counter=[0, 0, step, shard]))
+
+
+def synthetic_batch(cfg: ModelConfig, shape: Shape, *, seed: int, step: int,
+                    host_id: int = 0, n_hosts: int = 1) -> dict:
+    """This host's shard of global batch `step`."""
+    B, S = shape.global_batch, shape.seq_len
+    assert B % n_hosts == 0, (B, n_hosts)
+    b = B // n_hosts
+    rows = []
+    for r in range(b):
+        g_row = host_id * b + r                   # global row id
+        rng = _rng_for(seed, step, g_row)
+        # Zipf-ish skew: token ~ floor(v * u^3) concentrates mass on low ids
+        u = rng.random(S)
+        rows.append((cfg.vocab * u ** 3).astype(np.int32))
+    toks = np.stack(rows)
+    if cfg.input_mode == "features":
+        rng = _rng_for(seed, step, 10_000_000 + host_id)
+        feats = rng.standard_normal((b, S, cfg.feature_dim)).astype(
+            np.float32) * 0.1
+        return {"features": feats.astype(np.dtype("bfloat16") if
+                                         cfg.compute_dtype == "bfloat16"
+                                         else np.float32),
+                "labels": toks}
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["positions"] = np.broadcast_to(
+            np.arange(S, dtype=np.int32)[None, :, None], (b, S, 3)).copy()
+    return batch
+
+
+def make_memmap_corpus(path: str, n_tokens: int, vocab: int,
+                       seed: int = 0) -> str:
+    """Build a token memmap for the memmap source (tests / examples)."""
+    rng = np.random.default_rng(seed)
+    arr = np.memmap(path, dtype=np.int32, mode="w+", shape=(n_tokens,))
+    chunk = 1 << 20
+    for lo in range(0, n_tokens, chunk):
+        hi = min(lo + chunk, n_tokens)
+        arr[lo:hi] = rng.integers(0, vocab, hi - lo, dtype=np.int32)
+    arr.flush()
+    return path
+
+
+@dataclasses.dataclass
+class DataPipeline:
+    cfg: ModelConfig
+    shape: Shape
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    source: str = "synthetic"          # synthetic | memmap
+    memmap_path: str | None = None
+    _mm: np.ndarray | None = dataclasses.field(default=None, repr=False)
+
+    def batch(self, step: int) -> dict:
+        if self.source == "synthetic":
+            return synthetic_batch(self.cfg, self.shape, seed=self.seed,
+                                   step=step, host_id=self.host_id,
+                                   n_hosts=self.n_hosts)
+        if self._mm is None:
+            self._mm = np.memmap(self.memmap_path, dtype=np.int32, mode="r")
+        B, S = self.shape.global_batch, self.shape.seq_len
+        b = B // self.n_hosts
+        n_docs = len(self._mm) // S
+        rows = []
+        for r in range(b):
+            g_row = self.host_id * b + r
+            rng = _rng_for(self.seed, step, g_row)
+            d = int(rng.integers(0, n_docs))
+            rows.append(np.asarray(self._mm[d * S:(d + 1) * S]))
+        return {"tokens": np.stack(rows)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's hot paths.
+
+  seqlock_gather   — version-validated k-word cell gather (the fast path)
+  cas_apply        — one conflict-free combining round of store/CAS
+  cachehash_probe  — CacheHash bucket probe with inlined first link
+
+ops.py holds the jit'd wrappers (interpret-mode on CPU), ref.py the pure-jnp
+oracles that define correctness.
+"""
+
+from repro.kernels.cachehash_probe import cachehash_probe  # noqa: F401
+from repro.kernels.cas_apply import cas_apply_round  # noqa: F401
+from repro.kernels.seqlock_gather import seqlock_gather  # noqa: F401

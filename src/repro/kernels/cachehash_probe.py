@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: CacheHash bucket probe with inlined first link.
+
+The paper's CacheHash inlines the first chain link into the bucket array so
+the common case (hit on the first link, or miss on an empty bucket) costs ONE
+memory access.  On TPU that access is one row DMA of the bucket cell
+
+    cell = [key_words | value_words | next | flags | version | pad]
+
+selected by a scalar-prefetched bucket index (hash computed by the host
+wrapper).  The kernel compares the inlined key against the query in VMEM and
+emits (hit, empty, value, next) — the chain walk for the <load-factor>-rare
+collision case stays in the jnp wrapper, exactly like the paper's slow path.
+
+The no-inline Chaining baseline (ref.py) needs a bucket-head gather AND a
+dependent node gather per probe — two serialized DMA waves.  The benchmark
+measures both and reports the byte/dependency-depth delta.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# flags word values (matches core.cachehash)
+EMPTY = 0
+FULL = 1
+
+
+def make_probe_kernel(kw: int, vw: int):
+    """Specialize the kernel on (key words, value words) — static layout."""
+
+    def kernel(bkt_ref, cells_ref, query_ref,
+               hit_ref, empty_ref, val_ref, next_ref):
+        cell = cells_ref[...]                    # [1, cw]
+        q = query_ref[...]                       # [1, kw]
+        key = cell[:, :kw]
+        value = cell[:, kw:kw + vw]
+        nxt = cell[0, kw + vw].astype(jnp.int32)
+        flags = cell[0, kw + vw + 1]
+        is_full = flags == FULL
+        match = jnp.logical_and(is_full, jnp.all(key == q))
+        hit_ref[0, 0] = match.astype(jnp.int32)
+        empty_ref[0, 0] = jnp.logical_not(is_full).astype(jnp.int32)
+        val_ref[...] = value
+        next_ref[0, 0] = nxt
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("kw", "vw", "interpret"))
+def cachehash_probe(cells: jax.Array, bucket_idx: jax.Array,
+                    query_keys: jax.Array, *, kw: int, vw: int,
+                    interpret: bool = False):
+    """cells: uint32[m, cw] bucket array (cw >= kw+vw+2);
+    bucket_idx: int32[q] (host-computed hash); query_keys: uint32[q, kw].
+
+    Returns (hit int32[q,1], empty int32[q,1], value uint32[q,vw],
+             next int32[q,1])."""
+    m, cw = cells.shape
+    qn = bucket_idx.shape[0]
+    kernel = make_probe_kernel(kw, vw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qn,),
+        in_specs=[
+            pl.BlockSpec((1, cw), lambda i, b: (b[i], 0)),   # bucket cell
+            pl.BlockSpec((1, kw), lambda i, b: (i, 0)),      # query key
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, b: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, b: (i, 0)),
+            pl.BlockSpec((1, vw), lambda i, b: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, b: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+            jax.ShapeDtypeStruct((qn, vw), cells.dtype),
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bucket_idx, cells, query_keys)

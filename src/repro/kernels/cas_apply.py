@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: one combining round of batched store/CAS.
+
+The deterministic linearization in `repro.core.semantics` serializes updates
+to the same cell into rounds; *within* one round every live op targets a
+distinct cell, so a round is an embarrassingly parallel
+gather -> compare -> conditional write-back.  This kernel is that round:
+
+  grid step i owns op i; BlockSpec index_maps route the op's cell row (data)
+  and metadata row (version) in and back out via input/output aliasing, so
+  the table is updated in place, one pipelined pass over the op list.
+
+Dead lanes (ops not live in this round) are pointed at a reserved dummy row
+n by the host wrapper; they rewrite that row with its own contents (benign).
+Write-back of the *unchanged* value on CAS failure keeps the dataflow static
+— the moral equivalent of the paper's compare_exchange leaving memory
+untouched, expressed as an idempotent store (TPU has no conditional DMA).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+STORE = 1
+CAS = 2
+
+
+def _kernel(slot_ref, data_ref, meta_ref, kind_ref, exp_ref, des_ref,
+            out_data_ref, out_meta_ref, succ_ref, wit_ref):
+    cur = data_ref[...]                        # [1, k] current cell value
+    kind = kind_ref[0, 0]
+    live = jnp.logical_or(kind == STORE, kind == CAS)
+    match = jnp.all(cur == exp_ref[...])
+    ok = jnp.logical_and(live, jnp.logical_or(kind == STORE, match))
+    new = jnp.where(ok, des_ref[...], cur)
+    out_data_ref[...] = new
+    ver = meta_ref[0, 0]
+    out_meta_ref[0, 0] = ver + 2 * ok.astype(jnp.uint32)
+    out_meta_ref[0, 1] = meta_ref[0, 1]
+    succ_ref[0, 0] = ok.astype(jnp.int32)
+    wit_ref[...] = cur
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cas_apply_round(data: jax.Array, meta: jax.Array, slot: jax.Array,
+                    kind: jax.Array, expected: jax.Array, desired: jax.Array,
+                    *, interpret: bool = False):
+    """One conflict-free round.  data: uint32[n+1, k] (row n = dummy);
+    meta: uint32[n+1, 2]; slot: int32[p] (dead lanes -> n); kind: int32[p,1];
+    expected/desired: uint32[p, k].
+
+    Returns (data', meta', success int32[p,1], witness uint32[p,k]).
+    Within a round all live slots are distinct -> no write conflicts."""
+    n1, k = data.shape
+    p = slot.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, s: (s[i], 0)),    # data row
+            pl.BlockSpec((1, 2), lambda i, s: (s[i], 0)),    # meta row
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # kind
+            pl.BlockSpec((1, k), lambda i, s: (i, 0)),       # expected
+            pl.BlockSpec((1, k), lambda i, s: (i, 0)),       # desired
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, s: (s[i], 0)),    # data row back
+            pl.BlockSpec((1, 2), lambda i, s: (s[i], 0)),    # meta row back
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # success
+            pl.BlockSpec((1, k), lambda i, s: (i, 0)),       # witness
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n1, k), data.dtype),
+            jax.ShapeDtypeStruct((n1, 2), meta.dtype),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, k), data.dtype),
+        ],
+        # aliasing indices count ALL inputs incl. the scalar-prefetch operand
+        # (slot=0), so data=1, meta=2
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(slot, data, meta, kind.reshape(p, 1).astype(jnp.int32),
+      expected, desired)

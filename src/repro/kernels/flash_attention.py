@@ -1,0 +1,157 @@
+"""Pallas TPU flash attention (beyond-paper perf work, EXPERIMENTS.md §Perf).
+
+The dry-run roofline shows every train/prefill cell is MEMORY-bound, and the
+dominant term is attention score traffic: the pure-XLA pair-list attention
+(models/attention.py) materializes each [qb, h, kvb] score block to HBM
+several times (dot out -> mask/exp fusion -> dot in), so HBM bytes scale as
+S^2 while useful compute scales the same — a hard ~2% MFU ceiling at 4k-32k
+sequence lengths.
+
+This kernel keeps the entire online-softmax state (scores, running max, sum,
+accumulator) in VMEM scratch across the kv-block grid axis: HBM traffic drops
+to one read of Q/K/V + one write of O per sweep — S-linear, not S^2.  Causal
+and sliding-window masking skip fully-masked kv blocks via pl.when (no FLOPs
+and no DMA for skipped blocks thanks to Pallas block-index deduplication).
+
+Layout: [b, h, t, hd] (wrapper transposes from the model's [b, t, h, hd]);
+grid = (b, h, nq, nkv) with nkv innermost so scratch carries the running
+state; GQA indexes the kv head as h // group in the K/V BlockSpecs (no
+repeat-interleave — KV is read once per q-head group sweep).
+
+Validated in interpret mode against models.attention.flash_attention (the
+pure-jnp oracle) over shape/dtype/mask sweeps in tests/test_flash_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale, causal,
+            window, qb, kvb, nkv, t_kv):
+    kj = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    q_lo = qi * qb
+    k_lo = kj * kvb
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + qb - 1)
+    if window > 0:
+        live = jnp.logical_and(live, k_lo + kvb - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)          # [qb, hd]
+        k = k_ref[0, 0].astype(jnp.float32)          # [kvb, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale  # [qb, kvb]
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 1)
+        mask = kpos < t_kv                           # kv padding
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m[...]                              # [qb, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # [qb, kvb]
+        corr = jnp.exp(m_prev - m_new)               # [qb, 1]
+        l[...] = l[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))          # [qb, hd]
+        m[...] = m_new
+
+    @pl.when(kj == nkv - 1)
+    def _final():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"))
+def flash_attention_tpu(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_block: int = 512, kv_block: int = 512,
+                        interpret: bool = False):
+    """q: [b, tq, h, hd]; k, v: [b, tkv, kvh, hd].  Returns [b, tq, h, hd].
+
+    Drop-in for models.attention.flash_attention on TPU backends."""
+    b, tq, h, hd = q.shape
+    _, tkv, kvh, _ = k.shape
+    assert h % kvh == 0
+    g = h // kvh
+    qb = min(q_block, tq)
+    kvb = min(kv_block, tkv)
+    tq_orig, tkv_orig = tq, tkv
+    if tq % qb:
+        q = jnp.pad(q, ((0, 0), (0, (-tq) % qb), (0, 0), (0, 0)))
+        tq = q.shape[1]
+    if tkv % kvb:
+        pad = ((0, 0), (0, (-tkv) % kvb), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        tkv = k.shape[1]
+    nq, nkv = tq // qb, tkv // kvb
+
+    qt = q.transpose(0, 2, 1, 3)                 # [b, h, tq, hd]
+    kt = k.transpose(0, 2, 1, 3)                 # [b, kvh, tkv, hd]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(hd), causal=causal, window=window,
+        qb=qb, kvb=kvb, nkv=nkv, t_kv=tkv_orig)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, hd), lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, kvb, hd),
+                         lambda b_, h_, qi, kj, g=g: (b_, h_ // g, kj, 0)),
+            pl.BlockSpec((1, 1, kvb, hd),
+                         lambda b_, h_, qi, kj, g=g: (b_, h_ // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, hd),
+                               lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, hd), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    if tq != tq_orig:
+        out = out[:, :tq_orig]
+    return out
+
+
+def hbm_bytes_model(b, t, h, kvh, hd, *, dtype_bytes=2, train=True) -> float:
+    """Analytic HBM traffic of this kernel per layer (for the roofline
+    substitution in EXPERIMENTS.md §Perf).  Train counts fwd + recompute +
+    bwd (dq/dk/dv) sweeps; inference counts the single fwd sweep."""
+    q_bytes = b * t * h * hd * dtype_bytes
+    kv_bytes = 2 * b * t * kvh * hd * dtype_bytes
+    fwd = 2 * q_bytes + kv_bytes                 # read q, write o, read k/v
+    if not train:
+        return fwd
+    # bwd kernel: read q,k,v,o,do + write dq,dk,dv  (+ fwd recompute)
+    bwd = 3 * q_bytes + 2 * kv_bytes + 2 * q_bytes + kv_bytes
+    return fwd + bwd

@@ -1,0 +1,107 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels lower to real Mosaic kernels; on CPU (this
+container) they run in interpret mode, which executes the kernel body in
+Python per grid step — bit-identical semantics, used by the test suite's
+shape/dtype sweeps against the ref.py oracles.
+
+`pad_cells` lane-aligns the cell width: TPU vector registers are 8x128, so
+ops.py pads k up to a multiple of 128 words for the [n, k] table used by the
+kernels (the pure-XLA core keeps logical k; padding is a kernels-layer
+concern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cachehash_probe import cachehash_probe as _cachehash_probe
+from repro.kernels.cas_apply import cas_apply_round as _cas_apply_round
+from repro.kernels.seqlock_gather import seqlock_gather as _seqlock_gather
+
+LANE = 128
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pad_cells(data: jax.Array, lane: int = LANE) -> jax.Array:
+    """Pad cell width to the TPU lane multiple."""
+    n, k = data.shape
+    pad = (-k) % lane
+    return jnp.pad(data, ((0, 0), (0, pad))) if pad else data
+
+
+def bigatomic_load(data, meta, idx, *, interpret: bool | None = None):
+    """Fast-path batched load (kernel) -> (values[q,k], ok[q])."""
+    interpret = on_cpu() if interpret is None else interpret
+    vals, ok = _seqlock_gather(data, meta, idx, interpret=interpret)
+    return vals, ok[:, 0] != 0
+
+
+def bigatomic_update_rounds(data, meta, slot, kind, expected, desired,
+                            rounds: int, upd_rank, *,
+                            interpret: bool | None = None):
+    """Apply `rounds` combining rounds with the cas_apply kernel.
+
+    slot/kind/expected/desired are the SORTED op list (see core.semantics);
+    upd_rank[i] is op i's serialization round.  Dead lanes in a round point
+    at the dummy row n.  Returns (data', meta', success[p], witness[p,k])."""
+    interpret = on_cpu() if interpret is None else interpret
+    n1 = data.shape[0]
+    p, k = expected.shape
+    success = jnp.zeros((p,), jnp.int32)
+    witness = jnp.zeros((p, k), data.dtype)
+    for t in range(rounds):
+        live = upd_rank == t
+        slot_t = jnp.where(live, slot, n1 - 1)
+        kind_t = jnp.where(live, kind, 0)
+        data, meta, succ, wit = _cas_apply_round(
+            data, meta, slot_t, kind_t, expected, desired,
+            interpret=interpret)
+        success = jnp.where(live, succ[:, 0], success)
+        witness = jnp.where(live[:, None], wit, witness)
+    return data, meta, success, witness
+
+
+def hash_keys(keys: jax.Array, m: int) -> jax.Array:
+    """Fibonacci-style multiplicative hash of uint32[q, kw] -> bucket [q]."""
+    h = jnp.zeros(keys.shape[0], jnp.uint32)
+    for j in range(keys.shape[1]):
+        h = (h ^ keys[:, j]) * jnp.uint32(0x9E3779B1)
+        h = h ^ (h >> 15)
+    return (h % jnp.uint32(m)).astype(jnp.int32)
+
+
+def cachehash_find(cells, chain_pool, query_keys, *, kw, vw,
+                   max_chain: int = 8, interpret: bool | None = None):
+    """Full CacheHash lookup: kernel probe of the inlined first link, then a
+    bounded jnp chain walk for the rare collision case.
+
+    cells: uint32[m, cw]; chain_pool: uint32[c, cw] (same layout);
+    returns (found[q] bool, value[q, vw])."""
+    interpret = on_cpu() if interpret is None else interpret
+    m = cells.shape[0]
+    bidx = hash_keys(query_keys, m)
+    hit, empty, value, nxt = _cachehash_probe(
+        cells, bidx, query_keys, kw=kw, vw=vw, interpret=interpret)
+    found = hit[:, 0] != 0
+    done = found | (empty[:, 0] != 0) | (nxt[:, 0] < 0)
+    cur = nxt[:, 0]
+    val = value
+    for _ in range(max_chain):                      # slow path: chain walk
+        node = chain_pool[jnp.maximum(cur, 0)]
+        nkey = node[:, :kw]
+        nval = node[:, kw:kw + vw]
+        nnxt = node[:, kw + vw].astype(jnp.int32)
+        step_hit = ~done & (cur >= 0) & jnp.all(nkey == query_keys, axis=1)
+        val = jnp.where(step_hit[:, None], nval, val)
+        found = found | step_hit
+        done = done | step_hit | (nnxt < 0) | (cur < 0)
+        cur = jnp.where(done, cur, nnxt)
+    return found, val

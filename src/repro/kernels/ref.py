@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the definition of correctness).
+
+Each function computes exactly what the corresponding kernel computes, with
+plain gathers — tests sweep shapes/dtypes and assert bit-equality against
+the interpret-mode kernels.  `indirect_gather` additionally models the
+paper's INDIRECT strategy (two dependent gathers) for the benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cas_apply import CAS, STORE
+
+
+def seqlock_gather_ref(data, meta, idx):
+    """(values[q,k], ok[q,1]) — fast-path load with validity check."""
+    vals = data[idx]
+    ver = meta[idx, 0]
+    mark = meta[idx, 1]
+    ok = ((ver % 2 == 0) & (mark == 0)).astype(jnp.int32)[:, None]
+    return vals, ok
+
+
+def indirect_gather_ref(ptr, pool, idx):
+    """INDIRECT load: gather the pointer, then gather the node it names.
+    Two *dependent* gathers — the traffic/latency baseline CacheHash beats."""
+    node = ptr[idx]
+    return pool[node]
+
+
+def cas_apply_round_ref(data, meta, slot, kind, expected, desired):
+    """Sequential oracle of one conflict-free round (slots distinct or dummy).
+
+    Returns (data', meta', success[p,1], witness[p,k])."""
+    import numpy as np
+    data = np.array(data, copy=True)
+    meta = np.array(meta, copy=True)
+    slot = np.asarray(slot)
+    kind = np.asarray(kind).reshape(-1)
+    expected = np.asarray(expected)
+    desired = np.asarray(desired)
+    p, k = expected.shape
+    succ = np.zeros((p, 1), np.int32)
+    wit = np.zeros((p, k), data.dtype)
+    for i in range(p):
+        s = slot[i]
+        cur = data[s].copy()
+        wit[i] = cur
+        live = kind[i] in (STORE, CAS)
+        ok = live and (kind[i] == STORE or np.array_equal(cur, expected[i]))
+        if ok:
+            data[s] = desired[i]
+            meta[s, 0] += 2
+            succ[i, 0] = 1
+    return (jnp.asarray(data), jnp.asarray(meta), jnp.asarray(succ),
+            jnp.asarray(wit))
+
+
+def cachehash_probe_ref(cells, bucket_idx, query_keys, *, kw, vw):
+    """(hit[q,1], empty[q,1], value[q,vw], next[q,1])."""
+    from repro.kernels.cachehash_probe import FULL
+    cell = cells[bucket_idx]                     # [q, cw]
+    key = cell[:, :kw]
+    value = cell[:, kw:kw + vw]
+    nxt = cell[:, kw + vw].astype(jnp.int32)[:, None]
+    flags = cell[:, kw + vw + 1]
+    is_full = flags == FULL
+    hit = (is_full & jnp.all(key == query_keys, axis=1)).astype(jnp.int32)
+    empty = (~is_full).astype(jnp.int32)
+    return hit[:, None], empty[:, None], value, nxt

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: version-validated k-word cell gather (the fast path).
+
+This is the paper's whole point made into silicon-shaped code: a big-atomic
+load is ONE contiguous cell read (data row + 2 metadata words) — no pointer
+chase.  On TPU the k-word cell lives in HBM as a row of a [n, k] array;
+indices arrive as scalar-prefetched SMEM values so each grid step's BlockSpec
+index_map selects the row to DMA into VMEM.  Pallas double-buffers the row
+DMAs across grid steps, so the gather is a single pipelined HBM stream —
+exactly the "one cache miss, pipelineable" property the paper's cached fast
+path buys over INDIRECT's two dependent misses (which on TPU would be two
+*serialized* DMA waves: see indirect_gather in ref.py and the benchmark).
+
+Layout notes (TPU adaptation):
+  * cells are rows; k is padded by ops.py to a multiple of the 128-lane
+    register width so each row DMA is lane-aligned;
+  * the two metadata words (version, invalid-mark) are a [n, 2] array — on
+    real silicon they share the cell's first cache line; here they ride a
+    second tiny BlockSpec stream;
+  * validation (version even && mark clear) is elementwise in VMEM; the
+    caller falls back to the backup pool for !ok rows (slow path, rare).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, data_ref, meta_ref, out_ref, ok_ref):
+    # one cell per grid step: data_ref is the [1, k] row selected by idx
+    out_ref[...] = data_ref[...]
+    ver = meta_ref[0, 0]
+    mark = meta_ref[0, 1]
+    valid = jnp.logical_and(ver % 2 == 0, mark == 0)
+    ok_ref[0, 0] = valid.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def seqlock_gather(data: jax.Array, meta: jax.Array, idx: jax.Array,
+                   *, interpret: bool = False):
+    """data: uint32[n, k] (k lane-aligned); meta: uint32[n, 2] =
+    (version, mark); idx: int32[q].  Returns (values uint32[q, k],
+    ok int32[q, 1]) — ok=0 rows must take the slow path."""
+    n, k = data.shape
+    q = idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, 2), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, idx_ref: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), data.dtype),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(idx, data, meta)

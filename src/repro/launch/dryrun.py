@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  512 placeholder host devices let jax.make_mesh build
+# the production meshes: (16,16) single pod and (2,16,16) = 512 chips.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with production shardings, prove it partitions (no sharding
+mismatch / unsupported collective), capture memory_analysis() and
+cost_analysis(), and derive the trip-count-corrected roofline terms from the
+compiled HLO text (see repro.analysis.hlo for why XLA's own cost_analysis
+is insufficient for scanned programs).
+
+Results append to a JSON file (one record per cell) so interrupted runs
+resume where they left off.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --out dryrun_results.json
+"""
+
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import dist
+from repro.analysis import analyze_hlo, roofline_terms, TPU_V5E
+from repro.analysis.model_flops import model_flops
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, Shape, applicable
+from repro.launch.mesh import make_production_mesh, describe
+from repro.launch.specs import input_specs
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models.common import ModelConfig
+from repro.models.transformer import init_cache, init_params
+from repro.optim import AdamWConfig, adamw_init
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
+
+
+# ---------------------------------------------------------------------------
+# Shardings per entry point
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(cache_specs, cfg: ModelConfig, mesh, rules, batch: int):
+    """Shardings for the KV/state cache pytree.
+
+    Attn caches are [layers, b, L, kvh, hd] (stacked) or [b, L, kvh, hd]
+    (tail).  Batch shards over ('pod','data') when divisible; otherwise
+    (long_500k, b=1) the cache LENGTH shards over 'data' (decode context
+    parallelism).  kv_heads shard over 'model' when divisible.
+    """
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = _batch_axes(mesh)
+    b_shards = 1
+    for a in baxes:
+        b_shards *= mesh_axes[a]
+    batch_ok = batch % b_shards == 0
+    model_n = mesh_axes.get("model", 1)
+
+    def spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        stacked = "stack" in names
+        dims = list(leaf.shape)
+        ax: list = [None] * len(dims)
+        o = 1 if stacked else 0          # leading layers axis on stack leaves
+        if names[-1] in ("k", "v"):      # [.., b, L, kvh, hd]
+            if batch_ok:
+                ax[o] = baxes
+            elif dims[o + 1] % mesh_axes.get("data", 1) == 0:
+                ax[o + 1] = "data"       # shard cache length instead
+            if dims[o + 2] % model_n == 0 and model_n > 1:
+                ax[o + 2] = "model"
+        else:                             # ssm/rglru state: [.., b, ...]
+            if batch_ok:
+                ax[o] = baxes
+            # widest trailing dim over model when divisible
+            for i in range(len(dims) - 1, o, -1):
+                if dims[i] % model_n == 0 and model_n > 1 and dims[i] >= model_n:
+                    ax[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*ax))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_specs)
+
+
+def build_cell(cfg: ModelConfig, shape: Shape, mesh):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, donate)."""
+    rules = dist.make_rules(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    batch_sh = dist.batch_shardings(specs, mesh, rules)
+    params_spec = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    params_sh = dist.param_shardings(params_spec, cfg, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if cfg.n_params() > 5e10 else "float32")
+        opt_spec = jax.eval_shape(lambda: adamw_init(params_spec, opt_cfg))
+        opt_sh = {"m": params_sh, "v": params_sh,
+                  "step": _replicated(mesh)}
+        fn = make_train_step(cfg, opt_cfg)
+        metrics_sh = {"loss": _replicated(mesh),
+                      "grad_norm": _replicated(mesh),
+                      "lr": _replicated(mesh)}
+        return (fn, (params_spec, opt_spec, specs),
+                (params_sh, opt_sh, batch_sh),
+                (params_sh, opt_sh, metrics_sh), (0, 1))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, max_len=shape.seq_len)
+        cache_spec = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_sh = cache_shardings(cache_spec, cfg, mesh, rules,
+                                   shape.global_batch)
+        logits_sh = dist.batch_shardings(
+            jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.vocab),
+                                 jnp.float32), mesh, rules)
+        return (fn, (params_spec, specs), (params_sh, batch_sh),
+                (logits_sh, cache_sh), ())
+    # decode
+    fn = make_serve_step(cfg)
+    cache_spec = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_sh = cache_shardings(cache_spec, cfg, mesh, rules,
+                               shape.global_batch)
+    logits_sh = dist.batch_shardings(
+        jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.vocab),
+                             jnp.float32), mesh, rules)
+    return (fn, (params_spec, cache_spec, specs),
+            (params_sh, cache_sh, batch_sh),
+            (logits_sh, cache_sh), (1,))
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def optimize_cfg(cfg: ModelConfig, shape: Shape) -> ModelConfig:
+    """The beyond-paper perf levers (EXPERIMENTS.md §Perf), applied for
+    --opt runs.  Each is individually validated for semantics in
+    tests/test_perf_levers.py; the baseline run keeps defaults."""
+    import dataclasses
+    kw: dict = {}
+    if shape.kind in ("train", "prefill"):
+        kw["score_dtype"] = "bfloat16"         # it-A1: halve score traffic
+        # it-A3: wide kv blocks -> the online-softmax accumulator (fp32, in
+        # the scan carry) is updated once per q block instead of S/kvb times
+        kw["kv_block"] = min(4096, shape.seq_len)
+    if shape.kind == "train" and cfg.vocab >= 100_000:
+        kw["loss_chunk"] = 8                   # it-A2: chunked CE
+    if cfg.is_moe and shape.kind == "train":
+        kw["moe_groups"] = 32                  # it-B1/B3: group-local dispatch
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hw=TPU_V5E, opt: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if opt:
+        cfg = optimize_cfg(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "opt": opt,
+                 "mesh": "multi" if multi_pod else "single"}
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dist.make_rules(cfg, mesh)
+    n_dev = mesh.devices.size
+    try:
+        fn, arg_specs, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+        with dist.axis_rules(mesh, rules):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*arg_specs)
+            compiled = lowered.compile()
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    cost = analyze_hlo(hlo_text)
+    del hlo_text
+
+    mf = model_flops(cfg, shape)          # whole-step useful FLOPs (global)
+    rl = roofline_terms(cost, hw, model_flops_per_device=mf / n_dev)
+
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    resident = arg_b + out_b - alias_b + tmp_b
+    rec.update(
+        status="ok",
+        mesh_desc=describe(mesh),
+        devices=n_dev,
+        compile_s=round(t_compile, 1),
+        # memory_analysis (per device)
+        bytes_per_device=dict(arguments=arg_b, outputs=out_b, aliased=alias_b,
+                              temps=tmp_b, resident=resident,
+                              hbm_budget=HBM_PER_CHIP,
+                              fits=bool(resident <= HBM_PER_CHIP)),
+        # XLA's own cost_analysis (loop bodies counted ONCE — see analysis/hlo)
+        xla_cost=dict(flops=ca.get("flops", 0.0),
+                      bytes_accessed=ca.get("bytes accessed", 0.0)),
+        # trip-corrected per-device costs
+        hlo_flops_dev=cost.flops,
+        hlo_bytes_dev=cost.bytes_hbm,
+        coll_bytes_dev=cost.coll_bytes,
+        coll_by_kind={k: round(v) for k, v in cost.coll_by_kind.items()},
+        coll_ops=cost.coll_ops,
+        unknown_trip_whiles=cost.unknown_trip_whiles,
+        model_flops_global=mf,
+        roofline={k: v for k, v in rl.items() if k != "coll_by_kind"},
+    )
+    del compiled, lowered
+    gc.collect()
+    return rec
+
+
+def iter_cells(archs, shapes, mesh_mode):
+    for arch in archs:
+        for shape_name in shapes:
+            if mesh_mode in ("single", "both"):
+                yield arch, shape_name, False
+            if mesh_mode in ("multi", "both"):
+                yield arch, shape_name, True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf optimization levers")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in --out")
+    args = ap.parse_args()
+
+    archs = [args.arch.replace("-", "_")] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    done: dict[tuple, dict] = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for rec in json.load(f):
+                done[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+
+    records = list(done.values())
+    n_ok = n_err = n_skip = 0
+    for arch, shape_name, multi in iter_cells(archs, shapes, args.mesh):
+        key = (arch, shape_name, "multi" if multi else "single")
+        if key in done and done[key].get("status") != "error":
+            continue
+        print(f"[dryrun] {arch} x {shape_name} x {key[2]}"
+              f"{' [opt]' if args.opt else ''} ...", flush=True)
+        rec = run_cell(arch, shape_name, multi, opt=args.opt)
+        records = [r for r in records
+                   if (r["arch"], r["shape"], r["mesh"]) != key]
+        records.append(rec)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_err += st == "error"
+        n_skip += st == "skipped"
+        if st == "ok":
+            rl = rec["roofline"]
+            print(f"  ok in {rec['compile_s']}s  "
+                  f"compute={rl['compute_s']:.3e}s "
+                  f"memory={rl['memory_s']:.3e}s "
+                  f"coll={rl['collective_s']:.3e}s "
+                  f"-> {rl['bottleneck']}  "
+                  f"resident={rec['bytes_per_device']['resident']/2**30:.2f}GiB",
+                  flush=True)
+            print("  memory_analysis:", rec["bytes_per_device"], flush=True)
+            print("  cost_analysis(xla):", rec["xla_cost"], flush=True)
+        elif st == "error":
+            print(f"  ERROR: {rec['error']}", flush=True)
+        else:
+            print(f"  skipped: {rec['reason']}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"[dryrun] done: {n_ok} ok, {n_err} errors, {n_skip} skipped "
+          f"(+{len(done)} cached) -> {args.out}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Input specifications per (architecture × shape).
+
+`input_specs()` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — used by the dry-run;
+`materialize()` turns the same specs into concrete random arrays for smoke
+tests and examples.  Modality frontends are stubs per the assignment: hubert
+receives precomputed frame embeddings, qwen2-vl precomputed patch embeddings
+and M-RoPE positions."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import Shape
+from repro.models.common import ModelConfig
+from repro.models.transformer import init_cache
+
+N_VISION_STUB = 64   # patch-embedding stub length for qwen2-vl
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStructs for the batch dict consumed by the step function."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                 "pos": jax.ShapeDtypeStruct((B,), i32)}
+        return specs
+    if cfg.input_mode == "features":
+        specs = {"features": jax.ShapeDtypeStruct((B, S, cfg.feature_dim), bf16),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, min(N_VISION_STUB, S), cfg.d_model), bf16)
+        specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStructs for the KV/state cache at this shape's length."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def materialize(specs, seed: int = 0, vocab: int = 256):
+    """Concrete random arrays matching the specs (for smoke tests)."""
+    rng = np.random.default_rng(seed)
+
+    def mk(path, s):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if s.dtype == jnp.int32:
+            if name.endswith("pos"):
+                return jnp.asarray(rng.integers(1, 64, s.shape), jnp.int32)
+            if name.endswith("positions"):
+                base = np.broadcast_to(
+                    np.arange(s.shape[1])[None, :, None], s.shape)
+                return jnp.asarray(base, jnp.int32)
+            return jnp.asarray(rng.integers(0, vocab, s.shape), jnp.int32)
+        return jnp.asarray(rng.standard_normal(s.shape) * 0.1, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(mk, specs)

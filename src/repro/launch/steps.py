@@ -1,0 +1,69 @@
+"""Step functions: train / prefill / serve(decode), shared by the real
+launcher, the smoke tests and the multi-pod dry-run."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.models.common import ModelConfig
+from repro.models.transformer import forward, init_params, lm_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_grads, decompress_grads
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_compression: str = "none"):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch))(params)
+        if grad_compression != "none":
+            # compress -> (implicit DP all-reduce at use) -> decompress.
+            grads, _, meta = compress_grads(grads, None, grad_compression)
+            grads = decompress_grads(grads, meta)
+        new_params, new_opt, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int = 0):
+    """(params, batch) -> (last-token logits, cache).
+
+    `max_len` sizes the KV cache beyond the prompt so decode can append;
+    forward() already slices to the last position before the head projection
+    so the full [b, t, vocab] logits never materialize."""
+
+    def prefill_step(params, batch):
+        logits, cache, _ = forward(params, cfg, batch, mode="prefill",
+                                   max_len=max_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, batch{tokens[b,1], pos[b]}) -> (logits, new_cache).
+
+    One new token per sequence against a seq_len KV/state cache."""
+
+    def serve_step(params, cache, batch):
+        logits, new_cache, _ = forward(params, cfg, batch, mode="decode",
+                                       cache=cache)
+        return logits, new_cache
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, seed: int = 0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params, opt_cfg)
+    return params, opt_state

@@ -1,0 +1,141 @@
+"""End-to-end trainer: config -> mesh -> sharded train loop with
+checkpoint/restart, preemption safety, straggler watchdog and the versioned
+in-memory snapshot store (the big-atomics multiversioning application).
+
+Runs anywhere: `--arch deepseek-7b --reduced` trains the smoke config on CPU;
+the same file drives the production mesh on a real pod (the only difference
+is the mesh factory).  See examples/train_lm.py for the packaged demo.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt --ckpt-every 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import dist
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, Shape, reduced_shape
+from repro.core import multiversion as mv
+from repro.data import DataPipeline
+from repro.launch.mesh import describe, make_host_mesh
+from repro.launch.steps import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.runtime import PreemptionGuard, StragglerWatchdog
+
+
+def train(cfg, shape: Shape, *, steps: int, ckpt_dir: str | None = None,
+          ckpt_every: int = 50, seed: int = 0, lr: float = 3e-4,
+          grad_compression: str = "none", mesh=None, snapshot_slots: int = 2,
+          log_every: int = 10, guard: PreemptionGuard | None = None,
+          opt_cfg: AdamWConfig | None = None):
+    """Returns (params, opt_state, history dict)."""
+    mesh = mesh or make_host_mesh()
+    rules = dist.make_rules(cfg, mesh)
+    opt_cfg = opt_cfg or AdamWConfig(lr=lr, warmup=max(steps // 20, 1),
+                                     total_steps=steps)
+    pipe = DataPipeline(cfg, shape, seed=seed)
+
+    params, opt_state = init_train_state(cfg, opt_cfg, seed)
+    start = 0
+    if ckpt_dir:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state), meta = restore_checkpoint(
+                ckpt_dir, last, (params, opt_state))
+            start = int(meta.get("next_step", last))
+            print(f"[train] resumed from step_{last:08d} -> step {start}")
+
+    p_sh = dist.param_shardings(params, cfg, mesh, rules)
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(
+        opt_state, {"m": p_sh, "v": p_sh,
+                    "step": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec())})
+
+    with dist.axis_rules(mesh, rules):
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, grad_compression),
+                          donate_argnums=(0, 1))
+
+        store = mv.init_store((params, opt_state), n_slots=snapshot_slots)
+        watchdog = StragglerWatchdog(n_hosts=1)
+        history = {"loss": [], "step_time": []}
+        own_guard = guard is None
+        guard = guard or PreemptionGuard()
+        ctx = guard if own_guard else _nullcontext()
+        with ctx:
+            for step in range(start, steps):
+                t0 = time.time()
+                raw = pipe.batch(step)
+                batch = jax.device_put(
+                    raw, dist.batch_shardings(raw, mesh, rules))
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                history["loss"].append(loss)
+                history["step_time"].append(dt)
+                watchdog.observe([dt])
+                # publish into the versioned store (async readers snapshot it)
+                store = mv.publish(store, (params, opt_state), step + 1)
+                if log_every and step % log_every == 0:
+                    print(f"[train] step {step} loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)", flush=True)
+                stopping = guard.should_stop
+                if ckpt_dir and (stopping or (step + 1) % ckpt_every == 0
+                                 or step + 1 == steps):
+                    snap = mv.snapshot_with_validation(store)
+                    save_checkpoint(ckpt_dir, step + 1, snap.state,
+                                    meta={"next_step": step + 1,
+                                          "arch": cfg.name})
+                if stopping:
+                    print(f"[train] preempted at step {step + 1}; "
+                          "checkpoint written, exiting cleanly")
+                    break
+    return params, opt_state, history
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        shape = reduced_shape(shape)
+    print(f"[train] {cfg.name}  shape={shape}  mesh="
+          f"{describe(make_host_mesh())}")
+    _, _, hist = train(cfg, shape, steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, seed=args.seed,
+                       lr=args.lr, grad_compression=args.grad_compression)
+    print(f"[train] done: loss {hist['loss'][0]:.4f} -> "
+          f"{hist['loss'][-1]:.4f} over {len(hist['loss'])} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.common import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    forward, init_params, init_cache, lm_loss,
+)

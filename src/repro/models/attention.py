@@ -1,0 +1,206 @@
+"""GQA attention with pair-list flash (online-softmax) for train/prefill and
+dense cache attention for decode.
+
+Pair-list flash: instead of a nested (q-block × kv-block) loop that wastes
+half its FLOPs on masked-out causal blocks, we *statically enumerate* the
+(q_block, kv_block) pairs that can contain unmasked entries — lower-triangular
+pairs for causal, a diagonal band for sliding-window, all pairs for
+bidirectional — and `lax.scan` over that list, accumulating online-softmax
+state per q block.  The compiled HLO then contains exactly the useful
+attention FLOPs (the causal 2x waste of naive block iteration never appears),
+and activation memory stays O(T · d) regardless of sequence length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import ModelConfig, apply_rope
+
+NEG_INF = -1e30
+
+
+def _block_pairs(nq: int, nkv: int, q_block: int, kv_block: int,
+                 causal: bool, window: int, q_offset: int = 0):
+    """Static list of (qi, kj) block pairs that contain unmasked entries."""
+    pairs = []
+    for qi in range(nq):
+        q_lo = q_offset + qi * q_block
+        q_hi = q_lo + q_block - 1
+        for kj in range(nkv):
+            k_lo = kj * kv_block
+            k_hi = k_lo + kv_block - 1
+            if causal and k_lo > q_hi:
+                continue                       # entirely in the future
+            if window > 0 and k_hi < q_lo - window + 1:
+                continue                       # entirely outside the window
+            pairs.append((qi, kj))
+    return pairs
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512,
+                    q_offset: int = 0, softcap: float = 0.0,
+                    score_dtype=jnp.float32):
+    """q: [b, tq, h, hd]; k, v: [b, tkv, kvh, hd] (GQA: h % kvh == 0).
+
+    Returns [b, tq, h, hd].  q_offset shifts query positions (prefill of a
+    suffix against a longer cache).  score_dtype=bf16 halves the HBM traffic
+    of the materialized score / probability blocks (the dominant roofline
+    term at long S); softmax max/sum statistics stay in f32 for stability.
+    """
+    b, tq, h, hd = q.shape
+    _, tkv, kvh, _ = k.shape
+    assert h % kvh == 0
+    group = h // kvh
+    q_block = min(q_block, tq)
+    kv_block = min(kv_block, tkv)
+    # Pad ragged tails up to block multiples; padded keys are masked out and
+    # padded query rows are sliced off the result.
+    tq_orig, tkv_orig = tq, tkv
+    q_pad = (-tq) % q_block
+    kv_pad = (-tkv) % kv_block
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        tq += q_pad
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        tkv += kv_pad
+    nq, nkv = tq // q_block, tkv // kv_block
+    scale = 1.0 / np.sqrt(hd)
+
+    pairs = _block_pairs(nq, nkv, q_block, kv_block, causal, window, q_offset)
+    qi_list = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    kj_list = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    qb = q.reshape(b, nq, q_block, h, hd)
+    kb = k.reshape(b, nkv, kv_block, kvh, hd)
+    vb = v.reshape(b, nkv, kv_block, kvh, hd)
+
+    # online-softmax state per q block
+    acc = jnp.zeros((b, nq, q_block, h, hd), jnp.float32)
+    m = jnp.full((b, nq, q_block, h), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, nq, q_block, h), jnp.float32)
+
+    q_pos_in_block = jnp.arange(q_block, dtype=jnp.int32)
+    k_pos_in_block = jnp.arange(kv_block, dtype=jnp.int32)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, kj = pair
+        qblk = lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+        kblk = lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+        vblk = lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+        # GQA: fold the group into the head axis of q
+        qg = qblk.reshape(b, q_block, kvh, group, hd)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(score_dtype),
+                       kblk.astype(score_dtype),
+                       preferred_element_type=score_dtype) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_offset + qi * q_block + q_pos_in_block    # [qb]
+        kpos = kj * kv_block + k_pos_in_block              # [kvb]
+        mask = jnp.broadcast_to(kpos[None, :] < tkv_orig,
+                                (q_block, kv_block))     # drop kv padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+
+        s = s.reshape(b, q_block, kvh * group, kv_block)   # [b,qb,h,kvb]
+        m_blk = jnp.max(s.astype(jnp.float32), axis=-1)    # [b,qb,h] f32
+        m_cur = lax.dynamic_index_in_dim(m, qi, 1, keepdims=False)
+        l_cur = lax.dynamic_index_in_dim(l, qi, 1, keepdims=False)
+        a_cur = lax.dynamic_index_in_dim(acc, qi, 1, keepdims=False)
+        m_new = jnp.maximum(m_cur, m_blk)
+        corr = jnp.exp(m_cur - m_new)
+        p = jnp.exp(s.astype(jnp.float32)
+                    - m_new[..., None]).astype(score_dtype)  # [b,qb,h,kvb]
+        pg = p.reshape(b, q_block, kvh, group, kv_block)
+        pv = jnp.einsum("bqkgs,bskd->bqkgd", pg, vblk.astype(score_dtype),
+                        preferred_element_type=jnp.float32)
+        pv = pv.reshape(b, q_block, kvh * group, hd)
+        a_new = a_cur * corr[..., None] + pv
+        l_new = l_cur * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+        acc = lax.dynamic_update_index_in_dim(acc, a_new, qi, 1)
+        m = lax.dynamic_update_index_in_dim(m, m_new, qi, 1)
+        l = lax.dynamic_update_index_in_dim(l, l_new, qi, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = lax.scan(step, (acc, m, l), (qi_list, kj_list))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, tq, h, hd)
+    if q_pad:
+        out = out[:, :tq_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     softcap: float = 0.0):
+    """Single-position decode.  q: [b, 1, h, hd]; caches: [b, S, kvh, hd];
+    pos: int32[b] — index of the token being produced (attends to <= pos)."""
+    b, _, h, hd = q.shape
+    _, S, kvh, _ = k_cache.shape
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, kvh, group, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale    # [b,kvh,g,S]
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask = kpos[None, :] <= pos[:, None]                   # [b,S]
+    if window > 0:
+        mask &= kpos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def ring_decode_attention(q, k_cache, v_cache, pos, kpos, window: int,
+                          softcap: float = 0.0):
+    """Decode against a *ring* (windowed) cache.  q: [b,1,h,hd];
+    caches: [b, W, kvh, hd]; pos: int32[b]; kpos: int32[b, W] — the absolute
+    position stored in each ring slot (negative = unwritten)."""
+    b, _, h, hd = q.shape
+    _, W, kvh, _ = k_cache.shape
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, kvh, group, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (kpos >= 0) & (kpos <= pos[:, None]) & \
+        (kpos > pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + residual wiring lives in transformer)
+# ---------------------------------------------------------------------------
+
+def attn_qkv(x, wq, wk, wv, positions, cfg: ModelConfig):
+    """Project + rope.  x: [b, t, d] -> q[b,t,h,hd], k/v[b,t,kvh,hd]."""
+    q = jnp.einsum("btd,dhk->bthk", x, wq.astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, wk.astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, wv.astype(x.dtype))
+    if cfg.family != "ssm":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def attn_out(o, wo, x_dtype):
+    return jnp.einsum("bthk,hkd->btd", o, wo.astype(o.dtype)).astype(x_dtype)

@@ -1,0 +1,188 @@
+"""Shared model components: config, norms, embeddings, RoPE (incl. M-RoPE)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config object drives all ten architectures (see repro/configs)."""
+
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encoder | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    mlp: str = "swiglu"            # swiglu | sqrelu | gelu
+    norm: str = "rms"              # rms | ln
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dropless: bool = False     # dropless dispatch (decode is always dropless)
+    # attention
+    causal: bool = True
+    window: int = 0                # sliding-window size (0 = full attention)
+    rope_theta: float = 1e6
+    mrope_sections: tuple[int, ...] = ()   # qwen2-vl M-RoPE half-dim split
+    logit_softcap: float = 0.0
+    # ssm (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    # hybrid (recurrentgemma): per-layer block kinds, cycled over layers
+    block_pattern: tuple[str, ...] = ("attn",)    # attn | ssm | rglru
+    rglru_width: int = 0           # 0 -> d_model
+    # encoder/frontend
+    input_mode: str = "tokens"     # tokens | features (stub frontend)
+    feature_dim: int = 0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # dtypes / training
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # perf levers (EXPERIMENTS.md §Perf; defaults = paper-faithful baseline)
+    score_dtype: str = "float32"   # bfloat16 halves attention score traffic
+    loss_chunk: int = 0            # chunk CE over seq (0 = monolithic logits)
+    moe_groups: int = 0            # >1: group-local MoE dispatch (no global
+    #                                replicated buffer; groups shard w/ batch)
+    # attention blocking (flash-style pair-list attention)
+    q_block: int = 512
+    kv_block: int = 512
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attn_free(self) -> bool:
+        return "attn" not in self.block_pattern
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context?  (SSM/hybrid/windowed.)"""
+        return self.attn_free or self.window > 0 or all(
+            k != "attn" or self.window > 0 for k in self.block_pattern)
+
+    @property
+    def layer_kinds(self) -> tuple[str, ...]:
+        """Block kind of every layer (pattern cycled)."""
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def n_params(self) -> int:
+        """Total parameter count (analytic, matches init shapes)."""
+        return sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: _import_init()(self, jax.random.PRNGKey(0)))))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed top_k of n_experts)."""
+        total = self.n_params()
+        if not self.is_moe:
+            return total
+        expert_p = 3 * self.d_model * self.d_ff  # swiglu expert
+        moe_total = self.n_layers * self.n_experts * expert_p
+        moe_active = self.n_layers * self.top_k * expert_p
+        return total - moe_total + moe_active
+
+
+def _import_init():
+    from repro.models.transformer import init_params
+    return init_params
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layer_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (((x - mu) * jax.lax.rsqrt(var + eps))
+            * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm(x, scale, cfg: ModelConfig):
+    return rms_norm(x, scale, cfg.norm_eps) if cfg.norm == "rms" \
+        else layer_norm(x, scale, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float, sections: tuple[int, ...] = ()):
+    """x: [..., t, h, hd]; positions: [..., t] or [..., t, 3] (M-RoPE).
+
+    M-RoPE (Qwen2-VL): the half-dim axis is split into `sections` (t/h/w),
+    each rotated by its own position coordinate.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    if sections:
+        assert sum(sections) == hd // 2, (sections, hd)
+        # positions [..., t, 3] -> per-frequency position selection
+        sec_id = np.repeat(np.arange(len(sections)), sections)  # [hd/2]
+        pos = positions[..., sec_id]                   # [..., t, hd/2]
+        ang = pos.astype(jnp.float32) * freqs          # [..., t, hd/2]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [..., t, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., t, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_mrope_positions(batch: int, seq: int) -> jax.Array:
+    """Stub M-RoPE positions for text-only input: t == h == w == arange."""
+    p = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, :, None],
+                         (batch, seq, 3))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * s
+            ).astype(dtype)

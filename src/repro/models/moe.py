@@ -1,0 +1,196 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Sort-based routing (MegaBlocks-style, but with fixed expert capacity so all
+shapes are static): tokens pick top-k experts; within each expert, tokens are
+ranked by a stable sort and those beyond capacity C = ceil(T/E * cf) are
+dropped (standard for large-scale MoE).  Dispatch/combine are scatter/gathers;
+the expert computation is a single [E, C, d] x [E, d, f] einsum whose E axis
+shards over the 'model' mesh axis (expert parallelism) — XLA inserts the
+all-to-alls at the sharding boundary.
+
+llama4-maverick: 128 experts, top-1.  mixtral-8x7b: 8 experts, top-2 (E < TP
+width, so experts shard over d_ff instead; see configs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import ModelConfig
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, cfg: ModelConfig,
+            capacity: int | None = None, dropless: bool = False):
+    """x: [b, s, d].  router_w: [d, E].  experts: [E, d, f] / [E, f, d].
+
+    `dropless=True` sizes capacity at the worst case (C = T) so no token is
+    ever dropped — used for decode (serving must be exact) and for
+    correctness tests.  Training uses capacity-factor dispatch.
+
+    cfg.moe_groups > 1 splits the token axis into G independent dispatch
+    groups (vmap), each with its own capacity C/G.  Groups shard with the
+    batch over the mesh's data axes, so routing sort / rank / scatter stay
+    DEVICE-LOCAL and the dispatch buffer is batch-sharded instead of
+    replicated — this removed a per-layer all-reduce of the full [E*C, d]
+    buffer (EXPERIMENTS.md §Perf it-B1).  The paper-faithful baseline is
+    G = 1 (one global group).
+
+    Returns ([b, s, d], aux_loss scalar)."""
+    from repro import dist
+
+    b, s, d = x.shape
+    E, topk = cfg.n_experts, cfg.top_k
+    T = b * s
+    G = cfg.moe_groups if (cfg.moe_groups > 1 and not dropless
+                           and T % cfg.moe_groups == 0) else 1
+    Tg = T // G
+    if dropless:
+        C = Tg
+    else:
+        C = capacity or int(np.ceil(Tg / E * cfg.capacity_factor
+                                    * max(topk, 1)))
+    C = max(C, 1)
+
+    if G > 1:
+        # it-B1/B3: explicit group axis with output-side sharding
+        # constraints.  Routing (sort/rank) is vmapped per group; dispatch,
+        # expert einsums and combine carry the G axis natively so every
+        # intermediate can be pinned group-sharded over the data axes —
+        # constraining WEIGHT shardings instead (it-B2) made SPMD replicate
+        # the dispatch and was refuted at 4.6x the collective bytes.
+        xg = dist.shard(x.reshape(G, Tg, d), "batch", None, None)
+        dest, keep, gate_vals, aux = jax.vmap(
+            lambda xi: _route(xi, router_w, cfg, C))(xg)
+        g_idx = jnp.arange(G, dtype=jnp.int32)[:, None]
+        buf = jnp.zeros((G, E * C, d), x.dtype)
+        for j in range(topk):
+            buf = buf.at[g_idx, dest[:, :, j]].set(xg, mode="drop")
+        buf = dist.shard(buf.reshape(G, E, C, d), "batch", None, None, None)
+        if cfg.mlp == "swiglu":
+            gg = jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(x.dtype))
+            u = jnp.einsum("gecd,edf->gecf", buf, w_up.astype(x.dtype))
+            h = jax.nn.silu(gg.astype(jnp.float32)).astype(x.dtype) * u
+        else:
+            u = jnp.einsum("gecd,edf->gecf", buf, w_up.astype(x.dtype))
+            h = jnp.square(jax.nn.relu(u.astype(jnp.float32))).astype(x.dtype)
+        h = dist.shard(h, "batch", "experts", None, "expert_mlp")
+        out_e = jnp.einsum("gecf,efd->gecd", h, w_down.astype(x.dtype))
+        out_e = dist.shard(out_e, "batch", None, None, None)
+        out_e = out_e.reshape(G, E * C, d)
+        yg = jnp.zeros((G, Tg, d), jnp.float32)
+        for j in range(topk):
+            contrib = out_e[g_idx, jnp.minimum(dest[:, :, j], E * C - 1)
+                            ].astype(jnp.float32)
+            contrib = jnp.where(keep[:, :, j, None], contrib, 0.0)
+            yg = yg + contrib * gate_vals[:, :, j, None]
+        yg = dist.shard(yg.astype(x.dtype), "batch", None, None)
+        return yg.reshape(b, s, d), jnp.mean(aux)
+
+    y, aux = _moe_tokens(x.reshape(T, d), router_w, w_gate, w_up, w_down,
+                         cfg, C)
+    return y.reshape(b, s, d), aux
+
+
+def _route(xt, router_w, cfg: ModelConfig, C: int):
+    """Routing only: (dest[T,topk], keep[T,topk], gates[T,topk], aux)."""
+    T, d = xt.shape
+    E, topk = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, topk)
+    if topk > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)
+    aux = E * jnp.sum(me * ce)
+    rank = _expert_rank(expert_idx, T, topk)
+    keep = rank < C
+    dest = jnp.where(keep, expert_idx * C + rank, E * C)
+    return dest, keep, gate_vals, aux
+
+
+def _expert_rank(expert_idx, T, topk):
+    flat_expert = expert_idx.reshape(-1)
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[sort_idx]
+    arange = jnp.arange(T * topk, dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool),
+                                 sorted_expert[1:] != sorted_expert[:-1]])
+
+    def combine(a, b2):
+        af, av = a
+        bf, bv = b2
+        return (af | bf, jnp.where(bf, bv, jnp.maximum(av, bv)))
+
+    _, start_pos = lax.associative_scan(
+        combine, (seg_start, jnp.where(seg_start, arange, -1)))
+    rank_sorted = arange - start_pos
+    rank = jnp.zeros_like(rank_sorted).at[sort_idx].set(rank_sorted)
+    return rank.reshape(T, topk)
+
+
+def _moe_tokens(xt, router_w, w_gate, w_up, w_down, cfg: ModelConfig,
+                C: int):
+    """Capacity dispatch over a flat token axis.  xt: [T, d] -> ([T, d], aux)."""
+    T, d = xt.shape
+    E, topk = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, topk)        # [T, topk]
+    if topk > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                           # [E]
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # rank of each (token, choice) within its expert, via stable sort
+    flat_expert = expert_idx.reshape(-1)                   # [T*topk]
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[sort_idx]
+    arange = jnp.arange(T * topk, dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool),
+                                 sorted_expert[1:] != sorted_expert[:-1]])
+    # index of segment start for every element (inclusive max-scan)
+    def combine(a, b2):
+        af, av = a
+        bf, bv = b2
+        return (af | bf, jnp.where(bf, bv, jnp.maximum(av, bv)))
+    _, start_pos = lax.associative_scan(
+        combine, (seg_start, jnp.where(seg_start, arange, -1)))
+    rank_sorted = arange - start_pos
+    rank = jnp.zeros_like(rank_sorted).at[sort_idx].set(rank_sorted)
+    rank = rank.reshape(T, topk)
+
+    keep = rank < C                                        # capacity mask
+    dest = jnp.where(keep, expert_idx * C + rank, E * C)   # drop -> OOB
+
+    # dispatch: [E*C, d]
+    buf = jnp.zeros((E * C, d), xt.dtype)
+    for j in range(topk):
+        buf = buf.at[dest[:, j]].set(xt, mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    # expert computation (E shards over 'model' => expert parallelism)
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(xt.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(xt.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype) * u
+    else:
+        u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(xt.dtype))
+        h = jnp.square(jax.nn.relu(u.astype(jnp.float32))).astype(xt.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xt.dtype))
+    out_e = out_e.reshape(E * C, d)
+
+    # combine: gather back + weight
+    yt = jnp.zeros((T, d), jnp.float32)
+    for j in range(topk):
+        contrib = out_e[jnp.minimum(dest[:, j], E * C - 1)].astype(jnp.float32)
+        contrib = jnp.where(keep[:, j, None], contrib, 0.0)
+        yt = yt + contrib * gate_vals[:, j, None]
+    return yt.astype(xt.dtype), aux

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence:  a_t = exp(-c * softplus(Lambda) * r_t),   r_t = sigmoid(W_a x_t)
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+             i_t = sigmoid(W_x x_t)
+computed with an associative scan over time (linear recurrence), O(1) decode.
+The block wraps the RG-LRU in the Griffin recurrent block: two branches
+(conv+RG-LRU, GeLU), multiplied, projected out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import ModelConfig
+from repro.models.ssm import causal_conv
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def rglru_scan(x, r, i, lam):
+    """x, r, i: [b, t, w]; lam: [w].  Returns (y [b,t,w], h_last [b,w])."""
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(r.astype(jnp.float32))                  # [b,t,w] (<=0)
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+    b_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return (al * ar, br + bl * ar)
+
+    _, h = lax.associative_scan(combine, (a, b_in), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(x, r, i, lam, h_prev):
+    """One-token recurrence.  x,r,i: [b,1,w]; h_prev: [b,w]."""
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(r.astype(jnp.float32)[:, 0])
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)[:, 0]) * \
+        x.astype(jnp.float32)[:, 0]
+    b_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    h = a * h_prev + b_in
+    return h[:, None], h
+
+
+def rglru_block(x, params, cfg: ModelConfig, *, cache=None):
+    """Griffin recurrent block.  x: [b, t, d].
+    cache (decode): dict(conv [b,k-1,w], h [b,w])."""
+    w = cfg.rglru_width or cfg.d_model
+    xr = jnp.einsum("btd,dw->btw", x, params["w_rec"].astype(x.dtype))
+    xg = jnp.einsum("btd,dw->btw", x, params["w_gelu"].astype(x.dtype))
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv(xr, params["conv_w"], conv_state)
+    r = jnp.einsum("btw,wv->btv", xc, params["w_a"].astype(x.dtype))
+    i = jnp.einsum("btw,wv->btv", xc, params["w_x"].astype(x.dtype))
+    if cache is None:
+        h, h_last = rglru_scan(xc, r, i, params["lam"])
+    else:
+        h, h_last = rglru_step(xc, r, i, params["lam"], cache["h"])
+    h = h.astype(x.dtype) * jax.nn.gelu(xg.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("btw,wd->btd", h, params["w_out"].astype(x.dtype))
+    return out, {"conv": new_conv, "h": h_last}
+
+
+def init_rglru_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 5)
+    def lin(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / np.sqrt(shape[0])).astype(dtype)
+    return {
+        "w_rec": lin(ks[0], (d, w)),
+        "w_gelu": lin(ks[1], (d, w)),
+        "conv_w": (jax.random.normal(ks[2], (4, w), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "w_a": lin(ks[3], (w, w)),
+        "w_x": lin(ks[4], (w, w)),
+        "lam": jnp.linspace(0.0, 3.0, w).astype(jnp.float32),
+        "w_out": lin(jax.random.fold_in(key, 9), (w, d)),
+    }
+
+
+def init_rglru_cache(batch: int, cfg: ModelConfig, dtype):
+    w = cfg.rglru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, 3, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}

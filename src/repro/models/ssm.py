@@ -1,0 +1,196 @@
+"""Mamba-2 SSD (state-space duality) block, chunked for TPU.
+
+The SSD recurrence  h_t = exp(a_t) h_{t-1} + B_t x_t^T ,  y_t = C_t h_t + D x_t
+is computed chunkwise (arXiv:2405.21060 §6): within a chunk of length Q the
+quadratic dual form runs on the MXU; across chunks a cheap associative scan
+carries the [nh, hd, state] states.  Decode is the O(1) recurrence step.
+
+TPU adaptation: the reference implementation fuses z/x/B/C/dt into one
+in_proj; we keep them as separate matrices (mathematically identical — the
+depthwise conv is per-channel, so splitting is exact) so that the d_inner
+axis can shard over the 'model' mesh axis (tensor parallelism) without GSPMD
+having to split a mixed-sharding concatenation.
+
+Shapes follow the paper: d_inner = expand * d_model, nh = d_inner / headdim,
+single B/C group (G=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import ModelConfig
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int = 256):
+    """x: [b, t, nh, hd]; dt: [b, t, nh]; A_log: [nh];
+    B, C: [b, t, state]  (single group, broadcast over heads);
+    D: [nh].  Returns (y: [b, t, nh, hd], final_state [b, nh, hd, state])."""
+    b, t, nh, hd = x.shape
+    state = B.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+
+    a = -jnp.exp(A_log.astype(jnp.float32))                 # [nh] (negative)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))             # [b, t, nh]
+    dA = dt * a                                               # [b, t, nh] (<=0)
+    xdt = x.astype(jnp.float32) * dt[..., None]               # dt-scaled input
+
+    xc = xdt.reshape(b, nc, chunk, nh, hd)
+    dAc = dA.reshape(b, nc, chunk, nh)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, state)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, state)
+
+    # cumulative decay within each chunk
+    seg = jnp.cumsum(dAc, axis=2)                             # [b,nc,Q,nh]
+    total = seg[:, :, -1:, :]                                 # [b,nc,1,nh]
+
+    # ---- intra-chunk (quadratic dual form) --------------------------------
+    li = seg[:, :, :, None, :]                                # i axis
+    lj = seg[:, :, None, :, :]                                # j axis
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))            # [b,nc,Q,Q,nh]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)                # [b,nc,Q,Q]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd",
+                         cb, decay, xc)                       # [b,nc,Q,nh,hd]
+
+    # ---- chunk states + inter-chunk scan ----------------------------------
+    w = jnp.exp(jnp.clip(total - seg, -60.0, 0.0))            # [b,nc,Q,nh]
+    states = jnp.einsum("bcjs,bcjh,bcjhd->bchds",
+                        Bc, w, xc)                            # [b,nc,nh,hd,state]
+    chunk_decay = jnp.exp(jnp.clip(total[:, :, 0, :], -60.0, 0.0))  # [b,nc,nh]
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return (dl * dr, sr + sl * dr[..., None, None])
+
+    dec_scan, st_scan = lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    init_states = jnp.concatenate(
+        [jnp.zeros_like(st_scan[:, :1]), st_scan[:, :-1]], axis=1)
+
+    # ---- inter-chunk output ------------------------------------------------
+    out_decay = jnp.exp(jnp.clip(seg, -60.0, 0.0))            # [b,nc,Q,nh]
+    y_inter = jnp.einsum("bcis,bcih,bchds->bcihd",
+                         Cc, out_decay, init_states)
+
+    y = (y_intra + y_inter).reshape(b, t, nh, hd)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    final_state = st_scan[:, -1]                              # [b,nh,hd,state]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, dt, A_log, B, C, D, h_prev):
+    """One-token recurrence.  x: [b,1,nh,hd]; B,C: [b,1,state];
+    h_prev: [b,nh,hd,state].  Returns (y [b,1,nh,hd], h_new)."""
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32))[:, 0]        # [b,nh]
+    dA = jnp.exp(jnp.clip(dt * a, -60.0, 0.0))                # [b,nh]
+    xdt = x.astype(jnp.float32)[:, 0] * dt[..., None]         # [b,nh,hd]
+    Bt = B.astype(jnp.float32)[:, 0]                          # [b,state]
+    Ct = C.astype(jnp.float32)[:, 0]
+    h_new = (h_prev * dA[..., None, None]
+             + jnp.einsum("bhd,bs->bhds", xdt, Bt))
+    y = jnp.einsum("bhds,bs->bhd", h_new, Ct)
+    y = y + x.astype(jnp.float32)[:, 0] * D.astype(jnp.float32)[None, :, None]
+    return y[:, None].astype(x.dtype), h_new
+
+
+def causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv + SiLU.  x: [b, t, c]; w: [k, c].
+    If conv_state [b, k-1, c] is given (decode), returns (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is not None:
+        xin = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = xin[:, -(k - 1):]
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xin[:, -(k - 1):]
+    y = sum(xin[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def ssm_block(x, params, cfg: ModelConfig, *, cache=None, chunk: int = 256):
+    """Full mamba2 mixer: projections -> conv -> SSD -> gate -> out_proj.
+
+    x: [b, t, d].  cache (decode): dict(conv_x/conv_B/conv_C, state).
+    Returns (y [b,t,d], new_cache dict)."""
+    b, t, d = x.shape
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    hd = cfg.ssm_headdim
+
+    z = jnp.einsum("btd,de->bte", x, params["w_z"].astype(x.dtype))
+    xi = jnp.einsum("btd,de->bte", x, params["w_x"].astype(x.dtype))
+    Braw = jnp.einsum("btd,ds->bts", x, params["w_B"].astype(x.dtype))
+    Craw = jnp.einsum("btd,ds->bts", x, params["w_C"].astype(x.dtype))
+    dt = jnp.einsum("btd,dh->bth", x, params["w_dt"].astype(x.dtype))
+
+    cs = cache or {}
+    xc, new_cx = causal_conv(xi, params["conv_x"], cs.get("conv_x"))
+    B, new_cb = causal_conv(Braw, params["conv_B"], cs.get("conv_B"))
+    C, new_cc = causal_conv(Craw, params["conv_C"], cs.get("conv_C"))
+    xh = xc.reshape(b, t, nh, hd)
+    dtb = dt + params["dt_bias"].astype(dt.dtype)
+
+    if cache is None:
+        y, final_state = ssd_chunked(xh, dtb, params["A_log"], B, C,
+                                     params["D"], chunk=chunk)
+    else:
+        y, final_state = ssd_decode_step(xh, dtb, params["A_log"], B, C,
+                                         params["D"], cache["state"])
+    y = y.reshape(b, t, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)   # gate
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"].astype(y.dtype))
+    new_cache = {"conv_x": new_cx, "conv_B": new_cb, "conv_C": new_cc,
+                 "state": final_state}
+    return out, new_cache
+
+
+def init_ssm_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_headdim
+    S = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+
+    def lin(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / np.sqrt(shape[0])).astype(dtype)
+
+    return {
+        "w_z": lin(ks[0], (d, d_in)),
+        "w_x": lin(ks[1], (d, d_in)),
+        "w_B": lin(ks[2], (d, S)),
+        "w_C": lin(ks[3], (d, S)),
+        "w_dt": lin(ks[4], (d, nh)),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_conv, d_in), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (cfg.ssm_conv, S), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (cfg.ssm_conv, S), jnp.float32)
+                   * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": lin(jax.random.fold_in(key, 99), (d_in, d)),
+    }
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    km1 = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, km1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, km1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, km1, cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_headdim, cfg.ssm_state),
+                           jnp.float32),
+    }

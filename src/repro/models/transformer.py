@@ -1,0 +1,482 @@
+"""Unified LM stack driving all ten assigned architectures.
+
+One `forward()` covers train / prefill / decode for: dense decoders (deepseek,
+glm4, codeqwen, nemotron), MoE (llama4-maverick top-1, mixtral top-2 + SWA),
+SSM (mamba2 SSD), hybrid (recurrentgemma RG-LRU 2:1 local-attn), encoder-only
+(hubert, bidirectional, feature inputs), and VLM (qwen2-vl, M-RoPE + patch
+embedding stub).
+
+Layers are applied with `lax.scan` over stacked parameter "periods" (the
+block_pattern unit — 1 layer for homogeneous stacks, 3 for recurrentgemma) so
+the compiled HLO contains ONE period body regardless of depth: compile time
+and HLO size stay flat at 48 layers, and per-layer FSDP all-gathers pipeline
+inside the loop.  `n_layers % period` remainder layers run unrolled as a tail.
+
+Sharding is expressed with logical-axis annotations (`repro.dist.shard`) that
+are no-ops outside a mesh context — models stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import dist
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import ModelConfig, dense_init, norm
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.is_moe:
+        E = cfg.n_experts
+        p = {"router": dense_init(ks[0], (d, E), jnp.float32),
+             "w_up": dense_init(ks[1], (E, d, f), dtype),
+             "w_down": dense_init(ks[2], (E, f, d), dtype)}
+        if cfg.mlp == "swiglu":
+            p["w_gate"] = dense_init(jax.random.fold_in(key, 7), (E, d, f),
+                                     dtype)
+        return p
+    p = {"w_up": dense_init(ks[1], (d, f), dtype),
+         "w_down": dense_init(ks[2], (f, d), dtype)}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = dense_init(ks[0], (d, f), dtype)
+    return p
+
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], (d, h, hd), dtype),
+            "wk": dense_init(ks[1], (d, kv, hd), dtype),
+            "wv": dense_init(ks[2], (d, kv, hd), dtype),
+            "wo": dense_init(ks[3], (h, hd, d), dtype)}
+
+
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm_mix": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm_params(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"] = rglru_mod.init_rglru_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        p["norm_mlp"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = _init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cfg.pdtype()
+    period = len(cfg.block_pattern)
+    n_full, tail_n = cfg.n_layers // period, cfg.n_layers % period
+    k_emb, k_stack, k_tail, k_head = jax.random.split(key, 4)
+
+    params: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = dense_init(k_emb, (cfg.vocab, cfg.d_model), dtype,
+                                     scale=1.0)
+    else:
+        params["embed"] = dense_init(k_emb, (cfg.feature_dim, cfg.d_model),
+                                     dtype)
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(
+            jax.random.fold_in(k_emb, 1), (cfg.d_model, cfg.d_model), dtype)
+
+    def one_period(k):
+        kk = jax.random.split(k, period)
+        return tuple(_init_layer(kk[j], cfg.block_pattern[j], cfg, dtype)
+                     for j in range(period))
+
+    if n_full:
+        params["stack"] = jax.vmap(one_period)(
+            jax.random.split(k_stack, n_full))
+    if tail_n:
+        kk = jax.random.split(k_tail, tail_n)
+        params["tail"] = tuple(
+            _init_layer(kk[j], cfg.block_pattern[j % period], cfg, dtype)
+            for j in range(tail_n))
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window > 0 else max_len
+
+
+def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind == "attn":
+        L = _attn_cache_len(cfg, max_len)
+        shape = (batch, L, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(batch, cfg, dtype)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_cache(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = cfg.cdtype()
+    period = len(cfg.block_pattern)
+    n_full, tail_n = cfg.n_layers // period, cfg.n_layers % period
+    cache: dict[str, Any] = {}
+    if n_full:
+        one = tuple(init_layer_cache(k, cfg, batch, max_len, dtype)
+                    for k in cfg.block_pattern)
+        cache["stack"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape), one)
+    if tail_n:
+        cache["tail"] = tuple(
+            init_layer_cache(cfg.block_pattern[j % period], cfg, batch,
+                             max_len, dtype)
+            for j in range(tail_n))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _mlp_apply(x, p, cfg: ModelConfig, mode: str = "train"):
+    if cfg.is_moe:
+        # Decode never drops tokens (serving must be exact); train/prefill
+        # use capacity-factor dispatch unless the config forces dropless.
+        dropless = cfg.moe_dropless or mode == "decode"
+        gate = p.get("w_gate")
+        y, aux = moe_mod.moe_ffn(x, p["router"], gate, p["w_up"],
+                                 p["w_down"], cfg, dropless=dropless)
+        return y, aux
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif cfg.mlp == "sqrelu":
+        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+        h = jnp.square(jax.nn.relu(u.astype(jnp.float32))).astype(x.dtype)
+    else:  # gelu
+        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    h = dist.shard(h, "batch", "seq", "mlp")
+    y = jnp.einsum("btf,fd->btd", h, p["w_down"].astype(x.dtype))
+    return y, jnp.float32(0)
+
+
+def _attn_apply(x, p, cfg: ModelConfig, positions, cache, mode,
+                max_len: int = 0):
+    q, k, v = attn.attn_qkv(x, p["wq"], p["wk"], p["wv"], positions, cfg)
+    q = dist.shard(q, "batch", "seq", "heads", None)
+    k = dist.shard(k, "batch", "seq", "kv_heads", None)
+    v = dist.shard(v, "batch", "seq", "kv_heads", None)
+    if mode == "decode":
+        pos = positions[:, 0, 0] if cfg.mrope_sections else positions[:, 0]
+        W = cache["k"].shape[1]
+        slot = pos % W if cfg.window > 0 else pos
+        b_idx = jnp.arange(x.shape[0])
+        k_cache = cache["k"].at[b_idx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[b_idx, slot].set(v[:, 0])
+        if cfg.window > 0:
+            # ring cache: reconstruct per-slot absolute positions
+            j = jnp.arange(W, dtype=jnp.int32)
+            kpos = pos[:, None] - ((pos[:, None] - j[None, :]) % W)
+            o = attn.ring_decode_attention(q, k_cache, v_cache, pos, kpos,
+                                           cfg.window)
+        else:
+            o = attn.decode_attention(q, k_cache, v_cache, pos,
+                                      window=cfg.window)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        o = attn.flash_attention(q, k, v, causal=cfg.causal,
+                                 window=cfg.window, q_block=cfg.q_block,
+                                 kv_block=cfg.kv_block,
+                                 score_dtype=jnp.dtype(cfg.score_dtype))
+        if mode == "prefill":
+            # Cache is sized by max_len (>= T) so decode has headroom; keys
+            # of position p land at slot p % L (ring for windowed attn,
+            # identity for full attn since L == max_len >= T).
+            T = k.shape[1]
+            L = _attn_cache_len(cfg, max(max_len, T))
+            if T == L:
+                new_cache = {"k": k, "v": v}
+            elif T < L:
+                pad = [(0, 0), (0, L - T), (0, 0), (0, 0)]
+                new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+            else:  # windowed: keep the last L positions, ring layout
+                pos = jnp.arange(T - L, T, dtype=jnp.int32)
+                slot = pos % L
+                new_cache = {
+                    "k": jnp.zeros_like(k[:, :L]).at[:, slot].set(k[:, T - L:]),
+                    "v": jnp.zeros_like(v[:, :L]).at[:, slot].set(v[:, T - L:]),
+                }
+        else:
+            new_cache = None
+    o = dist.shard(o, "batch", "seq", "heads", None)
+    y = attn.attn_out(o, p["wo"], x.dtype)
+    return y, new_cache
+
+
+def apply_layer(x, p, kind: str, cfg: ModelConfig, positions, cache, mode,
+                max_len: int = 0):
+    """Pre-norm temporal mixer + (optional) MLP/MoE, residual wiring."""
+    h = norm(x, p["norm_mix"], cfg)
+    if kind == "attn":
+        y, new_cache = _attn_apply(h, p["attn"], cfg, positions, cache, mode,
+                                   max_len)
+    elif kind == "ssm":
+        y, new_cache = ssm_mod.ssm_block(
+            h, p["ssm"], cfg, cache=cache if mode == "decode" else None)
+        if mode == "train":
+            new_cache = None
+    elif kind == "rglru":
+        y, new_cache = rglru_mod.rglru_block(
+            h, p["rglru"], cfg, cache=cache if mode == "decode" else None)
+        if mode == "train":
+            new_cache = None
+    else:
+        raise ValueError(kind)
+    x = x + y
+    aux = jnp.float32(0)
+    if cfg.d_ff > 0:
+        h = norm(x, p["norm_mlp"], cfg)
+        y, aux = _mlp_apply(h, p["mlp"], cfg, mode)
+        x = x + y
+    x = dist.shard(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict, mode: str):
+    """Returns (x [b,t,d], positions)."""
+    if cfg.input_mode == "features":
+        feats = batch["features"]
+        x = jnp.einsum("btf,fd->btd", feats.astype(cfg.cdtype()),
+                       params["embed"].astype(cfg.cdtype()))
+        b, t = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = params["embed"].astype(cfg.cdtype())[tokens]
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = jnp.einsum("bpd,de->bpe",
+                            batch["vision_embeds"].astype(cfg.cdtype()),
+                            params["vision_proj"].astype(cfg.cdtype()))
+            nv = ve.shape[1]
+            x = jnp.concatenate([ve, x[:, nv:]], axis=1)
+    if mode == "decode":
+        pos = batch["pos"]                                   # int32[b]
+        positions = (jnp.repeat(pos[:, None, None], 3, axis=-1)
+                     if cfg.mrope_sections else pos[:, None])
+    else:
+        ar = jnp.arange(t, dtype=jnp.int32)
+        positions = (jnp.broadcast_to(ar[None, :, None], (b, t, 3))
+                     if cfg.mrope_sections else
+                     jnp.broadcast_to(ar[None, :], (b, t)))
+        if "positions" in batch:
+            positions = batch["positions"]
+    x = dist.shard(x, "batch", "seq", None)
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
+            cache=None, max_len: int = 0):
+    """mode: train (no cache) | prefill (build cache) | decode (use cache).
+
+    `max_len` sizes the prefill cache (>= prompt length) so subsequent decode
+    steps have headroom; 0 means exactly the prompt length.
+
+    Returns (logits, new_cache, aux_loss)."""
+    x, positions = embed_inputs(params, cfg, batch, mode)
+    period = len(cfg.block_pattern)
+    n_full, tail_n = cfg.n_layers // period, cfg.n_layers % period
+
+    def period_body(x, layer_ps, layer_cs):
+        new_cs, aux_tot = [], jnp.float32(0)
+        for j, kind in enumerate(cfg.block_pattern):
+            c_in = None if layer_cs is None else layer_cs[j]
+            x, nc, aux = apply_layer(x, layer_ps[j], kind, cfg, positions,
+                                     c_in, mode, max_len)
+            new_cs.append(nc)
+            aux_tot = aux_tot + aux
+        return x, tuple(new_cs), aux_tot
+
+    if n_full:
+        def scan_body(carry, scanned):
+            x, aux_acc = carry
+            if mode == "decode":
+                lp, lc = scanned
+            else:
+                lp, lc = scanned, None
+            x, new_cs, aux = period_body(x, lp, lc)
+            ys = new_cs if mode in ("prefill", "decode") else None
+            return (x, aux_acc + aux), ys
+
+        body = scan_body
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(scan_body, prevent_cse=False)
+        xs = (params["stack"], cache["stack"]) if mode == "decode" \
+            else params["stack"]
+        (x, aux_acc), stack_cache = lax.scan(body, (x, jnp.float32(0)), xs)
+    else:
+        aux_acc, stack_cache = jnp.float32(0), None
+
+    tail_cache = []
+    if tail_n:
+        for j in range(tail_n):
+            c_in = cache["tail"][j] if mode == "decode" else None
+            x, nc, aux = apply_layer(
+                x, params["tail"][j], cfg.block_pattern[j % period], cfg,
+                positions, c_in, mode, max_len)
+            tail_cache.append(nc)
+            aux_acc = aux_acc + aux
+
+    if mode == "prefill":
+        # Serving prefill only needs the last position's logits: slice BEFORE
+        # the head projection so the [b, t, vocab] tensor never materializes
+        # (at 32k x 100k-vocab that tensor would dwarf the whole model).
+        x = x[:, -1:]
+    x = norm(x, params["final_norm"], cfg)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(cfg.cdtype())
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.logit_softcap)
+    logits = dist.shard(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {}
+        if stack_cache is not None:
+            new_cache["stack"] = stack_cache
+        if tail_n:
+            new_cache["tail"] = tuple(tail_cache)
+    return logits, new_cache, aux_acc
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def _trunk(params, cfg: ModelConfig, x, positions):
+    """Train-mode layer stack + final norm, head NOT applied.
+    Returns (hidden [b,t,d], aux_loss)."""
+    period = len(cfg.block_pattern)
+    n_full, tail_n = cfg.n_layers // period, cfg.n_layers % period
+
+    def period_body(x, layer_ps):
+        aux_tot = jnp.float32(0)
+        for j, kind in enumerate(cfg.block_pattern):
+            x, _, aux = apply_layer(x, layer_ps[j], kind, cfg, positions,
+                                    None, "train", 0)
+            aux_tot = aux_tot + aux
+        return x, aux_tot
+
+    aux_acc = jnp.float32(0)
+    if n_full:
+        def scan_body(carry, lp):
+            x, acc = carry
+            x, aux = period_body(x, lp)
+            return (x, acc + aux), None
+
+        body = scan_body
+        if cfg.remat:
+            body = jax.checkpoint(scan_body, prevent_cse=False)
+        (x, aux_acc), _ = lax.scan(body, (x, jnp.float32(0)),
+                                   params["stack"])
+    if tail_n:
+        for j in range(tail_n):
+            x, _, aux = apply_layer(
+                x, params["tail"][j], cfg.block_pattern[j % period], cfg,
+                positions, None, "train", 0)
+            aux_acc = aux_acc + aux
+    return norm(x, params["final_norm"], cfg), aux_acc
+
+
+def _ce_from_logits(logits, targets):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict):
+    """Next-token CE (causal) / per-position CE (encoder).  Scalar mean.
+
+    With cfg.loss_chunk > 0 the head projection + CE run per sequence chunk
+    under lax.map, so the [b, t, vocab] logits tensor never materializes —
+    at llama4's 202k vocab the monolithic fp32 logits (+ their gradient)
+    dominate the memory roofline term (EXPERIMENTS.md §Perf it-A2)."""
+    if cfg.loss_chunk and cfg.causal:
+        x, positions = embed_inputs(params, cfg, batch, "train")
+        h, aux = _trunk(params, cfg, x, positions)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["head"]).astype(cfg.cdtype())
+        targets = (batch["tokens"] if cfg.input_mode == "tokens"
+                   else batch["labels"])[:, 1:]
+        h = h[:, :-1]
+        b, tm1, d = h.shape
+        nc = cfg.loss_chunk
+        pad = (-tm1) % nc
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        hc = h.reshape(b, nc, -1, d).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, -1).transpose(1, 0, 2)
+        valid = jnp.arange(tm1 + pad).reshape(nc, -1) < tm1
+
+        def chunk(args):
+            hj, tj, vj = args
+            logits = jnp.einsum("btd,dv->btv", hj, head)
+            if cfg.logit_softcap > 0:
+                logits = cfg.logit_softcap * jnp.tanh(
+                    logits.astype(jnp.float32) / cfg.logit_softcap)
+            lz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+            gold = jnp.take_along_axis(
+                logits.astype(jnp.float32),
+                tj[..., None].astype(jnp.int32), axis=-1)[..., 0]
+            return jnp.sum(jnp.where(vj[None, :], lz - gold, 0.0))
+
+        totals = lax.map(chunk, (hc, tc, valid))
+        return jnp.sum(totals) / (b * tm1) + 0.01 * aux
+
+    logits, _, aux = forward(params, cfg, batch, mode="train")
+    logits = logits.astype(jnp.float32)
+    if cfg.causal:
+        targets = batch["tokens"][:, 1:] if cfg.input_mode == "tokens" \
+            else batch["labels"][:, 1:]
+        logits = logits[:, :-1]
+    else:
+        targets = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + 0.01 * aux

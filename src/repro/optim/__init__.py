@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, global_norm, clip_by_global_norm,
+    wsd_schedule,
+)
+from repro.optim.compression import compress_grads, decompress_grads  # noqa: F401

@@ -1,0 +1,63 @@
+"""Gradient compression for the DP all-reduce (bf16 / int8 with per-tensor
+scale + error feedback).  Halves (or quarters) the dominant cross-pod
+collective bytes; enabled per-config, visible in the roofline collective
+term.  Error feedback keeps convergence (residual carried in fp32).
+
+Implementation note: trees are processed via flatten/unflatten against the
+grads treedef — param trees contain tuple *containers* (layer tuples), so
+`is_leaf=isinstance(tuple)` tricks mis-fire on them.  int8 scales travel in
+the meta (a separate leaf list), never inside the grad tree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, residual, mode: str = "bf16"):
+    """Returns (compressed_tree, new_residual_tree, meta).
+
+    mode: none | bf16 | int8.  `meta` is passed to decompress_grads.
+    The compressed tree has the same structure as grads (bf16/int8 leaves);
+    all-reducing it moves 2x/4x fewer bytes than fp32."""
+    if mode == "none":
+        return grads, residual, ("none", None)
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = treedef.flatten_up_to(residual) if residual is not None \
+        else [jnp.zeros(g.shape, jnp.float32) for g in leaves]
+
+    if mode == "bf16":
+        comped, new_res = [], []
+        for g, r in zip(leaves, res_leaves):
+            tot = g.astype(jnp.float32) + r
+            q = tot.astype(jnp.bfloat16)
+            comped.append(q)
+            new_res.append(tot - q.astype(jnp.float32))
+        return (treedef.unflatten(comped), treedef.unflatten(new_res),
+                ("bf16", None))
+    if mode == "int8":
+        comped, new_res, scales = [], [], []
+        for g, r in zip(leaves, res_leaves):
+            tot = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(tot)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(tot / scale), -127, 127).astype(jnp.int8)
+            comped.append(q)
+            scales.append(scale)
+            new_res.append(tot - q.astype(jnp.float32) * scale)
+        return (treedef.unflatten(comped), treedef.unflatten(new_res),
+                ("int8", scales))
+    raise ValueError(mode)
+
+
+def decompress_grads(comped, meta):
+    mode, scales = meta if isinstance(meta, tuple) else (meta, None)
+    if mode in (None, "none"):
+        return comped
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), comped)
+    if mode == "int8":
+        leaves, treedef = jax.tree.flatten(comped)
+        return treedef.unflatten([
+            q.astype(jnp.float32) * s for q, s in zip(leaves, scales)])
+    raise ValueError(mode)

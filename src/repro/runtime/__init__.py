@@ -1,0 +1,3 @@
+from repro.runtime.preemption import PreemptionGuard  # noqa: F401
+from repro.runtime.stragglers import StragglerWatchdog  # noqa: F401
+from repro.runtime.elastic import elastic_mesh, reshard_state  # noqa: F401

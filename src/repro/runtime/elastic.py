@@ -1,0 +1,48 @@
+"""Elastic scaling: rebuild the mesh for whatever devices survive and reshard
+the checkpointed state onto it.
+
+Checkpoints are mesh-agnostic (global numpy leaves + the rules table is
+re-derived from the config), so growing 256 -> 512 chips or shrinking after
+losing a host is the same operation: make a new mesh, recompute shardings,
+device_put.  The only global invariant the caller must keep is
+`global_batch % batch_shards == 0` — `elastic_mesh` picks the largest
+(data, model) factorization that preserves it.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro import dist
+
+
+def elastic_mesh(n_devices: int, *, model_parallel: int = 1,
+                 global_batch: int | None = None) -> Mesh:
+    """Largest usable (data, model) mesh on `n_devices`."""
+    model = model_parallel
+    while model > 1 and n_devices % model != 0:
+        model //= 2
+    data = n_devices // model
+    if global_batch is not None:
+        while data > 1 and global_batch % data != 0:
+            data //= 2
+    devs = jax.devices()[: data * model]
+    import numpy as np
+    return Mesh(np.asarray(devs).reshape(data, model), ("data", "model"))
+
+
+def reshard_state(state, cfg, mesh: Mesh):
+    """device_put every leaf with shardings re-derived for `mesh`.
+
+    Works for the (params, opt_state) training pytree: params get the rules
+    table; opt moments mirror the params; scalars replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rules = dist.make_rules(cfg, mesh)
+    params, opt = state
+    p_sh = dist.param_shardings(params, cfg, mesh, rules)
+    o_sh = {"m": p_sh, "v": p_sh,
+            "step": NamedSharding(mesh, P())}
+    params = jax.device_put(params, p_sh)
+    opt = jax.device_put(opt, o_sh)
+    return params, opt

@@ -1,0 +1,4 @@
+from repro.serving.paged_kv import (  # noqa: F401
+    PagedKV, init_paged, lookup_pages, alloc_pages, free_pages, page_key,
+)
+from repro.serving.engine import ServingEngine, Request  # noqa: F401

@@ -1,0 +1,214 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+Requests are admitted into `max_batch` decode slots as they arrive; every
+`step()` decodes ONE token for all live slots in a single batched forward
+against page-gathered KV, then appends the new K/V through the page table
+(CacheHash insert on page-boundary crossings).  Finished sequences release
+their pages (CacheHash delete) without stalling the other slots — the
+lock-free property the paper buys us: page-table readers (decoding slots)
+never block on table writers (admission/retirement), in the batched-step
+sense established in DESIGN.md §2.
+
+Scope: archs whose layers are all full attention (dense / moe / vlm
+backbones).  SWA / SSM / hybrid archs serve through the dense slot-state path
+(`make_serve_step`) since their state is O(1) or ring-buffered per sequence —
+paging would page nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import forward
+from repro.serving import paged_kv as pk
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # int32[T]
+    max_new_tokens: int = 16
+    temperature: float = 0.0           # 0 = greedy
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    seq_id: int = -1
+    pos: int = 0                       # next position to decode
+    new_tokens: int = 0
+    active: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 n_pages: int = 256, page_size: int = 16,
+                 max_pages_per_seq: int = 32, strategy: str = "cached_me",
+                 seed: int = 0):
+        assert all(k == "attn" for k in cfg.layer_kinds) and \
+            cfg.causal and cfg.window == 0, \
+            "paged engine serves causal full-attention archs; use " \
+            "make_serve_step for SSM/hybrid/SWA/encoder"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_pages = max_pages_per_seq
+        self.paged = pk.init_paged(cfg, n_pages, page_size, max_batch,
+                                   strategy)
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.queue: list[Request] = []
+        self.requests: dict[int, Request] = {}
+        self._next_seq = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._decode_fn = jax.jit(self._decode_batch)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.requests[req.rid] = req
+        self.queue.append(req)
+
+    def step(self):
+        """Admit waiting requests into free slots, then decode one token for
+        every active slot.  Returns the number of live slots."""
+        self._admit()
+        live = [i for i, s in enumerate(self.slots) if s.active]
+        if live:
+            self._decode(live)
+        return len(live)
+
+    def run_to_completion(self, max_steps: int = 1000):
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return {r.rid: r.out_tokens for r in self.requests.values()}
+
+    # -- admission / prefill -------------------------------------------------
+
+    def _admit(self):
+        for slot in self.slots:
+            if slot.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            seq_id = self._next_seq
+            self._next_seq += 1
+            T = len(req.prompt)
+            P = self.paged.page_size
+            n_pages = (T + P - 1) // P
+            # prefill forward (batch of one) -> per-layer K/V for the prompt
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            if self.cfg.family == "vlm":
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(T, dtype=jnp.int32)[None, :, None], (1, T, 3))
+            logits, cache, _ = forward(self.params, self.cfg, batch,
+                                       mode="prefill")
+            k, v = self._cache_to_layers(cache)          # [L, T, kvh, hd]
+            self.paged, phys = pk.alloc_pages(
+                self.paged, [seq_id] * n_pages, list(range(n_pages)))
+            self.paged = pk.write_prompt(self.paged, phys, k, v)
+            # first generated token comes from the prefill logits
+            tok = self._sample(logits[:, -1])
+            req.out_tokens.append(int(tok[0]))
+            slot.rid, slot.seq_id, slot.pos = req.rid, seq_id, T
+            slot.new_tokens, slot.active = 1, True
+
+    def _cache_to_layers(self, cache):
+        ks, vs = [], []
+        if "stack" in cache:
+            st = cache["stack"]
+            for layer in st:                      # period tuple
+                ks.append(layer["k"][:, 0])       # [n_full, T, kvh, hd]
+                vs.append(layer["v"][:, 0])
+        if "tail" in cache:
+            for layer in cache["tail"]:
+                ks.append(layer["k"][0][None])
+                vs.append(layer["v"][0][None])
+        return jnp.concatenate(ks, 0), jnp.concatenate(vs, 0)
+
+    # -- decode --------------------------------------------------------------
+
+    def _decode_batch(self, params, tokens, pos, k_dense, v_dense):
+        """One batched decode step against gathered KV.  Returns (logits,
+        new k/v for the produced token)."""
+        cfg = self.cfg
+        period = len(cfg.block_pattern)
+        n_full = cfg.n_layers // period
+        L = k_dense.shape[2]
+        cache = {}
+        if n_full:
+            cache["stack"] = ({"k": k_dense[:n_full], "v": v_dense[:n_full]},)
+        tail_n = cfg.n_layers % period
+        if tail_n:
+            cache["tail"] = tuple(
+                {"k": k_dense[n_full + j], "v": v_dense[n_full + j]}
+                for j in range(tail_n))
+        batch = {"tokens": tokens, "pos": pos}
+        logits, new_cache, _ = forward(params, cfg, batch, mode="decode",
+                                       cache=cache)
+        b_idx = jnp.arange(tokens.shape[0])
+        nk, nv = [], []
+        if n_full:
+            nk.append(new_cache["stack"][0]["k"][:, b_idx, pos])
+            nv.append(new_cache["stack"][0]["v"][:, b_idx, pos])
+        if tail_n:
+            for j in range(tail_n):
+                nk.append(new_cache["tail"][j]["k"][b_idx, pos][None])
+                nv.append(new_cache["tail"][j]["v"][b_idx, pos][None])
+        return logits, jnp.concatenate(nk, 0), jnp.concatenate(nv, 0)
+
+    def _decode(self, live):
+        P = self.paged.page_size
+        seq_ids = [self.slots[i].seq_id for i in live]
+        pos = np.asarray([self.slots[i].pos for i in live], np.int32)
+        # page-boundary crossings allocate through the big-atomic table
+        need = [(s, p // P) for s, p in zip(seq_ids, pos) if p % P == 0]
+        if need:
+            self.paged, _ = pk.alloc_pages(
+                self.paged, [n[0] for n in need], [n[1] for n in need])
+        self.paged, phys = pk.lookup_pages(self.paged, seq_ids,
+                                           self.max_pages)
+        k_dense, v_dense, _ = pk.gather_kv(self.paged, phys)
+        tokens = np.asarray(
+            [self.requests[self.slots[i].rid].out_tokens[-1] for i in live],
+            np.int32)[:, None]
+        logits, nk, nv = self._decode_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos),
+            k_dense, v_dense)
+        self.paged = pk.append_token(
+            self.paged, jnp.asarray(phys[np.arange(len(live)), pos // P]),
+            jnp.asarray(pos % P), nk, nv)
+        toks = self._sample(logits[:, 0])
+        for j, i in enumerate(live):
+            slot = self.slots[i]
+            req = self.requests[slot.rid]
+            req.out_tokens.append(int(toks[j]))
+            slot.pos += 1
+            slot.new_tokens += 1
+            if slot.new_tokens >= req.max_new_tokens:
+                self._retire(i)
+
+    def _retire(self, i):
+        slot = self.slots[i]
+        req = self.requests[slot.rid]
+        req.done = True
+        P = self.paged.page_size
+        used = (slot.pos + P) // P          # pages incl. current partial
+        self.paged = pk.free_pages(self.paged, slot.seq_id, used)
+        self.slots[i] = _Slot()
+
+    def _sample(self, logits):
+        if self.requests and all(r.temperature == 0.0
+                                 for r in self.requests.values()):
+            return np.asarray(jnp.argmax(logits, -1))
+        self._key, sub = jax.random.split(self._key)
+        temp = max(next(iter(self.requests.values())).temperature, 1e-4)
+        return np.asarray(
+            jax.random.categorical(sub, logits.astype(jnp.float32) / temp))

@@ -1,0 +1,191 @@
+"""Paged KV cache whose page table is a CacheHash of big atomics.
+
+This is the framework's flagship application of the paper (DESIGN.md §3):
+the page table maps a logical page key  (seq_id << 20 | page_no)  to a
+physical page index.  Every lookup is a CacheHash find — with big atomics the
+common case is ONE gather of the inlined bucket cell; the Chaining baseline
+(strategy comparison in the benchmarks) pays a second dependent gather per
+lookup.  Page allocation / release are CacheHash insert / delete, i.e.
+CAS-installs on the bucket big atomics, giving lock-free page-table updates
+that never block concurrent lookups (decode of other sequences).
+
+Physical pages live in one pool per layer-kind:
+    attn pages: [n_layers, n_pages, page_size, kvh, hd]  (k and v pools)
+    recurrent state (ssm / rglru): dense per-slot arrays (fixed size, no
+    paging needed — one "page" per live sequence).
+
+`lookup_pages` returns, per sequence, the physical page list padded to
+max_pages — the gather that decode attention consumes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cachehash as ch
+from repro.models.common import ModelConfig
+
+SEQ_SHIFT = 20                     # key = seq_id << 20 | page_no
+PAGE_MASK = (1 << SEQ_SHIFT) - 1
+
+
+class PagedKV(NamedTuple):
+    table: ch.HashState            # page table (big-atomic CacheHash)
+    k_pages: jax.Array             # [L_attn, n_pages, P, kvh, hd]
+    v_pages: jax.Array
+    states: dict                   # recurrent per-slot states (ssm/rglru)
+    free: np.ndarray               # host free-list of physical pages (LIFO)
+    page_size: int
+
+
+def page_key(seq_id, page_no):
+    return (jnp.asarray(seq_id, jnp.uint32) << SEQ_SHIFT) | \
+        jnp.asarray(page_no, jnp.uint32)
+
+
+def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
+               max_seqs: int, strategy: str = "cached_me") -> PagedKV:
+    kinds = cfg.layer_kinds
+    l_attn = sum(k == "attn" for k in kinds)
+    dt = cfg.cdtype()
+    kv = (l_attn, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    nb = 1
+    while nb < 2 * n_pages:
+        nb *= 2
+    table = ch.init(nb, vw=1, strategy=strategy, p_max=max(max_seqs, 64))
+    states = {}
+    from repro.models import rglru as rglru_mod
+    from repro.models import ssm as ssm_mod
+    for j, kind in enumerate(kinds):
+        if kind == "ssm":
+            states[f"layer{j}"] = ssm_mod.init_ssm_cache(max_seqs, cfg, dt)
+        elif kind == "rglru":
+            states[f"layer{j}"] = rglru_mod.init_rglru_cache(max_seqs, cfg, dt)
+    return PagedKV(
+        table=table,
+        k_pages=jnp.zeros(kv, dt),
+        v_pages=jnp.zeros(kv, dt),
+        states=states,
+        free=np.arange(n_pages - 1, -1, -1, dtype=np.int32),  # LIFO
+        page_size=page_size,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Page-table ops (all go through the big-atomic CacheHash)
+# ---------------------------------------------------------------------------
+
+def alloc_pages(paged: PagedKV, seq_ids, page_nos) -> tuple[PagedKV, jax.Array]:
+    """Map (seq, page_no) -> fresh physical pages via CacheHash insert
+    (a CAS-install on the bucket big atomic).  Returns (state', phys[q])."""
+    q = len(seq_ids)
+    if q > len(paged.free):
+        raise RuntimeError(f"out of KV pages ({q} wanted, "
+                           f"{len(paged.free)} free)")
+    phys = paged.free[:q].copy()
+    free = paged.free[q:]
+    keys = page_key(jnp.asarray(seq_ids, jnp.uint32),
+                    jnp.asarray(page_nos, jnp.uint32))
+    ops = ch.OpBatch(jnp.full((q,), ch.INSERT, jnp.int32), keys,
+                     jnp.asarray(phys[:, None], jnp.uint32))
+    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy="cached_me",
+                                      inline=True, vw=1)
+    return paged._replace(table=table, free=free), jnp.asarray(phys)
+
+
+def lookup_pages(paged: PagedKV, seq_ids, n_pages_per_seq: int):
+    """Batched page-table lookup: seq b, pages 0..max -> phys[b, max]
+    (-1 where unmapped).  The hot path: one CacheHash find per (seq, page),
+    inlined-bucket fast path."""
+    seq_ids = jnp.asarray(seq_ids, jnp.uint32)
+    b = seq_ids.shape[0]
+    pages = jnp.arange(n_pages_per_seq, dtype=jnp.uint32)
+    keys = page_key(seq_ids[:, None], pages[None, :]).reshape(-1)
+    ops = ch.OpBatch(jnp.full((keys.shape[0],), ch.FIND, jnp.int32), keys,
+                     jnp.zeros((keys.shape[0], 1), jnp.uint32))
+    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy="cached_me",
+                                      inline=True, vw=1)
+    phys = jnp.where(res.found, res.value[:, 0].astype(jnp.int32), -1)
+    return paged._replace(table=table), phys.reshape(b, n_pages_per_seq)
+
+
+def free_pages(paged: PagedKV, seq_id: int, n_pages_used: int) -> PagedKV:
+    """Release a finished sequence's pages: CacheHash delete (path-copying
+    CAS) + host free-list push."""
+    if n_pages_used == 0:
+        return paged
+    pages = np.arange(n_pages_used, dtype=np.uint32)
+    keys = page_key(jnp.full((n_pages_used,), seq_id, jnp.uint32),
+                    jnp.asarray(pages))
+    find_ops = ch.OpBatch(jnp.full((n_pages_used,), ch.FIND, jnp.int32),
+                          keys, jnp.zeros((n_pages_used, 1), jnp.uint32))
+    table, res, _ = ch.apply_hash_ops(paged.table, find_ops,
+                                      strategy="cached_me", inline=True, vw=1)
+    phys = np.asarray(res.value[:, 0], np.int32)[np.asarray(res.found)]
+    del_ops = ch.OpBatch(jnp.full((n_pages_used,), ch.DELETE, jnp.int32),
+                         keys, jnp.zeros((n_pages_used, 1), jnp.uint32))
+    table, _, _ = ch.apply_hash_ops(table, del_ops, strategy="cached_me",
+                                    inline=True, vw=1)
+    return paged._replace(table=table,
+                          free=np.concatenate([phys, paged.free]))
+
+
+# ---------------------------------------------------------------------------
+# Physical page I/O
+# ---------------------------------------------------------------------------
+
+def write_prompt(paged: PagedKV, phys_pages, layer_k, layer_v) -> PagedKV:
+    """Scatter a prompt's K/V into its pages.  layer_k/v: [L_attn, T, kvh, hd]
+    (batch of one sequence); phys_pages: int32[ceil(T/P)]."""
+    P = paged.page_size
+    L, T = layer_k.shape[0], layer_k.shape[1]
+    n_full = T // P
+    k_pages, v_pages = paged.k_pages, paged.v_pages
+    if n_full:
+        kk = layer_k[:, :n_full * P].reshape(L, n_full, P, *layer_k.shape[2:])
+        vv = layer_v[:, :n_full * P].reshape(L, n_full, P, *layer_v.shape[2:])
+        k_pages = k_pages.at[:, phys_pages[:n_full]].set(kk)
+        v_pages = v_pages.at[:, phys_pages[:n_full]].set(vv)
+    rem = T - n_full * P
+    if rem:
+        k_pages = k_pages.at[:, phys_pages[n_full], :rem].set(
+            layer_k[:, n_full * P:])
+        v_pages = v_pages.at[:, phys_pages[n_full], :rem].set(
+            layer_v[:, n_full * P:])
+    return paged._replace(k_pages=k_pages, v_pages=v_pages)
+
+
+def append_token(paged: PagedKV, phys_page, offset, k_tok, v_tok) -> PagedKV:
+    """Write one new token's K/V for a batch of sequences.
+    phys_page: int32[b]; offset: int32[b] in [0, P); k/v_tok:
+    [L_attn, b, kvh, hd]."""
+    L = k_tok.shape[0]
+    b = k_tok.shape[1]
+    li = jnp.arange(L)[:, None].repeat(b, 1).reshape(-1)
+    pi = jnp.broadcast_to(phys_page[None], (L, b)).reshape(-1)
+    oi = jnp.broadcast_to(offset[None], (L, b)).reshape(-1)
+    k_pages = paged.k_pages.at[li, pi, oi].set(
+        k_tok.reshape(-1, *k_tok.shape[2:]))
+    v_pages = paged.v_pages.at[li, pi, oi].set(
+        v_tok.reshape(-1, *v_tok.shape[2:]))
+    return paged._replace(k_pages=k_pages, v_pages=v_pages)
+
+
+def gather_kv(paged: PagedKV, phys: jax.Array):
+    """phys: int32[b, max_pages] (-1 pad) -> K/V [L, b, max_pages*P, kvh, hd]
+    plus a validity mask [b, max_pages*P].  One gather per decode step — on
+    TPU this is the page-granular DMA stream paged attention feeds on."""
+    b, mp = phys.shape
+    P = paged.page_size
+    safe = jnp.maximum(phys, 0)
+    k = paged.k_pages[:, safe]            # [L, b, mp, P, kvh, hd]
+    v = paged.v_pages[:, safe]
+    L = k.shape[0]
+    k = k.reshape(L, b, mp * P, *k.shape[4:])
+    v = v.reshape(L, b, mp * P, *v.shape[4:])
+    valid = jnp.repeat(phys >= 0, P, axis=1)
+    return k, v, valid

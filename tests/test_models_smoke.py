@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and no NaNs; decode consistency vs prefill."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, Shape, applicable, reduced_shape
+from repro.launch.specs import cache_specs, input_specs, materialize
+from repro.launch.steps import (init_train_state, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models.transformer import forward, init_cache, init_params
+from repro.optim import AdamWConfig
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = get_config(arch, reduced=True)
+    shape = reduced_shape(SHAPES["train_4k"])
+    batch = materialize(input_specs(cfg, shape), vocab=cfg.vocab)
+    params, opt_state = init_train_state(cfg, AdamWConfig(warmup=1,
+                                                          total_steps=10))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(warmup=1, total_steps=10)))
+    params2, opt2, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), loss
+    assert loss > 0
+    # params actually moved
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32),
+                           np.asarray(l1, np.float32))
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_decreases(arch):
+    cfg = get_config(arch, reduced=True)
+    shape = reduced_shape(SHAPES["train_4k"])
+    batch = materialize(input_specs(cfg, shape), vocab=cfg.vocab)
+    opt_cfg = AdamWConfig(lr=5e-3, warmup=1, total_steps=50)
+    params, opt_state = init_train_state(cfg, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    losses = []
+    for _ in range(8):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_consistency(arch):
+    """Prefill T tokens, then decode token T given the cache: logits must
+    match a full forward over T+1 tokens at position T."""
+    cfg = get_config(arch, reduced=True)
+    if not cfg.causal:
+        pytest.skip("encoder-only: no decode step")
+    # fp32 so prefill-vs-decode mismatch measures protocol bugs, not bf16
+    # reduction-order noise.
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    B, T = 2, 64
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (B, T + 1)).astype(np.int32)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+
+    def full_batch(t):
+        b = {"tokens": jnp.asarray(toks[:, :t])}
+        if cfg.family == "vlm":
+            b["vision_embeds"] = jnp.zeros((B, 8, cfg.d_model), jnp.bfloat16)
+            b["positions"] = jnp.broadcast_to(
+                jnp.arange(t, dtype=jnp.int32)[None, :, None], (B, t, 3))
+        return b
+
+    logits_full, _, _ = forward(params, cfg, full_batch(T + 1), mode="train")
+    # prefill T, decode position T (cache sized T+1 for headroom)
+    prefill = make_prefill_step(cfg, max_len=T + 1)
+    serve = make_serve_step(cfg)
+    _, cache = prefill(params, full_batch(T))
+    dec_batch = {"tokens": jnp.asarray(toks[:, T:T + 1]),
+                 "pos": jnp.full((B,), T, jnp.int32)}
+    logits_dec, new_cache = serve(params, cache, dec_batch)
+    a = np.asarray(logits_full[:, -1], np.float32)
+    b = np.asarray(logits_dec[:, 0], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+    assert (np.argmax(a, -1) == np.argmax(b, -1)).all()
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "mamba2_780m",
+                                  "recurrentgemma_9b", "mixtral_8x7b"])
+def test_multi_token_decode_matches_forward(arch):
+    """Decode 4 tokens autoregressively == teacher-forced full forward."""
+    cfg = get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    B, T, D = 2, 32, 4
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab, (B, T + D)).astype(np.int32)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    logits_full, _, _ = forward(
+        params, cfg, {"tokens": jnp.asarray(toks)}, mode="train")
+    prefill = make_prefill_step(cfg, max_len=T + D)
+    serve = jax.jit(make_serve_step(cfg))
+    _, cache = prefill(params, {"tokens": jnp.asarray(toks[:, :T])})
+    for d in range(D):
+        batch = {"tokens": jnp.asarray(toks[:, T + d:T + d + 1]),
+                 "pos": jnp.full((B,), T + d, jnp.int32)}
+        logits_dec, cache = serve(params, cache, batch)
+        a = np.asarray(logits_full[:, T + d], np.float32)
+        b = np.asarray(logits_dec[:, 0], np.float32)
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+        assert (np.argmax(a, -1) == np.argmax(b, -1)).all(), d
+
+
+def test_encoder_has_no_decode_cells():
+    cfg = get_config("hubert_xlarge")
+    ok, why = applicable(cfg, SHAPES["decode_32k"])
+    assert not ok and "encoder" in why
+
+
+def test_long_context_skips_full_attention():
+    for arch, expect in [("deepseek_7b", False), ("mamba2_780m", True),
+                         ("recurrentgemma_9b", True), ("mixtral_8x7b", True),
+                         ("glm4_9b", False), ("qwen2_vl_7b", False)]:
+        cfg = get_config(arch)
+        ok, why = applicable(cfg, SHAPES["long_500k"])
+        assert ok == expect, (arch, why)

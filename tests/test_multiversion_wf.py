@@ -1,0 +1,169 @@
+"""Tests: versioned snapshot store (multiversioning application) and the
+wait-free writable big atomic (Algorithm 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import multiversion as mv
+from repro.core import wf_writable as wf
+
+
+def tiny_state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((4,)), jnp.float32),
+            "step": jnp.int32(0)}
+
+
+# ---------------------------------------------------------------------------
+# multiversion
+# ---------------------------------------------------------------------------
+
+def test_publish_snapshot_roundtrip():
+    s0 = tiny_state()
+    store = mv.init_store(s0, n_slots=3)
+    s1 = jax.tree.map(lambda x: x + 1, s0)
+    store = mv.publish(store, s1, step=1)
+    snap = mv.snapshot_with_validation(store)
+    assert int(snap.step) == 1
+    np.testing.assert_array_equal(np.asarray(snap.state["w"]),
+                                  np.asarray(s1["w"]))
+
+
+def test_reader_never_sees_torn_state():
+    """Writer frozen mid-copy: protocol readers return the OLD consistent
+    state; the torn slot itself fails validation (negative control)."""
+    s0 = tiny_state()
+    store = mv.init_store(s0, n_slots=2)
+    s1 = jax.tree.map(lambda x: x + 100.0, s0)
+    store = mv.publish(store, s1, step=1)
+    s2 = jax.tree.map(lambda x: x + 999.0, s1)
+    torn = mv.begin_publish(store, s2)           # frozen mid-copy
+    snap = mv.snapshot_with_validation(torn)
+    np.testing.assert_array_equal(np.asarray(snap.state["w"]),
+                                  np.asarray(s1["w"]))   # old state, not torn
+    # the torn slot is detectably inconsistent
+    bad_slot = (int(torn.head) + 1) % 2
+    bad = mv.Snapshot(jax.tree.map(lambda b: b[bad_slot], torn.slots),
+                      torn.step[bad_slot], jnp.int32(bad_slot),
+                      torn.version[bad_slot])
+    assert not bool(mv.validate(torn, bad))
+    # and the torn slot REALLY is torn (half new, half old)
+    w = np.asarray(torn.slots["w"])[bad_slot].reshape(-1)
+    assert (w[:8] == np.asarray(s2["w"]).reshape(-1)[:8]).all()
+    assert not (w[8:] == np.asarray(s2["w"]).reshape(-1)[8:]).all()
+
+
+def test_publish_sequence_head_always_consistent():
+    s = tiny_state()
+    store = mv.init_store(s, n_slots=2)
+    for i in range(1, 6):
+        s = jax.tree.map(lambda x: x * 1.1 if x.dtype == jnp.float32 else x, s)
+        store = mv.publish(store, s, step=i)
+        snap = mv.snapshot_with_validation(store)
+        assert int(snap.step) == i
+        assert int(store.version[snap.slot]) % 2 == 0
+
+
+# ---------------------------------------------------------------------------
+# wf_writable (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def test_load_store_cas_basic():
+    st_ = wf.init(n=4, k=2)
+    st_ = wf.store(st_, 1, [7, 8])
+    np.testing.assert_array_equal(np.asarray(wf.load(st_, jnp.asarray([1]))),
+                                  [[7, 8]])
+    st_, ok = wf.cas_batch(st_, jnp.asarray([1]), [[7, 8]], [[9, 10]])
+    assert bool(ok[0])
+    st_, ok = wf.cas_batch(st_, jnp.asarray([1]), [[7, 8]], [[0, 0]])
+    assert not bool(ok[0])
+    np.testing.assert_array_equal(np.asarray(wf.load(st_, jnp.asarray([1]))),
+                                  [[9, 10]])
+
+
+def test_pending_store_invisible_until_helped_then_transfers():
+    """The descheduled-writer interleaving: begin_store installs in W; loads
+    still see the old value (they linearize before the pending store); the
+    next CAS helps first, so it sees the NEW value — exactly Algorithm 3."""
+    st_ = wf.init(n=2, k=2)
+    st_ = wf.store(st_, 0, [1, 1])
+    st_ = wf.begin_store(st_, 0, [2, 2])         # writer stalls mid-store
+    assert bool(wf.pending(st_)[0])
+    np.testing.assert_array_equal(
+        np.asarray(wf.load(st_, jnp.asarray([0]))), [[1, 1]])  # not yet
+    # a CAS expecting the OLD value must FAIL (it helps the writer first)
+    st_, ok = wf.cas_batch(st_, jnp.asarray([0]), [[1, 1]], [[3, 3]])
+    assert not bool(ok[0])
+    np.testing.assert_array_equal(
+        np.asarray(wf.load(st_, jnp.asarray([0]))), [[2, 2]])  # transferred
+    assert not bool(wf.pending(st_)[0])
+
+
+def test_store_to_same_value_is_silent():
+    st_ = wf.init(n=2, k=2)
+    st_ = wf.store(st_, 0, [5, 5])
+    seq0 = int(st_.z_seq[0])
+    st_ = wf.begin_store(st_, 0, [5, 5])         # Line 17: early return
+    assert not bool(wf.pending(st_)[0])
+    assert int(st_.z_seq[0]) == seq0
+
+
+def test_second_writer_linearizes_silently_before_pending():
+    """With a pending write on the slot, a second begin_store does not even
+    install (Line 18 branch): after help, the FIRST write is the value."""
+    st_ = wf.init(n=2, k=2)
+    st_ = wf.begin_store(st_, 0, [1, 1])
+    st_ = wf.begin_store(st_, 0, [2, 2])         # silent
+    st_ = wf.help_write(st_)
+    np.testing.assert_array_equal(
+        np.asarray(wf.load(st_, jnp.asarray([0]))), [[1, 1]])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), n=st.integers(1, 6),
+       n_ops=st.integers(1, 24))
+def test_wf_writable_linearizable_vs_oracle(seed, n, n_ops):
+    """Random scripts of load/begin_store/help/cas/store on k=2 atomics are
+    bit-identical to the sequential oracle with help-point semantics."""
+    rng = np.random.default_rng(seed)
+    st_ = wf.init(n=n, k=2, p_max=n_ops + 4)
+    vals0 = np.asarray(st_.z_value)
+    script = []
+    outs = []
+    for _ in range(n_ops):
+        s = int(rng.integers(0, n))
+        kind = rng.choice(["load", "begin_store", "store", "help", "cas"])
+        if kind == "load":
+            script.append(("load", s))
+            outs.append(np.asarray(wf.load(st_, jnp.asarray([s])))[0])
+        elif kind == "begin_store":
+            v = rng.integers(0, 5, 2).astype(np.uint32)
+            script.append(("begin_store", s, v))
+            st_ = wf.begin_store(st_, s, v)
+        elif kind == "store":
+            v = rng.integers(0, 5, 2).astype(np.uint32)
+            script.append(("store", s, v))
+            st_ = wf.store(st_, s, v)
+        elif kind == "help":
+            script.append(("help",))
+            st_ = wf.help_write(st_)
+        else:
+            e = rng.integers(0, 5, 2).astype(np.uint32)
+            d = rng.integers(0, 5, 2).astype(np.uint32)
+            script.append(("cas", s, e, d))
+            st_, ok = wf.cas_batch(st_, jnp.asarray([s]), e[None], d[None])
+            outs.append(bool(ok[0]))
+    st_ = wf.help_write(st_)
+    script.append(("help",))             # mirror the final transfer
+    ref_vals, ref_outs = wf.oracle_apply(vals0, script)
+    np.testing.assert_array_equal(np.asarray(st_.z_value), ref_vals)
+    assert len(outs) == len(ref_outs)
+    for a, b in zip(outs, ref_outs):
+        if isinstance(b, bool):
+            assert a == b
+        else:
+            np.testing.assert_array_equal(a, b)

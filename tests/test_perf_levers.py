@@ -1,0 +1,70 @@
+"""The §Perf optimization levers must not change semantics:
+  loss_chunk     — chunked CE == monolithic CE (exact math, fp32);
+  score_dtype    — bf16 scores stay close to f32 scores;
+  moe_groups     — grouped dispatch == global dispatch when capacity is
+                   loose enough that neither drops tokens.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import forward, init_params, lm_loss
+
+
+def test_loss_chunk_matches_monolithic():
+    cfg = dataclasses.replace(get_config("deepseek_7b", reduced=True),
+                              param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = np.random.default_rng(0).integers(0, cfg.vocab, (2, 96))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    l0 = float(lm_loss(params, cfg, batch))
+    for nc in (2, 4):                       # incl. ragged 95 % 4 != 0
+        lc = float(lm_loss(params,
+                           dataclasses.replace(cfg, loss_chunk=nc), batch))
+        np.testing.assert_allclose(lc, l0, rtol=1e-5)
+
+
+def test_loss_chunk_gradients_match():
+    cfg = dataclasses.replace(get_config("deepseek_7b", reduced=True),
+                              param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    toks = np.random.default_rng(1).integers(0, cfg.vocab, (2, 64))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    g0 = jax.grad(lambda p: lm_loss(p, cfg, batch))(params)
+    g1 = jax.grad(lambda p: lm_loss(
+        p, dataclasses.replace(cfg, loss_chunk=4), batch))(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_score_dtype_bf16_close():
+    cfg = dataclasses.replace(get_config("deepseek_7b", reduced=True),
+                              param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = np.random.default_rng(0).integers(0, cfg.vocab, (2, 64))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    lo0, _, _ = forward(params, cfg, batch)
+    lo1, _, _ = forward(
+        params, dataclasses.replace(cfg, score_dtype="bfloat16"), batch)
+    a, b = np.asarray(lo0, np.float32), np.asarray(lo1, np.float32)
+    assert np.abs(a - b).max() < 0.15, np.abs(a - b).max()
+    assert (np.argmax(a, -1) == np.argmax(b, -1)).mean() > 0.97
+
+
+def test_moe_groups_match_global_dispatch():
+    cfg = get_config("mixtral_8x7b", reduced=True)
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32",
+                              moe_dropless=False, capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    toks = np.random.default_rng(2).integers(0, cfg.vocab, (2, 64))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    l0, _, _ = forward(params, cfg, batch)
+    l1, _, _ = forward(params, dataclasses.replace(cfg, moe_groups=4), batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,209 @@
+"""Fault-tolerance tests: atomic checkpoints, bit-identical preemption
+resume, straggler watchdog logic, elastic resharding (subprocess with 8
+placeholder devices), deterministic data pipeline."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, list_steps, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, reduced_shape
+from repro.data import DataPipeline, synthetic_batch
+from repro.runtime import PreemptionGuard, StragglerWatchdog
+from repro.runtime.stragglers import StragglerPlan
+
+
+# ---------------------------------------------------------------------------
+# checkpoint atomicity
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    state = {"a": jnp.arange(12.0).reshape(3, 4),
+             "b": {"c": jnp.int32(7)}}
+    d = str(tmp_path)
+    save_checkpoint(d, 10, state, meta={"next_step": 10})
+    # a fake interrupted write: staging dir with no manifest
+    os.makedirs(os.path.join(d, ".staging_dead"), exist_ok=True)
+    # and a torn final dir missing its manifest
+    os.makedirs(os.path.join(d, "step_00000020"), exist_ok=True)
+    assert list_steps(d) == [10]                 # torn ckpt invisible
+    got, meta = restore_checkpoint(d, 10, state)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(state["a"]))
+    assert int(got["b"]["c"]) == 7
+    assert meta["next_step"] == 10
+
+
+def test_preemption_guard_flag():
+    with PreemptionGuard() as g:
+        assert not g.should_stop
+        g.request_stop()
+        assert g.should_stop
+
+
+def test_preempt_resume_bit_identical(tmp_path):
+    """Train 8 steps straight vs 4 steps -> 'preempt' -> resume 4 more:
+    final params must be bit-identical."""
+    from repro.launch.train import train
+    cfg = get_config("deepseek_7b", reduced=True)
+    shape = reduced_shape(SHAPES["train_4k"])
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+
+    p_full, _, _ = train(cfg, shape, steps=8, ckpt_dir=d1, ckpt_every=100,
+                         log_every=0)
+
+    class StopAt:
+        def __init__(self, n):
+            self.n = n
+            self.seen = 0
+
+        @property
+        def should_stop(self):
+            self.seen += 1
+            return self.seen > self.n
+
+    train(cfg, shape, steps=8, ckpt_dir=d2, ckpt_every=100, log_every=0,
+          guard=StopAt(4))
+    assert latest_step(d2) == 5          # preempted after finishing step 5
+    p_res, _, _ = train(cfg, shape, steps=8, ckpt_dir=d2, ckpt_every=100,
+                        log_every=0)
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_after_patience():
+    w = StragglerWatchdog(n_hosts=4, threshold=1.5, patience=3,
+                          spares=["spare0"])
+    for _ in range(2):
+        plan = w.observe([1.0, 1.0, 1.0, 5.0])
+        assert plan.flagged == []                # patience not reached
+    plan = w.observe([1.0, 1.0, 1.0, 5.0])
+    assert plan.flagged == [3]
+    assert plan.swap == {3: "spare0"}
+    assert plan.shrink == []
+    # next flagged host has no spare left -> shrink plan
+    w2 = StragglerWatchdog(n_hosts=2, patience=1)
+    plan = w2.observe([1.0, 9.0])
+    assert plan.shrink == [1]
+
+
+def test_straggler_blip_does_not_flag():
+    w = StragglerWatchdog(n_hosts=3, patience=2)
+    w.observe([1.0, 1.0, 1.0])
+    plan = w.observe([1.0, 1.0, 30.0])           # one-off blip
+    assert plan.flagged == []
+    plan = w.observe([1.0, 1.0, 1.0])
+    assert plan.flagged == []                    # EWMA recovered
+
+
+# ---------------------------------------------------------------------------
+# elastic reshard (subprocess: 8 placeholder devices)
+# ---------------------------------------------------------------------------
+
+ELASTIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.checkpoint import save_checkpoint, restore_checkpoint
+    from repro.runtime import elastic_mesh, reshard_state
+    from repro.launch.steps import init_train_state, make_train_step
+    from repro.optim import AdamWConfig
+    from repro import dist
+
+    cfg = get_config("deepseek_7b", reduced=True)
+    opt_cfg = AdamWConfig(warmup=1, total_steps=4)
+    params, opt = init_train_state(cfg, opt_cfg, 0)
+
+    # save on a 4-device mesh
+    mesh4 = elastic_mesh(4, model_parallel=2, global_batch=2)
+    p4, o4 = reshard_state((params, opt), cfg, mesh4)
+    save_checkpoint("{d}", 1, (p4, o4), meta={{"next_step": 1}})
+
+    # restore + reshard onto an 8-device mesh, run one step
+    mesh8 = elastic_mesh(8, model_parallel=4, global_batch=2)
+    (p8, o8), _ = restore_checkpoint("{d}", 1, (params, opt))
+    p8, o8 = reshard_state((p8, o8), cfg, mesh8)
+    rules = dist.make_rules(cfg, mesh8)
+    from repro.configs.shapes import SHAPES, reduced_shape
+    from repro.data import synthetic_batch
+    batch = synthetic_batch(cfg, reduced_shape(SHAPES["train_4k"]),
+                            seed=0, step=0)
+    with dist.axis_rules(mesh8, rules):
+        import jax.numpy as jnp
+        step = jax.jit(make_train_step(cfg, opt_cfg))
+        p2, o2, m = step(p8, o8, jax.device_put(
+            batch, dist.batch_shardings(batch, mesh8, rules)))
+    assert np.isfinite(float(m["loss"]))
+    # leaves on mesh8 really are distributed over 8 devices
+    lead = jax.tree.leaves(p2)[1]
+    assert len(lead.sharding.device_set) in (2, 4, 8), lead.sharding
+    print("ELASTIC_OK", float(m["loss"]))
+""")
+
+
+def test_elastic_reshard_4_to_8_devices(tmp_path):
+    script = ELASTIC_SCRIPT.format(d=str(tmp_path))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism
+# ---------------------------------------------------------------------------
+
+def test_pipeline_pure_function_of_step():
+    cfg = get_config("deepseek_7b", reduced=True)
+    shape = reduced_shape(SHAPES["train_4k"])
+    p = DataPipeline(cfg, shape, seed=3)
+    b1 = p.batch(5)
+    b2 = DataPipeline(cfg, shape, seed=3).batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p.batch(6)["tokens"], b1["tokens"])
+
+
+def test_pipeline_host_sharding_assembles_global_batch():
+    """4-host shards concatenate to exactly the 1-host global batch, so an
+    elastic rescale does not perturb the data stream."""
+    cfg = get_config("deepseek_7b", reduced=True)
+    shape = reduced_shape(SHAPES["train_4k"])._replace(global_batch=4) \
+        if hasattr(reduced_shape(SHAPES["train_4k"]), "_replace") else None
+    from repro.configs.shapes import Shape
+    shape = Shape("train_4k", 64, 4, "train")
+    whole = synthetic_batch(cfg, shape, seed=1, step=2)["tokens"]
+    parts = [synthetic_batch(cfg, shape, seed=1, step=2, host_id=h,
+                             n_hosts=4)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), whole)
+
+
+def test_memmap_source(tmp_path):
+    from repro.data import make_memmap_corpus
+    cfg = get_config("deepseek_7b", reduced=True)
+    from repro.configs.shapes import Shape
+    shape = Shape("train_4k", 32, 2, "train")
+    path = make_memmap_corpus(str(tmp_path / "corpus.bin"), 32 * 64,
+                              cfg.vocab)
+    p = DataPipeline(cfg, shape, seed=0, source="memmap", memmap_path=path)
+    b = p.batch(0)
+    assert b["tokens"].shape == (2, 32)
+    assert (b["tokens"] < cfg.vocab).all()
+    np.testing.assert_array_equal(
+        b["tokens"],
+        DataPipeline(cfg, shape, seed=0, source="memmap",
+                     memmap_path=path).batch(0)["tokens"])

@@ -1,0 +1,121 @@
+"""Property tests: the vectorized linearizer is bit-identical to the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import semantics as sem
+
+
+def _random_state(rng, n, k):
+    data = rng.integers(0, 2**32, size=(n, k), dtype=np.uint32)
+    ver = np.zeros((n,), dtype=np.uint32)
+    return data, ver
+
+
+def _check_batch(data, ver, ops):
+    ref_data, ref_ver, ref_res = sem.apply_batch_reference(data, ver, ops)
+    out_data, out_ver, res, stats = sem.apply_batch(
+        jnp.asarray(data), jnp.asarray(ver), ops
+    )
+    np.testing.assert_array_equal(np.asarray(out_data), ref_data)
+    np.testing.assert_array_equal(np.asarray(out_ver), ref_ver)
+    np.testing.assert_array_equal(np.asarray(res.value), ref_res.value)
+    np.testing.assert_array_equal(np.asarray(res.success), ref_res.success)
+    return stats
+
+
+def test_all_loads():
+    rng = np.random.default_rng(0)
+    data, ver = _random_state(rng, 16, 4)
+    ops = sem.make_op_batch(
+        kind=np.full(8, sem.LOAD), slot=rng.integers(0, 16, 8), k=4
+    )
+    stats = _check_batch(data, ver, ops)
+    assert int(stats.rounds) == 0
+    assert int(stats.n_raced_loads) == 0
+
+
+def test_all_stores_same_slot():
+    rng = np.random.default_rng(1)
+    data, ver = _random_state(rng, 4, 2)
+    p = 7
+    ops = sem.make_op_batch(
+        kind=np.full(p, sem.STORE),
+        slot=np.zeros(p, np.int32),
+        desired=rng.integers(0, 2**32, (p, 2), dtype=np.uint32),
+        k=2,
+    )
+    stats = _check_batch(data, ver, ops)
+    assert int(stats.rounds) == p  # fully serialized
+
+
+def test_cas_chain():
+    # CAS chain: each CAS expects the previous CAS's desired value.
+    n, k, p = 2, 3, 6
+    data = np.zeros((n, k), np.uint32)
+    ver = np.zeros((n,), np.uint32)
+    desired = np.arange(1, p + 1, dtype=np.uint32)[:, None] * np.ones(k, np.uint32)
+    expected = np.concatenate([np.zeros((1, k), np.uint32), desired[:-1]])
+    ops = sem.OpBatch(
+        jnp.full((p,), sem.CAS, jnp.int32),
+        jnp.zeros((p,), jnp.int32),
+        jnp.asarray(expected),
+        jnp.asarray(desired),
+    )
+    stats = _check_batch(data, ver, ops)
+    assert int(stats.n_cas_fail) == 0
+
+
+def test_cas_all_same_expected_one_wins():
+    n, k, p = 1, 2, 5
+    data = np.zeros((n, k), np.uint32)
+    ver = np.zeros((n,), np.uint32)
+    expected = np.zeros((p, k), np.uint32)
+    desired = (np.arange(p, dtype=np.uint32)[:, None] + 1) * np.ones(k, np.uint32)
+    ops = sem.OpBatch(
+        jnp.full((p,), sem.CAS, jnp.int32), jnp.zeros((p,), jnp.int32),
+        jnp.asarray(expected), jnp.asarray(desired),
+    )
+    stats = _check_batch(data, ver, ops)
+    assert int(stats.n_cas_fail) == p - 1
+
+
+def test_idle_lanes_ignored():
+    rng = np.random.default_rng(3)
+    data, ver = _random_state(rng, 8, 2)
+    kind = np.array([sem.IDLE, sem.LOAD, sem.IDLE, sem.STORE], np.int32)
+    ops = sem.make_op_batch(
+        kind=kind, slot=np.array([0, 1, 2, 3], np.int32),
+        desired=rng.integers(0, 2**32, (4, 2), dtype=np.uint32), k=2,
+    )
+    _check_batch(data, ver, ops)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 32),
+    k=st.integers(1, 8),
+    p=st.integers(1, 64),
+    update_frac=st.floats(0.0, 1.0),
+    zipf=st.sampled_from([0.0, 1.2, 3.0]),
+)
+def test_linearizable_property(seed, n, k, p, update_frac, zipf):
+    rng = np.random.default_rng(seed)
+    data, ver = _random_state(rng, n, k)
+    ops = sem.random_batch(rng, p=p, n=n, k=k, update_frac=update_frac,
+                           zipf=zipf, current=data)
+    _check_batch(data, ver, ops)
+
+
+def test_version_parity_even_after_batches():
+    rng = np.random.default_rng(7)
+    data, ver = _random_state(rng, 8, 2)
+    data_j, ver_j = jnp.asarray(data), jnp.asarray(ver)
+    for step in range(3):
+        ops = sem.random_batch(rng, p=16, n=8, k=2, update_frac=0.8,
+                               current=np.asarray(data_j))
+        data_j, ver_j, _, _ = sem.apply_batch(data_j, ver_j, ops)
+    assert np.all(np.asarray(ver_j) % 2 == 0)
