@@ -1,0 +1,167 @@
+"""LL/SC + sync-queue workload family: op mix × contention × strategy.
+
+Two sweeps, both emitted to benchmarks/results/bench_llsc.json:
+
+  llsc   raw k-word LL/SC batches against a big-atomic table.  Op mix is
+         the LL fraction (the rest SC), contention is Zipfian slot skew z:
+         as z grows, more SCs collide on hot cells and only one per cell
+         per batch can win, so the success rate and effective Mops/s fall —
+         the batch-step analogue of CAS retry storms.  bytes/op and rmw/op
+         come from the same modeled Traffic terms as bench_atomics.
+
+  queue  bounded MPMC ring drains (p enqueuers then p dequeuers, and a
+         mixed half/half race) under the three contention-management
+         policies of Dice et al. (none / const / capped-exp backoff).
+         rounds/op is the wasted-work metric: every round a lane spends
+         retrying or backing off is a round it isn't serving traffic.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_llsc [--quick] [--tiny]
+
+--tiny is the CI smoke mode (a few seconds): one strategy, one size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_table, save_results, time_op
+from repro.core import bigatomic as ba
+from repro.sync import llsc
+from repro.sync.queue import DEQ, ENQ, BackoffPolicy, BigQueue
+
+STRATEGIES = ["seqlock", "indirect", "cached_wf", "cached_me"]
+POLICIES = [BackoffPolicy("none"), BackoffPolicy("const", 1),
+            BackoffPolicy("exp", 1, 4)]
+CONTENTION_Z = [0.0, 0.9, 2.0]        # >= 3 contention levels (acceptance)
+
+
+def _llsc_batch(rng, *, p, n, k, ll_frac, z):
+    kind = np.where(rng.random(p) < ll_frac, llsc.LL, llsc.SC).astype(
+        np.int32)
+    if z <= 0.0:
+        slots = rng.integers(0, n, p)
+    else:
+        slots = (rng.zipf(max(z, 1.01), size=p) - 1) % n
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    return llsc.make_sync_batch(kind, slots.astype(np.int32), desired, k=k)
+
+
+def run_llsc_cell(strategy, *, n, k, p, ll_frac, z, reps=3, seed=0):
+    rng = np.random.default_rng(seed)
+    state = ba.init(n, k, strategy, p_max=p)
+    ctx = llsc.init_ctx(p, k)
+    # link every lane first so the SC lanes have something to commit against
+    ctx, _ = llsc.ll(state, ctx,
+                     (rng.zipf(max(z, 1.01), size=p) - 1) % n if z > 0
+                     else rng.integers(0, n, p), strategy=strategy, k=k)
+    ops = _llsc_batch(rng, p=p, n=n, k=k, ll_frac=ll_frac, z=z)
+    # SC lanes must target their linked slot to be meaningful
+    slots = np.where(np.asarray(ops.kind) == llsc.SC,
+                     np.asarray(ctx.slot), np.asarray(ops.slot))
+    ops = llsc.SyncOpBatch(ops.kind, np.asarray(slots, np.int32),
+                           ops.desired)
+
+    def step(state, ctx, ops):
+        return llsc.apply_sync(state, ctx, ops, strategy=strategy, k=k)
+
+    dt, (st2, ctx2, res, stats, traffic) = time_op(step, state, ctx, ops,
+                                                   reps=reps)
+    n_sc = int(stats.n_updates) + int(stats.n_cas_fail)
+    return {
+        "strategy": strategy, "n": n, "k": k, "p": p,
+        "ll_frac": ll_frac, "z": z,
+        "mops_s": p / dt / 1e6,
+        "sc_success": (int(stats.n_updates) / n_sc) if n_sc else 1.0,
+        "bytes_op": float((traffic.bytes_read + traffic.bytes_written) / p),
+        "rmw_op": float(traffic.rmw_ops / p),
+    }
+
+
+def run_queue_cell(strategy, policy: BackoffPolicy, *, capacity, p, k=2,
+                   seed=0):
+    rng = np.random.default_rng(seed)
+
+    def drive(q):
+        vals = rng.integers(0, 2 ** 32, p, dtype=np.uint32)
+        s1 = q.enqueue_batch(vals)
+        out, s2 = q.dequeue_batch(p)
+        # mixed race: half enqueue, half dequeue, same call
+        kinds = np.asarray([ENQ, DEQ] * (p // 2) or [ENQ, DEQ])
+        mix_vals = rng.integers(0, 2 ** 32, (len(kinds), k - 1),
+                                dtype=np.uint32)
+        _, s3, r_mix = q.run_batch(kinds, mix_vals)
+        return int(s1.sum() + s2.sum() + s3.sum()), r_mix, int(s3.sum())
+
+    def fresh():
+        return BigQueue(capacity, k=k, strategy=strategy, policy=policy,
+                        p_max=p)
+
+    drive(fresh())                   # warmup: pay JIT outside the clock
+    import time as _time
+    q = fresh()
+    t0 = _time.perf_counter()
+    n_ops, r_mix, n_mix = drive(q)
+    dt = _time.perf_counter() - t0
+    return {
+        "strategy": strategy, "policy": policy.kind,
+        "capacity": capacity, "p": p,
+        "ops_s": n_ops / dt,
+        "rounds_mixed": r_mix,
+        "rounds_per_op": r_mix / max(n_mix, 1),
+        "committed": len(q.commit_log),
+    }
+
+
+def main(quick: bool = False, tiny: bool = False):
+    strategies = ["cached_me"] if tiny else STRATEGIES
+    n = 256 if tiny else (1 << 10 if quick else 1 << 14)
+    p = 64 if tiny else (256 if quick else 1024)
+    k = 4
+
+    llsc_rows = []
+    for z in CONTENTION_Z:
+        for ll_frac in ([0.5] if tiny else [0.9, 0.5, 0.1]):
+            for s in strategies:
+                llsc_rows.append(run_llsc_cell(
+                    s, n=n, k=k, p=p, ll_frac=ll_frac, z=z,
+                    reps=1 if tiny else 3))
+    print_table("LL/SC: op mix x contention x strategy", llsc_rows,
+                ["strategy", "z", "ll_frac", "mops_s", "sc_success",
+                 "bytes_op", "rmw_op"])
+
+    queue_rows = []
+    lanes = [4] if tiny else [2, 8, 16]          # queue contention levels
+    cap = 8 if tiny else 16
+    for p_lanes in lanes:
+        for policy in (POLICIES[:1] if tiny else POLICIES):
+            for s in (["cached_me"] if tiny else ["seqlock", "cached_me"]):
+                queue_rows.append(run_queue_cell(
+                    s, policy, capacity=cap, p=p_lanes))
+    print_table("MPMC queue: contention x backoff policy", queue_rows,
+                ["strategy", "policy", "p", "ops_s", "rounds_mixed",
+                 "rounds_per_op"])
+
+    payload = {"llsc": llsc_rows, "queue": queue_rows}
+    path = save_results("bench_llsc", payload)
+    print(f"\nresults -> {path}")
+
+    # soft paper-claim checks
+    by_z = {}
+    for r in llsc_rows:
+        by_z.setdefault(r["z"], []).append(r["sc_success"])
+    rates = [float(np.mean(v)) for _, v in sorted(by_z.items())]
+    print(f"[check] SC success vs contention z {sorted(by_z)}: "
+          f"{[f'{r:.2f}' for r in rates]} -> "
+          f"{'OK' if rates[0] >= rates[-1] else 'UNEXPECTED'} "
+          f"(skew should cost success)")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick, tiny=args.tiny)

@@ -18,7 +18,7 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_atomics, bench_cachehash, bench_distributed,
-                        bench_memory, bench_torn)
+                        bench_llsc, bench_memory, bench_torn)
 
 
 def main():
@@ -32,6 +32,7 @@ def main():
         ("atomics (Fig 2)", bench_atomics.main),
         ("cachehash (Figs 3-4)", bench_cachehash.main),
         ("torn-state / oversubscription (Fig 2 right)", bench_torn.main),
+        ("llsc + sync queue (LL/SC application)", bench_llsc.main),
         ("memory (Table 1)", bench_memory.main),
         ("distributed table (beyond paper)", bench_distributed.main),
     ]

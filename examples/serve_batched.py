@@ -54,7 +54,7 @@ def main():
         steps += 1
         if steps % 2 == 0 and pending:
             eng.submit(pending.pop(0))
-        if live == 0 and not pending and not eng.queue:
+        if live == 0 and not pending and not eng.pending():
             break
     dt = time.time() - t0
     out = {r.rid: r.out_tokens for r in eng.requests.values()}

@@ -1,0 +1,11 @@
+"""Big Atomics reproduction: k-word atomic cells, lock-free structures built
+on them (CacheHash, multiversion stores, LL/SC + queues), and a jax_pallas
+training/serving stack that exercises them at production scale.
+
+Subpackage map:
+  core      — big-atomic strategies, batch linearization semantics, CacheHash
+  sync      — LL/SC, atomic copy, MPMC ring queue (DESIGN.md §4)
+  kernels   — Pallas TPU kernels + pure-jnp oracles
+  serving   — paged-KV continuous-batching engine (DESIGN.md §3)
+  models/optim/data/launch/runtime — the surrounding training system
+"""

@@ -1,0 +1,142 @@
+"""Minimal deterministic stand-in for `hypothesis`.
+
+Installed into ``sys.modules`` by the root conftest.py ONLY when the real
+package is absent (the pinned CI image does not bake it), so the property
+tests still *run* — they draw `max_examples` pseudo-random examples from a
+PRNG seeded by the test's qualified name, with light endpoint biasing.
+There is no shrinking and no example database; a failure reports the raw
+falsifying example.  Supports exactly the subset this repo uses:
+
+    @settings(max_examples=..., deadline=...)
+    @given(x=st.integers(a, b), ...)
+    st.integers / st.floats / st.booleans / st.sampled_from
+    assume(...)
+
+If the real hypothesis is installed, this module is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): the example is discarded, not failed."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def note(message):  # parity stub; real hypothesis attaches it to the report
+    print(f"[hypothesis-shim note] {message}")
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng=None):
+        rng = rng or np.random.default_rng(0)
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return int(min_value)
+        if r < 0.10:
+            return int(max_value)
+        return int(rng.integers(min_value, max_value, endpoint=True))
+    return _Strategy(draw)
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return float(min_value + (max_value - min_value) * rng.random())
+    return _Strategy(draw)
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.random() < 0.5))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+
+
+class settings:
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+class HealthCheck:
+    # accessed as settings(suppress_health_check=[...]) in the wild; any
+    # attribute works as an opaque token here
+    too_slow = data_too_large = filter_too_much = all = object()
+
+
+def given(**strats):
+    """Decorator: call the test with `max_examples` drawn keyword examples."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_shim_settings", None)
+                   or getattr(fn, "_shim_settings", None))
+            n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8")))
+            tried = 0
+            budget = n * 10            # assume() discard allowance
+            while tried < n and budget > 0:
+                budget -= 1
+                example = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **example, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (shim, try {tried}): "
+                        f"{fn.__name__}({example})") from e
+                tried += 1
+
+        # pytest must not see the strategy kwargs as fixture requests
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,143 @@
+"""Logical-axis sharding annotations + mesh rule tables.
+
+Models annotate intermediates with *logical* axis names
+(``dist.shard(x, "batch", "seq", "heads", None)``) and stay mesh-agnostic:
+outside an ``axis_rules`` context the annotation is a no-op, inside one it
+lowers to ``with_sharding_constraint`` against the active mesh.  The rules
+table maps logical names to mesh axes:
+
+    batch                  -> ('pod', 'data')   whichever exist on the mesh
+    seq                    -> replicated (no context parallelism by default)
+    heads / kv_heads / mlp / vocab / experts / expert_mlp
+                           -> 'model'           when the mesh has one
+
+An annotation silently drops a mapping when the dimension is not divisible
+by the mapped axis size, or when the mesh axis is already used by an earlier
+dimension of the same array — so reduced test configs and laptop meshes
+never fail to compile, they just shard less.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import NamedTuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axes that map onto the tensor/expert-parallel mesh axis.
+MODEL_AXES = ("heads", "kv_heads", "mlp", "vocab", "experts", "expert_mlp",
+              "embed")
+
+
+def make_rules(cfg, mesh: Mesh) -> dict:
+    """Logical-name -> mesh-axis table for this (config, mesh) pair."""
+    axes = set(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    model = "model" if "model" in axes else None
+    rules: dict = {"batch": batch or None, "seq": None}
+    for name in MODEL_AXES:
+        rules[name] = model
+    return rules
+
+
+class _Ctx(NamedTuple):
+    mesh: Mesh
+    rules: dict
+
+
+_STACK: list[_Ctx] = []
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict):
+    """Activate (mesh, rules) for `shard` annotations traced inside."""
+    _STACK.append(_Ctx(mesh, rules))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _spec(shape, names, mesh: Mesh, rules: dict) -> P:
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, names):
+        mapped = rules.get(name) if name is not None else None
+        if mapped is None:
+            out.append(None)
+            continue
+        axes = mapped if isinstance(mapped, tuple) else (mapped,)
+        axes = tuple(a for a in axes if a not in used)
+        n = math.prod(sizes[a] for a in axes) if axes else 1
+        if n <= 1 or dim % n != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def shard(x, *names):
+    """Constrain `x` (rank == len(names)) to its logical-axis sharding.
+
+    No-op outside an `axis_rules` context, so models, kernels and tests run
+    unchanged on a single device.
+    """
+    if not _STACK:
+        return x
+    ctx = _STACK[-1]
+    if x.ndim != len(names):
+        raise ValueError(f"shard(): rank {x.ndim} != {len(names)} names")
+    spec = _spec(x.shape, names, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Whole-pytree shardings (device_put / jit in_shardings)
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch, mesh: Mesh, rules: dict):
+    """Data-parallel shardings for an input pytree: leading axis over the
+    batch mesh axes when divisible, replicated otherwise.  Works on arrays
+    and ShapeDtypeStructs alike."""
+    baxes = rules.get("batch") or ()
+    baxes = baxes if isinstance(baxes, tuple) else (baxes,)
+    sizes = _axis_sizes(mesh)
+    n = math.prod(sizes[a] for a in baxes) if baxes else 1
+
+    def leaf(x):
+        if n > 1 and getattr(x, "ndim", 0) >= 1 and x.shape[0] % n == 0:
+            ax = baxes if len(baxes) > 1 else baxes[0]
+            return NamedSharding(mesh, P(ax))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf, batch)
+
+
+def param_shardings(params, cfg, mesh: Mesh, rules: dict):
+    """Tensor-parallel shardings for a parameter pytree: the largest dim
+    divisible by the 'model' axis shards over it; everything else (norm
+    scales, odd shapes) replicates.  Mirrored by optimizer moments."""
+    sizes = _axis_sizes(mesh)
+    model_n = sizes.get("model", 1)
+
+    def leaf(x):
+        shape = getattr(x, "shape", ())
+        if model_n > 1 and len(shape) >= 2:
+            dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in dims:
+                if shape[i] >= model_n and shape[i] % model_n == 0:
+                    ax: list = [None] * len(shape)
+                    ax[i] = "model"
+                    return NamedSharding(mesh, P(*ax))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf, params)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused validate + conditional-commit for one SC round.
+
+`repro.sync.llsc` proves that an SC batch linearizes in ONE round (at most
+one SC per cell can succeed per batch), so the whole commit is a single
+embarrassingly-parallel pass once same-cell losers are filtered: for each
+live lane, validate the link (`meta[slot,0] == link_version`) and, iff it
+holds, write the k-word payload and bump the version — fused so the cell row
+makes one trip through VMEM instead of a validate gather followed by a
+separate commit scatter.
+
+Same BlockSpec routing idiom as `cas_apply.py`: grid step i owns lane i, the
+scalar-prefetched slot vector routes the cell's data and meta rows in and
+back out via input/output aliasing.  Host contract (mirrors cas_apply's
+round invariant): live lanes target DISTINCT cells; dead lanes point at the
+reserved dummy row n and benignly rewrite it.  CAS-failure semantics are an
+idempotent write-back of the unchanged row (no conditional DMA on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(slot_ref, data_ref, meta_ref, live_ref, ver_ref, des_ref,
+            out_data_ref, out_meta_ref, succ_ref, wit_ref):
+    cur = data_ref[...]                       # [1, k] current cell value
+    live = live_ref[0, 0] != 0
+    ver = meta_ref[0, 0]
+    ok = jnp.logical_and(live, ver == ver_ref[0, 0])   # link still valid?
+    out_data_ref[...] = jnp.where(ok, des_ref[...], cur)
+    out_meta_ref[0, 0] = ver + 2 * ok.astype(jnp.uint32)
+    out_meta_ref[0, 1] = meta_ref[0, 1]
+    succ_ref[0, 0] = ok.astype(jnp.int32)
+    wit_ref[...] = cur
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def llsc_commit_round(data: jax.Array, meta: jax.Array, slot: jax.Array,
+                      live: jax.Array, link_ver: jax.Array,
+                      desired: jax.Array, *, interpret: bool = False):
+    """One fused SC commit round.  data: uint32[n+1, k] (row n = dummy);
+    meta: uint32[n+1, 2] (word0 = version); slot: int32[p] (dead lanes -> n);
+    live: int32[p]; link_ver: uint32[p]; desired: uint32[p, k].
+
+    Returns (data', meta', success int32[p,1], witness uint32[p,k]).
+    Live slots must be distinct (winners of the jnp eligibility pass, or
+    cells known disjoint by construction, e.g. a queue's head/tail cells).
+    """
+    n1, k = data.shape
+    p = slot.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, s: (s[i], 0)),    # data row
+            pl.BlockSpec((1, 2), lambda i, s: (s[i], 0)),    # meta row
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # live flag
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # link version
+            pl.BlockSpec((1, k), lambda i, s: (i, 0)),       # desired
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, s: (s[i], 0)),    # data row back
+            pl.BlockSpec((1, 2), lambda i, s: (s[i], 0)),    # meta row back
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # success
+            pl.BlockSpec((1, k), lambda i, s: (i, 0)),       # witness
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n1, k), data.dtype),
+            jax.ShapeDtypeStruct((n1, 2), meta.dtype),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, k), data.dtype),
+        ],
+        # aliasing indices count ALL inputs incl. the scalar-prefetch operand
+        # (slot=0), so data=1, meta=2
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(slot, data, meta, live.reshape(p, 1).astype(jnp.int32),
+      link_ver.reshape(p, 1).astype(meta.dtype), desired)

@@ -58,6 +58,33 @@ def cas_apply_round_ref(data, meta, slot, kind, expected, desired):
             jnp.asarray(wit))
 
 
+def llsc_commit_round_ref(data, meta, slot, live, link_ver, desired):
+    """Sequential oracle of one fused SC commit round (distinct live slots).
+
+    Returns (data', meta', success[p,1], witness[p,k])."""
+    import numpy as np
+    data = np.array(data, copy=True)
+    meta = np.array(meta, copy=True)
+    slot = np.asarray(slot)
+    live = np.asarray(live).reshape(-1)
+    link_ver = np.asarray(link_ver).reshape(-1)
+    desired = np.asarray(desired)
+    p, k = desired.shape
+    succ = np.zeros((p, 1), np.int32)
+    wit = np.zeros((p, k), data.dtype)
+    for i in range(p):
+        s = slot[i]
+        cur = data[s].copy()
+        wit[i] = cur
+        ok = bool(live[i]) and meta[s, 0] == link_ver[i]
+        if ok:
+            data[s] = desired[i]
+            meta[s, 0] += 2
+            succ[i, 0] = 1
+    return (jnp.asarray(data), jnp.asarray(meta), jnp.asarray(succ),
+            jnp.asarray(wit))
+
+
 def cachehash_probe_ref(cells, bucket_idx, query_keys, *, kw, vw):
     """(hit[q,1], empty[q,1], value[q,vw], next[q,1])."""
     from repro.kernels.cachehash_probe import FULL

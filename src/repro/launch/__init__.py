@@ -1,0 +1,2 @@
+"""Launch entry points: train / serve loops, mesh construction, input specs,
+and the multi-pod dry-run (`python -m repro.launch.dryrun`)."""

@@ -47,7 +47,8 @@ def main():
 
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         n_pages=args.n_pages, page_size=args.page_size,
-                        strategy=args.strategy)
+                        strategy=args.strategy,
+                        max_queue=max(args.requests, 256))
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for rid in range(args.requests):

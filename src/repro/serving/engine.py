@@ -9,6 +9,13 @@ lock-free property the paper buys us: page-table readers (decoding slots)
 never block on table writers (admission/retirement), in the batched-step
 sense established in DESIGN.md §2.
 
+The whole admission path is lock-free big atomics (DESIGN.md §4): request
+intake is an MPMC `repro.sync.queue.BigQueue` of request ids, decode-slot
+claim/retirement is a second BigQueue cycling the slot indices, and the
+physical-page free list inside `paged_kv` is a third — every claim an LL/SC
+on a big-atomic counter cell, so admission, slot recycling and page
+allocation never take a lock against the decoding readers.
+
 Scope: archs whose layers are all full attention (dense / moe / vlm
 backbones).  SWA / SSM / hybrid archs serve through the dense slot-state path
 (`make_serve_step`) since their state is O(1) or ring-buffered per sequence —
@@ -27,6 +34,7 @@ import numpy as np
 from repro.models.common import ModelConfig
 from repro.models.transformer import forward
 from repro.serving import paged_kv as pk
+from repro.sync.queue import BigQueue
 
 
 @dataclasses.dataclass
@@ -52,7 +60,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  n_pages: int = 256, page_size: int = 16,
                  max_pages_per_seq: int = 32, strategy: str = "cached_me",
-                 seed: int = 0):
+                 max_queue: int = 256, seed: int = 0):
         assert all(k == "attn" for k in cfg.layer_kinds) and \
             cfg.causal and cfg.window == 0, \
             "paged engine serves causal full-attention archs; use " \
@@ -64,7 +72,12 @@ class ServingEngine:
         self.paged = pk.init_paged(cfg, n_pages, page_size, max_batch,
                                    strategy)
         self.slots = [_Slot() for _ in range(max_batch)]
-        self.queue: list[Request] = []
+        # Lock-free intake: rids wait in an MPMC big-atomic queue; decode
+        # slots cycle through a second one (claim = dequeue, retire = enq).
+        self.admit_q = BigQueue(max(max_queue, 2), k=2, strategy=strategy)
+        self.slot_q = BigQueue(max(max_batch, 2), k=2, strategy=strategy,
+                               initial_items=np.arange(max_batch,
+                                                       dtype=np.uint32))
         self.requests: dict[int, Request] = {}
         self._next_seq = 0
         self._key = jax.random.PRNGKey(seed)
@@ -73,8 +86,14 @@ class ServingEngine:
     # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request):
+        """Lock-free intake: the request id rides the admission queue; the
+        Request object is parked in the host-side registry."""
+        if req.rid < 0 or req.rid >= 2 ** 32:
+            raise ValueError("rid must fit in a uint32 payload word")
+        ok = self.admit_q.enqueue_batch(np.asarray([req.rid], np.uint32))
+        if not ok[0]:
+            raise RuntimeError("admission queue full")
         self.requests[req.rid] = req
-        self.queue.append(req)
 
     def step(self):
         """Admit waiting requests into free slots, then decode one token for
@@ -85,40 +104,73 @@ class ServingEngine:
             self._decode(live)
         return len(live)
 
+    def pending(self) -> int:
+        """Requests waiting in the admission queue (a counter-cell read)."""
+        return len(self.admit_q)
+
     def run_to_completion(self, max_steps: int = 1000):
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if not self.step() and not self.pending():
                 break
         return {r.rid: r.out_tokens for r in self.requests.values()}
 
     # -- admission / prefill -------------------------------------------------
 
     def _admit(self):
-        for slot in self.slots:
-            if slot.active or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            seq_id = self._next_seq
-            self._next_seq += 1
-            T = len(req.prompt)
-            P = self.paged.page_size
-            n_pages = (T + P - 1) // P
-            # prefill forward (batch of one) -> per-layer K/V for the prompt
-            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-            if self.cfg.family == "vlm":
-                batch["positions"] = jnp.broadcast_to(
-                    jnp.arange(T, dtype=jnp.int32)[None, :, None], (1, T, 3))
-            logits, cache, _ = forward(self.params, self.cfg, batch,
-                                       mode="prefill")
-            k, v = self._cache_to_layers(cache)          # [L, T, kvh, hd]
-            self.paged, phys = pk.alloc_pages(
-                self.paged, [seq_id] * n_pages, list(range(n_pages)))
-            self.paged = pk.write_prompt(self.paged, phys, k, v)
-            # first generated token comes from the prefill logits
-            tok = self._sample(logits[:, -1])
-            req.out_tokens.append(int(tok[0]))
-            slot.rid, slot.seq_id, slot.pos = req.rid, seq_id, T
-            slot.new_tokens, slot.active = 1, True
+        """Claim (request, slot) pairs through the two big-atomic queues."""
+        n = min(len(self.admit_q), len(self.slot_q))
+        if not n:
+            return
+        rids, ok_r = self.admit_q.dequeue_batch(n)
+        slot_ids, ok_s = self.slot_q.dequeue_batch(n)
+        assert ok_r.all() and ok_s.all()      # sole consumer of both queues
+        pairs = [(int(r), int(s)) for r, s in zip(rids[:, 0], slot_ids[:, 0])]
+        for j, (rid, si) in enumerate(pairs):
+            try:
+                self._prefill_into(si, self.requests[rid])
+            except Exception:
+                # The failing request is dropped (as the old pop-then-raise
+                # path did), but its slot and every not-yet-admitted pair go
+                # back on their rings so nothing leaks.  FIFO is preserved:
+                # anything submitted later is drained and re-enqueued BEHIND
+                # the survivors of this admission round.
+                self.slot_q.enqueue_batch(
+                    np.asarray([si] + [s for _, s in pairs[j + 1:]],
+                               np.uint32))
+                survivors = [r for r, _ in pairs[j + 1:]]
+                depth = len(self.admit_q)
+                if survivors:
+                    later = []
+                    if depth:
+                        vals, ok = self.admit_q.dequeue_batch(depth)
+                        later = [int(v) for v in vals[ok, 0]]
+                    self.admit_q.enqueue_batch(
+                        np.asarray(survivors + later, np.uint32))
+                raise
+
+    def _prefill_into(self, slot_idx: int, req: Request):
+        slot = self.slots[slot_idx]
+        seq_id = self._next_seq
+        self._next_seq += 1
+        T = len(req.prompt)
+        P = self.paged.page_size
+        n_pages = (T + P - 1) // P
+        # prefill forward (batch of one) -> per-layer K/V for the prompt
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        if self.cfg.family == "vlm":
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[None, :, None], (1, T, 3))
+        logits, cache, _ = forward(self.params, self.cfg, batch,
+                                   mode="prefill")
+        k, v = self._cache_to_layers(cache)          # [L, T, kvh, hd]
+        self.paged, phys = pk.alloc_pages(
+            self.paged, [seq_id] * n_pages, list(range(n_pages)))
+        self.paged = pk.write_prompt(self.paged, phys, k, v)
+        # first generated token comes from the prefill logits
+        tok = self._sample(logits[:, -1])
+        req.out_tokens.append(int(tok[0]))
+        slot.rid, slot.seq_id, slot.pos = req.rid, seq_id, T
+        slot.new_tokens, slot.active = 1, True
 
     def _cache_to_layers(self, cache):
         ks, vs = [], []
@@ -203,6 +255,7 @@ class ServingEngine:
         used = (slot.pos + P) // P          # pages incl. current partial
         self.paged = pk.free_pages(self.paged, slot.seq_id, used)
         self.slots[i] = _Slot()
+        self.slot_q.enqueue_batch(np.asarray([i], np.uint32))
 
     def _sample(self, logits):
         if self.requests and all(r.temperature == 0.0

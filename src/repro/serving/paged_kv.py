@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import cachehash as ch
 from repro.models.common import ModelConfig
+from repro.sync.queue import BigQueue
 
 SEQ_SHIFT = 20                     # key = seq_id << 20 | page_no
 PAGE_MASK = (1 << SEQ_SHIFT) - 1
@@ -35,10 +36,16 @@ PAGE_MASK = (1 << SEQ_SHIFT) - 1
 
 class PagedKV(NamedTuple):
     table: ch.HashState            # page table (big-atomic CacheHash)
+    strategy: str                  # big-atomic strategy of table + free ring
     k_pages: jax.Array             # [L_attn, n_pages, P, kvh, hd]
     v_pages: jax.Array
     states: dict                   # recurrent per-slot states (ssm/rglru)
-    free: np.ndarray               # host free-list of physical pages (LIFO)
+    free: BigQueue                 # physical pages wait in a big-atomic
+    #                                MPMC ring (alloc = dequeue, DESIGN.md §4)
+    #                                NOTE: mutated in place — unlike the
+    #                                array fields, `free` is shared across
+    #                                `_replace` copies, so a PagedKV is not a
+    #                                snapshot; the engine is its sole owner.
     page_size: int
 
 
@@ -65,12 +72,18 @@ def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
             states[f"layer{j}"] = ssm_mod.init_ssm_cache(max_seqs, cfg, dt)
         elif kind == "rglru":
             states[f"layer{j}"] = rglru_mod.init_rglru_cache(max_seqs, cfg, dt)
+    # Descending order preserves the old LIFO head's allocation sequence.
+    free = BigQueue(max(n_pages, 2), k=2, strategy=strategy,
+                    p_max=max(max_seqs, 64),
+                    initial_items=np.arange(n_pages - 1, -1, -1,
+                                            dtype=np.uint32))
     return PagedKV(
         table=table,
+        strategy=str(strategy),
         k_pages=jnp.zeros(kv, dt),
         v_pages=jnp.zeros(kv, dt),
         states=states,
-        free=np.arange(n_pages - 1, -1, -1, dtype=np.int32),  # LIFO
+        free=free,
         page_size=page_size,
     )
 
@@ -81,20 +94,22 @@ def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def alloc_pages(paged: PagedKV, seq_ids, page_nos) -> tuple[PagedKV, jax.Array]:
     """Map (seq, page_no) -> fresh physical pages via CacheHash insert
-    (a CAS-install on the bucket big atomic).  Returns (state', phys[q])."""
+    (a CAS-install on the bucket big atomic).  Physical pages come off the
+    big-atomic free ring (LL/SC dequeues).  Returns (state', phys[q])."""
     q = len(seq_ids)
     if q > len(paged.free):
         raise RuntimeError(f"out of KV pages ({q} wanted, "
                            f"{len(paged.free)} free)")
-    phys = paged.free[:q].copy()
-    free = paged.free[q:]
+    vals, ok = paged.free.dequeue_batch(q)
+    assert ok.all()                       # guarded by the length check above
+    phys = vals[:, 0].astype(np.int32)
     keys = page_key(jnp.asarray(seq_ids, jnp.uint32),
                     jnp.asarray(page_nos, jnp.uint32))
     ops = ch.OpBatch(jnp.full((q,), ch.INSERT, jnp.int32), keys,
                      jnp.asarray(phys[:, None], jnp.uint32))
-    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy="cached_me",
+    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy=paged.strategy,
                                       inline=True, vw=1)
-    return paged._replace(table=table, free=free), jnp.asarray(phys)
+    return paged._replace(table=table), jnp.asarray(phys)
 
 
 def lookup_pages(paged: PagedKV, seq_ids, n_pages_per_seq: int):
@@ -107,7 +122,7 @@ def lookup_pages(paged: PagedKV, seq_ids, n_pages_per_seq: int):
     keys = page_key(seq_ids[:, None], pages[None, :]).reshape(-1)
     ops = ch.OpBatch(jnp.full((keys.shape[0],), ch.FIND, jnp.int32), keys,
                      jnp.zeros((keys.shape[0], 1), jnp.uint32))
-    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy="cached_me",
+    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy=paged.strategy,
                                       inline=True, vw=1)
     phys = jnp.where(res.found, res.value[:, 0].astype(jnp.int32), -1)
     return paged._replace(table=table), phys.reshape(b, n_pages_per_seq)
@@ -124,14 +139,16 @@ def free_pages(paged: PagedKV, seq_id: int, n_pages_used: int) -> PagedKV:
     find_ops = ch.OpBatch(jnp.full((n_pages_used,), ch.FIND, jnp.int32),
                           keys, jnp.zeros((n_pages_used, 1), jnp.uint32))
     table, res, _ = ch.apply_hash_ops(paged.table, find_ops,
-                                      strategy="cached_me", inline=True, vw=1)
+                                      strategy=paged.strategy, inline=True, vw=1)
     phys = np.asarray(res.value[:, 0], np.int32)[np.asarray(res.found)]
     del_ops = ch.OpBatch(jnp.full((n_pages_used,), ch.DELETE, jnp.int32),
                          keys, jnp.zeros((n_pages_used, 1), jnp.uint32))
-    table, _, _ = ch.apply_hash_ops(table, del_ops, strategy="cached_me",
+    table, _, _ = ch.apply_hash_ops(table, del_ops, strategy=paged.strategy,
                                     inline=True, vw=1)
-    return paged._replace(table=table,
-                          free=np.concatenate([phys, paged.free]))
+    if len(phys):
+        ok = paged.free.enqueue_batch(phys.astype(np.uint32))
+        assert ok.all()                   # ring is sized to hold every page
+    return paged._replace(table=table)
 
 
 # ---------------------------------------------------------------------------

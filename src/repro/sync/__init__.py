@@ -1,0 +1,22 @@
+"""repro.sync — retry-safe synchronization primitives over big atomics.
+
+Layered exactly as Blelloch & Wei ("LL/SC and Atomic Copy") prescribe:
+
+  llsc        k-word load-linked / store-conditional / validate, with
+              per-lane link contexts over a `bigatomic.TableState`
+  atomic_copy linearizable big-atomic -> big-atomic copy built on LL/SC
+  queue       bounded MPMC ring queue (Vyukov-style tickets) whose head,
+              tail and slot cells are big atomics driven through LL/SC,
+              with Dice-style bounded-backoff contention management
+
+See DESIGN.md §4 for the batch-step concurrency model.
+"""
+
+from repro.sync.llsc import (  # noqa: F401
+    IDLE, LL, SC, VL, LinkCtx, SyncOpBatch, SyncResult, apply_sync,
+    apply_sync_reference, init_ctx, make_sync_batch,
+)
+from repro.sync.atomic_copy import (  # noqa: F401
+    copy_batch, copy_batch_reference,
+)
+from repro.sync.queue import BackoffPolicy, BigQueue  # noqa: F401

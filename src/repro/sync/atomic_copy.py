@@ -1,0 +1,82 @@
+"""Linearizable big-atomic -> big-atomic copy, built on LL/SC.
+
+Blelloch & Wei's atomic copy reads a source cell and writes its k words to a
+destination cell so that the whole transfer is observable at a single point.
+In the batch-step model a `copy_batch` call applies q copies in lane order;
+copies may chain (lane j's source is lane i's destination) and may collide
+(two lanes, one destination) — the sequential oracle defines the result.
+
+Implementation: lanes are scheduled into *waves* such that no lane shares a
+source-after-write or destination with an earlier unfinished lane.  A wave
+runs the LL/SC protocol verbatim:
+
+  1. LL every destination           (links dst at its current version)
+  2. read every source through the honest `read_protocol`
+  3. SC every destination with the source bytes
+
+Within a wave nothing intervenes between a lane's source read and its SC —
+the SC is the linearization point and always succeeds, so the wave loop
+terminates in at most q waves.  Wave scheduling is host-side (numpy) because
+the conflict graph is data-dependent; each wave's table work is the jitted
+`apply_sync` path, so every strategy's layout maintenance is exercised.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigatomic as ba
+from repro.sync import llsc
+
+
+def copy_batch_reference(data: np.ndarray, version: np.ndarray,
+                         src: np.ndarray, dst: np.ndarray):
+    """Sequential oracle: copies applied one at a time in lane order."""
+    data = np.array(data, copy=True)
+    version = np.array(version, copy=True)
+    for s, d in zip(np.asarray(src), np.asarray(dst)):
+        data[d] = data[s]
+        version[d] += 2
+    return data, version
+
+
+def _waves(src: np.ndarray, dst: np.ndarray) -> list[np.ndarray]:
+    """Partition lanes into waves.  For earlier lane i and later lane j:
+    j reads/writes what i writes (dst_i ∈ {src_j, dst_j}) -> j waits a full
+    wave; i reads what j writes (src_i == dst_j) -> j may not run EARLIER
+    than i (same wave is fine: a wave's reads all precede its writes)."""
+    q = len(src)
+    depth = np.zeros(q, np.int64)
+    for j in range(q):
+        for i in range(j):
+            if dst[i] == src[j] or dst[i] == dst[j]:
+                depth[j] = max(depth[j], depth[i] + 1)
+            if src[i] == dst[j]:
+                depth[j] = max(depth[j], depth[i])
+    return [np.nonzero(depth == t)[0] for t in range(int(depth.max()) + 1)] \
+        if q else []
+
+
+def copy_batch(state: ba.TableState, src, dst, *, strategy: str, k: int):
+    """Atomically copy cell src[i] -> dst[i] for each lane, in lane order.
+
+    Returns (state', n_waves).  Linearizable: matches
+    `copy_batch_reference` on the logical values for every strategy.
+    """
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    n_waves = 0
+    for lanes in _waves(src, dst):
+        w_src = jnp.asarray(src[lanes])
+        w_dst = jnp.asarray(dst[lanes])
+        ctx = llsc.init_ctx(len(lanes), k)
+        # 1. link destinations
+        ctx, _ = llsc.ll(state, ctx, w_dst, strategy=strategy, k=k)
+        # 2. honest source read (the strategy's own load protocol)
+        vals, _ok = ba.read_protocol(state, w_src, strategy=strategy)
+        # 3. commit; fresh links with nothing in between => always succeeds
+        state, ctx, _succ = llsc.sc(state, ctx, w_dst, vals,
+                                    strategy=strategy, k=k)
+        n_waves += 1
+    return state, n_waves

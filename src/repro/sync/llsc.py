@@ -1,0 +1,290 @@
+"""k-word Load-Linked / Store-Conditional over big-atomic tables.
+
+LL/SC is the paper's headline application of big atomics: a k-word LL
+records the cell's *version* alongside its value, and the matching SC
+commits iff the version is still the one that was linked.  Because the
+comparison is on the version — not the value — SC is immune to ABA (a cell
+restored to its linked bytes after intervening commits still fails) and to
+lapped linkers (a lane that held its link across many other commits).
+
+Batch-step model (mirrors `semantics.apply_batch`): one call linearizes a
+batch of p lane-ops (LL / SC / VL / IDLE) in lane order against the table.
+Lane i's link state lives in `LinkCtx[i]` and persists across batches —
+cross-thread interleavings of the pointer-machine protocol become
+cross-batch interleavings here, driven explicitly by the tests.
+
+The key structural fact, and why the fused Pallas kernel
+(`kernels/llsc_commit.py`) needs no serialization loop: **at most one SC per
+cell can succeed per batch.**  Every SC in the batch carries a link version
+<= the cell's pre-batch version, so the first eligible SC in lane order
+commits (bumping the version by 2) and every later SC on that cell is
+already stale.  Unlike `apply_batch`'s L-round CAS chains, an SC batch
+always linearizes in ONE round.
+
+Every strategy (SEQLOCK / INDIRECT / CACHED_WF / CACHED_ME) gets identical
+semantics; layout maintenance is delegated to `bigatomic.commit_layout`,
+exactly as `bigatomic.apply_ops` does for store/CAS batches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigatomic as ba
+from repro.core import semantics as sem
+from repro.core.semantics import _segmented_scan_max
+
+# Sync op kinds (distinct namespace from semantics.LOAD/STORE/CAS).
+LL = 0     # load-linked: read value, link (slot, version)
+SC = 1     # store-conditional: commit desired iff link still valid
+VL = 2     # validate: is my link still valid?  (never writes)
+IDLE = 3   # padding lane
+
+
+class SyncOpBatch(NamedTuple):
+    """Batch of p sync ops.  kind: int32[p]; slot: int32[p];
+    desired: word[p, k] (SC payload; ignored otherwise)."""
+
+    kind: jax.Array
+    slot: jax.Array
+    desired: jax.Array
+
+    @property
+    def p(self) -> int:
+        return self.kind.shape[0]
+
+
+class LinkCtx(NamedTuple):
+    """Per-lane link state, carried across batches.
+
+    slot:    int32[p]   linked cell (-1 = never linked)
+    version: uint32[p]  version observed at the LL
+    value:   word[p,k]  value observed at the LL
+    linked:  bool[p]    link is live (consumed by any SC attempt)
+    """
+
+    slot: jax.Array
+    version: jax.Array
+    value: jax.Array
+    linked: jax.Array
+
+
+class SyncResult(NamedTuple):
+    """value: word[p,k] witnessed at the op's linearization point;
+    success: bool[p] (LL: always True; SC/VL: link validity)."""
+
+    value: jax.Array
+    success: jax.Array
+
+
+def init_ctx(p: int, k: int) -> LinkCtx:
+    return LinkCtx(
+        slot=jnp.full((p,), -1, jnp.int32),
+        version=jnp.zeros((p,), jnp.uint32),
+        value=jnp.zeros((p, k), sem.WORD_DTYPE),
+        linked=jnp.zeros((p,), bool),
+    )
+
+
+def make_sync_batch(kind, slot, desired=None, *, k: int) -> SyncOpBatch:
+    kind = jnp.asarray(kind, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    p = kind.shape[0]
+    if desired is None:
+        desired = jnp.zeros((p, k), sem.WORD_DTYPE)
+    return SyncOpBatch(kind, slot, jnp.asarray(desired, sem.WORD_DTYPE))
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (numpy) — THE definition of correctness.
+# ---------------------------------------------------------------------------
+
+def apply_sync_reference(data: np.ndarray, version: np.ndarray,
+                         ctx: LinkCtx, ops: SyncOpBatch):
+    """Apply sync ops one at a time in lane order.  Pure numpy, for tests.
+
+    Returns (new_data, new_version, new_ctx, SyncResult-as-numpy).
+    """
+    data = np.array(data, copy=True)
+    version = np.array(version, copy=True)
+    c_slot = np.array(ctx.slot, copy=True)
+    c_ver = np.array(ctx.version, copy=True)
+    c_val = np.array(ctx.value, copy=True)
+    c_lnk = np.array(ctx.linked, copy=True)
+    kind = np.asarray(ops.kind)
+    slot = np.asarray(ops.slot)
+    desired = np.asarray(ops.desired)
+    p, k = desired.shape
+    value = np.zeros((p, k), data.dtype)
+    success = np.zeros((p,), bool)
+    for i in range(p):
+        s = slot[i]
+        if kind[i] == IDLE:
+            continue
+        cur = data[s].copy()
+        value[i] = cur
+        if kind[i] == LL:
+            c_slot[i], c_ver[i], c_val[i], c_lnk[i] = \
+                s, version[s], cur, True
+            success[i] = True
+        elif kind[i] == VL:
+            success[i] = bool(c_lnk[i] and c_slot[i] == s
+                              and c_ver[i] == version[s])
+        elif kind[i] == SC:
+            ok = bool(c_lnk[i] and c_slot[i] == s
+                      and c_ver[i] == version[s])
+            if ok:
+                data[s] = desired[i]
+                version[s] += 2
+            c_lnk[i] = False            # any SC attempt consumes the link
+            success[i] = ok
+    new_ctx = LinkCtx(c_slot, c_ver, c_val, c_lnk)
+    return data, version, new_ctx, SyncResult(value, success)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized linearization (jnp) — bit-identical to the oracle.
+# ---------------------------------------------------------------------------
+
+def sync_batch(data: jax.Array, version: jax.Array, ctx: LinkCtx,
+               ops: SyncOpBatch):
+    """Table-level vectorized LL/SC batch.  Returns
+    (data', version', ctx', SyncResult, ApplyStats)."""
+    n, k = data.shape
+    p = ops.p
+    kind = ops.kind
+
+    active = kind != IDLE
+    slot = jnp.where(active, ops.slot, n)
+
+    order = jnp.argsort(slot, stable=True)       # (slot, lane) lexicographic
+    inv = jnp.argsort(order, stable=True)
+
+    s_slot = slot[order]
+    s_kind = kind[order]
+    s_desired = ops.desired[order]
+    s_cslot = ctx.slot[order]
+    s_cver = ctx.version[order]
+    s_clnk = ctx.linked[order]
+
+    idx = jnp.arange(p, dtype=jnp.int32)
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), s_slot[1:] != s_slot[:-1]])
+
+    safe_slot = jnp.minimum(s_slot, n - 1)
+    ver0 = version[safe_slot]                    # pre-batch version per lane
+    pre_val = data[safe_slot]                    # pre-batch value per lane
+
+    # An SC is eligible iff its lane's link names this cell at its pre-batch
+    # version.  The FIRST eligible SC in each segment wins; versions only
+    # move forward inside the batch, so everyone behind the winner is stale.
+    eligible = (s_kind == SC) & s_clnk & (s_cslot == s_slot) & \
+        (s_cver == ver0) & (s_slot < n)
+    elig_incl = _segmented_scan_max(eligible.astype(jnp.int32), seg_start)
+    elig_before = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), elig_incl[:-1]])
+    elig_before = jnp.where(seg_start, 0, elig_before) > 0
+    win = eligible & ~elig_before
+
+    # Winner position (inclusive prefix): lanes after the winner observe the
+    # committed value/version; lanes before it observe the pre-batch state.
+    wpos_incl = _segmented_scan_max(jnp.where(win, idx, -1), seg_start)
+    post = wpos_incl >= 0                        # a commit at-or-before me
+    post_excl = post & ~win                      # strictly before me (win is
+    #                                              unique, so at == mine)
+    cur_val = jnp.where(post_excl[:, None],
+                        s_desired[jnp.maximum(wpos_incl, 0)], pre_val)
+    cur_ver = ver0 + jnp.where(post_excl, jnp.uint32(2), jnp.uint32(0))
+
+    is_ll = (s_kind == LL) & (s_slot < n)
+    is_vl = (s_kind == VL) & (s_slot < n)
+    is_sc = (s_kind == SC) & (s_slot < n)
+
+    s_value = jnp.where((is_ll | is_vl | is_sc)[:, None], cur_val,
+                        jnp.zeros_like(cur_val))
+    vl_ok = s_clnk & (s_cslot == s_slot) & (s_cver == cur_ver)
+    s_success = jnp.where(is_ll, True,
+                          jnp.where(is_vl, vl_ok,
+                                    jnp.where(is_sc, win, False)))
+
+    # --- commit winners --------------------------------------------------
+    w_idx = jnp.where(win, s_slot, n)
+    new_data = data.at[w_idx].set(s_desired, mode="drop")
+    new_version = version.at[w_idx].add(jnp.uint32(2), mode="drop")
+
+    # --- link context updates --------------------------------------------
+    n_slot = jnp.where(is_ll, s_slot, s_cslot)
+    n_ver = jnp.where(is_ll, cur_ver, s_cver)
+    n_val = jnp.where(is_ll[:, None], cur_val, ctx.value[order])
+    n_lnk = jnp.where(is_ll, True, jnp.where(is_sc, False, s_clnk))
+
+    new_ctx = LinkCtx(n_slot[inv], n_ver[inv], n_val[inv], n_lnk[inv])
+    result = SyncResult(s_value[inv], s_success[inv])
+
+    # --- stats (feed the same traffic model as apply_ops) ----------------
+    seg_end = jnp.concatenate([seg_start[1:], jnp.ones((1,), bool)])
+    seg_any_win_rev = _segmented_scan_max(
+        jnp.flip(win.astype(jnp.int32)), jnp.flip(seg_end))
+    seg_any_win = jnp.flip(seg_any_win_rev) > 0
+    stats = sem.ApplyStats(
+        rounds=jnp.where(jnp.any(is_sc), 1, 0).astype(jnp.int32),
+        n_updates=jnp.sum(win.astype(jnp.int32)),
+        n_loads=jnp.sum(is_ll.astype(jnp.int32)),
+        n_cas_fail=jnp.sum((is_sc & ~win).astype(jnp.int32)),
+        n_raced_loads=jnp.sum((is_ll & seg_any_win).astype(jnp.int32)),
+        n_dirty_cells=jnp.sum(win.astype(jnp.int32)),  # <=1 winner per cell
+    )
+    return new_data, new_version, new_ctx, result, stats
+
+
+@functools.partial(jax.jit, static_argnames=("strategy", "k"))
+def apply_sync(state: ba.TableState, ctx: LinkCtx, ops: SyncOpBatch, *,
+               strategy: str, k: int):
+    """Linearize a sync batch against a big-atomic table; maintain the
+    strategy's layout.  Returns (state', ctx', SyncResult, stats, Traffic).
+    """
+    strategy = ba.Strategy(strategy)
+    vals = ba.logical(state, strategy) \
+        if strategy != ba.Strategy.INDIRECT else state.data
+    new_data, new_version, new_ctx, result, stats = sync_batch(
+        vals, state.version, ctx, ops)
+    new_state = ba.commit_layout(state, new_data, new_version,
+                                 stats.n_updates, strategy, ops.p)
+    traffic = ba._traffic_model(strategy, stats, k, ops.p)
+    return new_state, new_ctx, result, stats, traffic
+
+
+# ---------------------------------------------------------------------------
+# Convenience single-kind wrappers
+# ---------------------------------------------------------------------------
+
+def ll(state, ctx, slots, *, strategy: str, k: int):
+    """Link every lane i to slots[i].  Returns (ctx', values)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    ops = make_sync_batch(jnp.full(slots.shape, LL, jnp.int32), slots, k=k)
+    _, ctx, res, _, _ = apply_sync(state, ctx, ops, strategy=strategy, k=k)
+    return ctx, res.value
+
+
+def sc(state, ctx, slots, desired, *, strategy: str, k: int):
+    """Conditionally commit desired[i] to slots[i].  Returns
+    (state', ctx', success)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    ops = make_sync_batch(jnp.full(slots.shape, SC, jnp.int32), slots,
+                          desired, k=k)
+    state, ctx, res, _, _ = apply_sync(state, ctx, ops, strategy=strategy,
+                                       k=k)
+    return state, ctx, res.success
+
+
+def validate(state, ctx, slots, *, strategy: str, k: int):
+    """Is each lane's link still valid?  Returns bool[p]."""
+    slots = jnp.asarray(slots, jnp.int32)
+    ops = make_sync_batch(jnp.full(slots.shape, VL, jnp.int32), slots, k=k)
+    _, _, res, _, _ = apply_sync(state, ctx, ops, strategy=strategy, k=k)
+    return res.success

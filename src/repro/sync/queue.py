@@ -1,0 +1,250 @@
+"""Bounded MPMC ring queue over big atomics, driven through LL/SC.
+
+Layout (one big-atomic table, k >= 2 words per cell, capacity C >= 2):
+
+    cell 0        HEAD   word0 = dequeue ticket counter
+    cell 1        TAIL   word0 = enqueue ticket counter
+    cell 2+j      slot j word0 = sequence tag, words 1.. = payload
+
+Tickets are Vyukov-style: slot j starts with seq = j; an enqueue that
+claimed ticket t (slot t mod C) publishes (seq=t+1, payload) in ONE atomic
+k-word store — payload and tag can never tear apart, which is exactly what
+big atomics buy over a word-at-a-time ring.  A dequeue that claimed ticket h
+consumes the slot and recycles it with seq = h + C.
+
+Claiming is an LL/SC on the counter cell: LL reads the ticket and links the
+cell, SC commits ticket+1 iff no other lane committed in between.  Per
+batch-round at most one enqueuer and one dequeuer win (`llsc.apply_sync`
+resolves same-cell SC races in lane order); losers retry under the
+contention-management policy of Dice, Hendler & Mirsky (arXiv:1305.5800) —
+bounded constant or capped-exponential backoff measured in ROUNDS, the
+batch-step analogue of their wasted-CAS spin loops.  The benchmarks compare
+the policies; `none` makes commit order deterministic (lane order), which
+the linearizability tests exploit.
+
+Non-blocking semantics: an enqueue on a stably-full queue and a dequeue on a
+stably-empty queue return failure ("stably" = no pending opposite-kind lane
+in the same call could change the verdict; such lanes defer instead).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigatomic as ba
+from repro.core import semantics as sem
+from repro.sync import llsc
+
+HEAD, TAIL, SLOT0 = 0, 1, 2
+
+# run_batch op kinds
+ENQ, DEQ, QIDLE = 0, 1, 2
+
+
+class BackoffPolicy(NamedTuple):
+    """Deterministic retry schedule after a lost SC (delay in rounds).
+
+    kind: 'none' | 'const' | 'exp'.  `exp` is capped (Dice et al.: unbounded
+    exponential over-serializes; a small cap wins under steady contention).
+    """
+
+    kind: str = "none"
+    base: int = 1
+    cap: int = 8
+
+    def delay(self, attempts: int) -> int:
+        if self.kind == "none":
+            return 0
+        if self.kind == "const":
+            return self.base
+        if self.kind == "exp":
+            return min(self.base * (2 ** max(attempts - 1, 0)), self.cap)
+        raise ValueError(self.kind)
+
+
+class BigQueue:
+    """Bounded MPMC queue; every cell a big atomic, every claim an LL/SC."""
+
+    def __init__(self, capacity: int, *, k: int = 2,
+                 strategy: str = "cached_me",
+                 policy: BackoffPolicy = BackoffPolicy("none"),
+                 p_max: int = 64, max_rounds: int | None = None,
+                 initial_items=None):
+        if capacity < 2:
+            raise ValueError("capacity must be >= 2 (seq tags are ambiguous "
+                             "for a 1-slot ring)")
+        if k < 2:
+            raise ValueError("k must be >= 2 (seq word + >=1 payload word)")
+        self.capacity = capacity
+        self.k = k
+        self.strategy = ba.Strategy(strategy).value
+        self.policy = policy
+        self.max_rounds = max_rounds or 16 * (capacity + p_max + 8)
+        n = SLOT0 + capacity
+        initial = np.zeros((n, k), np.uint32)
+        initial[SLOT0:, 0] = np.arange(capacity, dtype=np.uint32)
+        if initial_items is not None:
+            # Pre-image of m enqueues (tickets 0..m-1), written directly
+            # into the initial layout: O(1) instead of m contended rounds.
+            items = self._payload(initial_items)
+            m = len(items)
+            if m > capacity:
+                raise ValueError(f"{m} initial items > capacity {capacity}")
+            initial[SLOT0:SLOT0 + m, 0] = \
+                np.arange(1, m + 1, dtype=np.uint32)
+            initial[SLOT0:SLOT0 + m, 1:] = items
+            initial[TAIL, 0] = m
+        self.state = ba.init(n, k, self.strategy, p_max, initial)
+        self.commit_log: list[tuple[str, int, int]] = []  # (kind, lane, ticket)
+
+    # -- introspection -------------------------------------------------------
+
+    def _counters(self) -> tuple[int, int]:
+        vals, _ = ba.read_protocol(
+            self.state, jnp.asarray([HEAD, TAIL], jnp.int32),
+            strategy=self.strategy)
+        vals = np.asarray(vals)
+        return int(vals[0, 0]), int(vals[1, 0])
+
+    def __len__(self) -> int:
+        h, t = self._counters()
+        return (t - h) % (1 << 32)
+
+    # -- public ops ----------------------------------------------------------
+
+    def enqueue_batch(self, values) -> np.ndarray:
+        """Enqueue values[i] from lane i.  Returns success bool[p]."""
+        values = self._payload(values)
+        _, succ, _ = self.run_batch(np.full(len(values), ENQ), values)
+        return succ
+
+    def dequeue_batch(self, p: int):
+        """Dequeue into p lanes.  Returns (payload uint32[p, k-1],
+        success bool[p]); payload rows of failed lanes are zero."""
+        out, succ, _ = self.run_batch(np.full(p, DEQ))
+        return out, succ
+
+    def _payload(self, values) -> np.ndarray:
+        values = np.asarray(values, np.uint32)
+        if values.ndim == 1:
+            values = values[:, None]
+        if values.shape[1] != self.k - 1:
+            raise ValueError(f"payload width {values.shape[1]} != k-1 "
+                             f"({self.k - 1})")
+        return values
+
+    # -- the round loop ------------------------------------------------------
+
+    def run_batch(self, kinds, values=None):
+        """Run a mixed batch of ENQ/DEQ/QIDLE lane-ops to completion.
+
+        Returns (payload uint32[p, k-1], success bool[p], rounds).  With
+        policy 'none' commit order equals lane order per counter; with
+        backoff it is the recorded `commit_log` order (still a valid
+        linearization).
+        """
+        kinds = np.asarray(kinds, np.int32)
+        p = len(kinds)
+        C, k = self.capacity, self.k
+        values = self._payload(values) if values is not None else \
+            np.zeros((p, k - 1), np.uint32)
+
+        pending = kinds != QIDLE
+        success = np.zeros(p, bool)
+        out = np.zeros((p, k - 1), np.uint32)
+        attempts = np.zeros(p, np.int64)
+        delay = np.zeros(p, np.int64)
+        counter_cell = np.where(kinds == ENQ, TAIL, HEAD).astype(np.int32)
+        ctx = llsc.init_ctx(p, k)
+        rounds = 0
+
+        while pending.any():
+            rounds += 1
+            if rounds > self.max_rounds:
+                raise RuntimeError(
+                    f"queue round bound exceeded ({self.max_rounds}); "
+                    f"pending={np.nonzero(pending)[0].tolist()}")
+            active = pending & (delay == 0)
+            if not active.any():
+                delay = np.maximum(delay - 1, 0)
+                continue
+
+            # 1. LL the counter cell (tail for ENQ lanes, head for DEQ).
+            ops1 = llsc.make_sync_batch(
+                np.where(active, llsc.LL, llsc.IDLE), counter_cell, k=k)
+            self.state, ctx, res1, _, _ = llsc.apply_sync(
+                self.state, ctx, ops1, strategy=self.strategy, k=k)
+            tick = np.asarray(res1.value[:, 0], np.uint32)
+
+            # 2. Honest reads: my ring slot + the opposite counter.
+            slot_cell = (SLOT0 + (tick % np.uint32(C))).astype(np.int32)
+            other_cell = np.where(kinds == ENQ, HEAD, TAIL).astype(np.int32)
+            rvals, _ = ba.read_protocol(
+                self.state,
+                jnp.asarray(np.concatenate([slot_cell, other_cell])),
+                strategy=self.strategy)
+            rvals = np.asarray(rvals)
+            seq = rvals[:p, 0].astype(np.uint32)
+            other = rvals[p:, 0].astype(np.uint32)
+
+            is_enq = active & (kinds == ENQ)
+            is_deq = active & (kinds == DEQ)
+            enq_ready = is_enq & (seq == tick)
+            deq_ready = is_deq & (seq == tick + np.uint32(1))
+            enq_full = is_enq & ~enq_ready       # C >= 2: seq != t <=> full
+            deq_empty = is_deq & ~deq_ready & (other == tick)
+
+            # Stably full/empty only if no pending opposite-kind lane could
+            # still flip the verdict; otherwise defer and retry.
+            if not (pending & (kinds == DEQ)).any():
+                pending[enq_full] = False
+            if not (pending & (kinds == ENQ)).any():
+                pending[deq_empty] = False
+
+            attempt = enq_ready | deq_ready
+            if not attempt.any():
+                delay = np.maximum(delay - 1, 0)
+                continue
+
+            # 3. SC the counter: claim ticket `tick` by committing tick+1.
+            des = np.zeros((p, k), np.uint32)
+            des[:, 0] = tick + np.uint32(1)
+            ops2 = llsc.make_sync_batch(
+                np.where(attempt, llsc.SC, llsc.IDLE), counter_cell, des,
+                k=k)
+            self.state, ctx, res2, _, _ = llsc.apply_sync(
+                self.state, ctx, ops2, strategy=self.strategy, k=k)
+            won = np.asarray(res2.success) & attempt
+
+            # 4. Winners publish their slot in one atomic k-word store:
+            #    ENQ: (t+1, payload)   DEQ: (h+C, zeros) — recycled.
+            st_des = np.zeros((p, k), np.uint32)
+            st_des[:, 0] = np.where(kinds == ENQ, tick + np.uint32(1),
+                                    tick + np.uint32(C))
+            st_des[:, 1:] = np.where((kinds == ENQ)[:, None], values, 0)
+            ops3 = sem.OpBatch(
+                jnp.asarray(np.where(won, sem.STORE, sem.IDLE), jnp.int32),
+                jnp.asarray(slot_cell),
+                jnp.zeros((p, k), sem.WORD_DTYPE),
+                jnp.asarray(st_des))
+            self.state, _, _, _ = ba.apply_ops(
+                self.state, ops3, strategy=self.strategy, k=k)
+
+            # 5. Bookkeeping: payload capture, commit log, backoff.
+            for lane in np.nonzero(won & (kinds == ENQ))[0]:
+                self.commit_log.append(("enq", int(lane), int(tick[lane])))
+            for lane in np.nonzero(won & (kinds == DEQ))[0]:
+                out[lane] = rvals[lane, 1:]
+                self.commit_log.append(("deq", int(lane), int(tick[lane])))
+            success |= won
+            pending &= ~won
+            lost = attempt & ~won
+            attempts[lost] += 1
+            for lane in np.nonzero(lost)[0]:
+                delay[lane] = self.policy.delay(int(attempts[lane]))
+            delay[~active] = np.maximum(delay[~active] - 1, 0)
+
+        return out, success, rounds

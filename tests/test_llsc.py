@@ -1,0 +1,419 @@
+"""repro.sync linearizability tests: LL/SC vs the sequential oracle under
+adversarial interleavings (ABA, lapped linker), atomic-copy overlap chains,
+MPMC queue FIFO / full / empty races — across all four lock-free strategies.
+
+Property sweeps here draw from seeded numpy RNGs directly (no hypothesis
+dependency) so they run identically under the real package or the shim.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import bigatomic as ba
+from repro.core import semantics as sem
+from repro.sync import atomic_copy as ac
+from repro.sync import llsc
+from repro.sync.queue import DEQ, ENQ, QIDLE, BackoffPolicy, BigQueue
+
+LOCKFREE = ["seqlock", "indirect", "cached_wf", "cached_me"]
+
+
+def _ctx_np(ctx):
+    return llsc.LinkCtx(np.asarray(ctx.slot), np.asarray(ctx.version),
+                        np.asarray(ctx.value), np.asarray(ctx.linked))
+
+
+def _random_sync_batch(rng, ref_ctx, *, p, n, k):
+    """Mixed LL/SC/VL/IDLE batch; SC/VL lanes mostly target their link."""
+    kind = rng.integers(0, 4, p).astype(np.int32)
+    slot = rng.integers(0, n, p).astype(np.int32)
+    for i in range(p):
+        if kind[i] in (llsc.SC, llsc.VL) and ref_ctx.linked[i] \
+                and rng.random() < 0.7:
+            slot[i] = ref_ctx.slot[i]
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    return llsc.make_sync_batch(kind, slot, desired, k=k)
+
+
+# ---------------------------------------------------------------------------
+# LL/SC vs sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_apply_sync_matches_oracle(strategy):
+    rng = np.random.default_rng(hash(strategy) % 2 ** 31)
+    for trial in range(4):
+        n = int(rng.integers(2, 16))
+        k = int(rng.integers(1, 6))
+        p = int(rng.integers(1, 24))
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        state = ba.init(n, k, strategy, p_max=64, initial=init)
+        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        ctx = llsc.init_ctx(p, k)
+        ref_ctx = _ctx_np(ctx)
+        for step in range(5):
+            ops = _random_sync_batch(rng, ref_ctx, p=p, n=n, k=k)
+            ref_data, ref_ver, ref_ctx, ref_res = llsc.apply_sync_reference(
+                ref_data, ref_ver, ref_ctx, ops)
+            state, ctx, res, stats, traffic = llsc.apply_sync(
+                state, ctx, ops, strategy=strategy, k=k)
+            msg = f"{strategy} trial {trial} step {step}"
+            np.testing.assert_array_equal(
+                np.asarray(ba.logical(state, strategy)), ref_data,
+                err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(state.version), ref_ver,
+                                          err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(res.value),
+                                          ref_res.value, err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(res.success),
+                                          ref_res.success, err_msg=msg)
+            for a, b in zip(ctx[:3], ref_ctx[:3]):
+                np.testing.assert_array_equal(np.asarray(a), b, err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(ctx.linked),
+                                          ref_ctx.linked, err_msg=msg)
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_sc_defeats_aba(strategy):
+    """Value restored to its linked bytes after intervening commits: a CAS
+    would succeed (the ABA bug); SC must fail because the version moved."""
+    n, k = 4, 3
+    a = np.arange(n * k, dtype=np.uint32).reshape(n, k)
+    state = ba.init(n, k, strategy, p_max=16, initial=a)
+    ctx = llsc.init_ctx(1, k)
+    ctx, vals = llsc.ll(state, ctx, [2], strategy=strategy, k=k)
+    original = np.asarray(vals[0])
+    # store A -> B -> A through the ordinary update path
+    b = (original + 1).astype(np.uint32)
+    for payload in (b, original):
+        ops = sem.make_op_batch(np.asarray([sem.STORE]), np.asarray([2]),
+                                desired=payload[None], k=k)
+        state, _, _, _ = ba.apply_ops(state, ops, strategy=strategy, k=k)
+    np.testing.assert_array_equal(
+        np.asarray(ba.logical(state, strategy))[2], original)  # bytes match
+    assert not bool(llsc.validate(state, ctx, [2], strategy=strategy, k=k)[0])
+    state, ctx, succ = llsc.sc(state, ctx, [2], original[None],
+                               strategy=strategy, k=k)
+    assert not bool(succ[0])                                   # SC refuses
+    # the cell is untouched by the failed SC
+    np.testing.assert_array_equal(
+        np.asarray(ba.logical(state, strategy))[2], original)
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_lapped_linker_fails(strategy):
+    """A lane that holds its link while other lanes commit many times (a
+    descheduled 'lapped' linker) must fail its eventual SC and validate."""
+    n, k, p = 4, 2, 8
+    state = ba.init(n, k, strategy, p_max=64)
+    ctx = llsc.init_ctx(p, k)
+    ctx, _ = llsc.ll(state, ctx, np.zeros(p, np.int32), strategy=strategy,
+                     k=k)
+    # lanes 1..p-1 commit in turn (each re-linked just before its SC, so
+    # each succeeds); lane 0 sleeps on its original link the whole time
+    for lane in range(1, p):
+        kind = np.full(p, llsc.IDLE, np.int32)
+        kind[lane] = llsc.SC
+        desired = np.full((p, k), lane, np.uint32)
+        ops = llsc.make_sync_batch(kind, np.zeros(p, np.int32), desired, k=k)
+        state, ctx, res, _, _ = llsc.apply_sync(state, ctx, ops,
+                                                strategy=strategy, k=k)
+        assert bool(np.asarray(res.success)[lane])
+        if lane + 1 < p:
+            kind = np.full(p, llsc.IDLE, np.int32)
+            kind[lane + 1] = llsc.LL
+            ops = llsc.make_sync_batch(kind, np.zeros(p, np.int32), k=k)
+            state, ctx, _, _, _ = llsc.apply_sync(state, ctx, ops,
+                                                  strategy=strategy, k=k)
+    assert not bool(
+        llsc.validate(state, ctx, [0], strategy=strategy, k=k)[0])
+    state, ctx, succ = llsc.sc(state, ctx, [0], np.zeros((1, k), np.uint32),
+                               strategy=strategy, k=k)
+    assert not bool(succ[0])
+
+
+def test_one_sc_per_cell_per_batch():
+    """All p lanes link the same cell, then all SC at once: exactly the
+    first lane commits; every other lane is stale by construction."""
+    n, k, p = 2, 2, 8
+    state = ba.init(n, k, "cached_me", p_max=32)
+    ctx = llsc.init_ctx(p, k)
+    ctx, _ = llsc.ll(state, ctx, np.zeros(p, np.int32), strategy="cached_me",
+                     k=k)
+    desired = np.tile(np.arange(p, dtype=np.uint32)[:, None], (1, k))
+    state, ctx, succ = llsc.sc(state, ctx, np.zeros(p, np.int32), desired,
+                               strategy="cached_me", k=k)
+    succ = np.asarray(succ)
+    assert succ[0] and not succ[1:].any()
+    np.testing.assert_array_equal(
+        np.asarray(ba.logical(state, "cached_me"))[0], desired[0])
+    assert not np.asarray(ctx.linked).any()    # every SC consumed its link
+
+
+# ---------------------------------------------------------------------------
+# Atomic copy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_atomic_copy_overlap_matches_oracle(strategy):
+    rng = np.random.default_rng(7)
+    n, k = 10, 4
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    state = ba.init(n, k, strategy, p_max=64, initial=init)
+    ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+    for trial in range(6):
+        q = int(rng.integers(1, 10))
+        src = rng.integers(0, n, q)
+        dst = rng.integers(0, n, q)
+        ref_data, ref_ver = ac.copy_batch_reference(ref_data, ref_ver,
+                                                    src, dst)
+        state, _waves = ac.copy_batch(state, src, dst, strategy=strategy,
+                                      k=k)
+        np.testing.assert_array_equal(
+            np.asarray(ba.logical(state, strategy)), ref_data,
+            err_msg=f"{strategy} trial {trial}")
+        np.testing.assert_array_equal(np.asarray(state.version), ref_ver)
+
+
+def test_atomic_copy_chain_same_batch():
+    """copy(a->b) and copy(b->c) in one batch: c gets a's value (lane order),
+    proving the copies don't tear or reorder."""
+    n, k = 4, 2
+    init = np.asarray([[1, 1], [2, 2], [3, 3], [4, 4]], np.uint32)
+    state = ba.init(n, k, "seqlock", p_max=16, initial=init)
+    state, _ = ac.copy_batch(state, [0, 1], [1, 2], strategy="seqlock", k=k)
+    got = np.asarray(ba.logical(state, "seqlock"))
+    np.testing.assert_array_equal(got[1], [1, 1])
+    np.testing.assert_array_equal(got[2], [1, 1])   # chained through b
+
+
+# ---------------------------------------------------------------------------
+# MPMC queue
+# ---------------------------------------------------------------------------
+
+POLICIES = [BackoffPolicy("none"), BackoffPolicy("const", 1),
+            BackoffPolicy("exp", 1, 4)]
+
+
+def _queue_oracle(capacity, kinds, values):
+    """Sequential queue applying ops in lane order (policy-'none' contract
+    for uniform batches)."""
+    q: list[int] = []
+    out = np.zeros(len(kinds), np.uint32)
+    succ = np.zeros(len(kinds), bool)
+    for i, kd in enumerate(kinds):
+        if kd == ENQ:
+            if len(q) < capacity:
+                q.append(int(values[i]))
+                succ[i] = True
+        elif kd == DEQ:
+            if q:
+                out[i] = q.pop(0)
+                succ[i] = True
+    return out, succ, q
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_queue_uniform_batches_match_oracle(strategy):
+    """With policy 'none', uniform enqueue/dequeue batches commit in lane
+    order — bit-identical to the sequential oracle, across strategies."""
+    rng = np.random.default_rng(11)
+    C = 5
+    q = BigQueue(C, k=2, strategy=strategy)
+    model: list[int] = []
+    for step in range(6):
+        p = int(rng.integers(1, 8))
+        if step % 2 == 0:
+            vals = rng.integers(0, 2 ** 32, p, dtype=np.uint32)
+            succ = q.enqueue_batch(vals)
+            _, ref_succ, left = _queue_oracle(C, np.full(p, ENQ), vals)
+            want = [v for v, s in zip(vals, ref_succ) if s]
+            assert list(succ) == list(ref_succ) or \
+                succ.sum() == ref_succ.sum()
+            np.testing.assert_array_equal(succ, ref_succ)
+            model = model[:]  # lane-order commits
+            for v in want:
+                if len(model) < C:
+                    model.append(int(v))
+        else:
+            out, succ = q.dequeue_batch(p)
+            take = min(p, len(model))
+            assert succ.sum() == take
+            got = [int(out[i, 0]) for i in np.nonzero(succ)[0]]
+            assert got == model[:take], (got, model[:take])
+            model = model[take:]
+        assert len(q) == len(model)
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.kind)
+@pytest.mark.parametrize("strategy", ["seqlock", "cached_me"])
+def test_queue_linearizable_under_backoff(strategy, policy):
+    """Mixed races with arbitrary backoff: the recorded commit order must be
+    a valid FIFO history (tickets contiguous, value of ticket t dequeued at
+    ticket t) and per-producer order must hold across batches."""
+    rng = np.random.default_rng(13)
+    C, p = 4, 6
+    q = BigQueue(C, k=2, strategy=strategy, policy=policy)
+    lane_sent: dict[int, list[int]] = {i: [] for i in range(p)}
+    dequeued: list[int] = []
+    serial = 0
+    for step in range(8):
+        kinds = rng.integers(0, 3, p)
+        vals = np.zeros((p, 1), np.uint32)
+        for i in np.nonzero(kinds == ENQ)[0]:
+            vals[i, 0] = serial * p + i        # unique, encodes producer
+            serial += 1
+        out, succ, _rounds = q.run_batch(kinds, vals)
+        for i in np.nonzero((kinds == ENQ) & succ)[0]:
+            lane_sent[i].append(int(vals[i, 0]))
+        for i in np.nonzero((kinds == DEQ) & succ)[0]:
+            dequeued.append(int(out[i, 0]))
+    # drain what's left
+    out, succ = q.dequeue_batch(C)
+    dequeued += [int(out[i, 0]) for i in np.nonzero(succ)[0]]
+    assert len(q) == 0
+
+    log = q.commit_log
+    enq_t = [t for kind, _, t in log if kind == "enq"]
+    deq_t = [t for kind, _, t in log if kind == "deq"]
+    assert enq_t == list(range(len(enq_t)))    # tickets dense, in order
+    assert deq_t == list(range(len(deq_t)))
+    # FIFO: dequeue stream == enqueue-commit value stream
+    enq_vals = []
+    it = iter(log)
+    by_ticket = {}
+    for kind, lane, t in log:
+        if kind == "enq":
+            by_ticket[t] = (lane, t)
+    # reconstruct enqueue values from lanes' send lists in commit order
+    lane_iters = {i: iter(v) for i, v in lane_sent.items()}
+    for kind, lane, t in log:
+        if kind == "enq":
+            enq_vals.append(next(lane_iters[lane]))
+    assert dequeued == enq_vals[:len(dequeued)]
+    # per-producer FIFO: each lane's values appear in send order
+    for i, sent in lane_sent.items():
+        got = [v for v in dequeued if v % p == i and v in sent]
+        assert got == [v for v in sent if v in dequeued]
+
+
+def test_queue_full_and_empty_races():
+    q = BigQueue(3, k=2)
+    assert q.dequeue_batch(2)[1].sum() == 0            # empty from the start
+    succ = q.enqueue_batch(np.arange(5, dtype=np.uint32))
+    assert succ.sum() == 3 and len(q) == 3             # 2 lanes hit full
+    # mixed full race: one deq frees a slot, so exactly one more enq lands
+    out, succ, _ = q.run_batch([ENQ, DEQ, ENQ],
+                               np.asarray([[7], [0], [9]], np.uint32))
+    assert succ[1] and int(out[1, 0]) == 0
+    assert succ[0] != succ[2] or succ[0]               # >=1 enqueue landed
+    assert len(q) == 3                                 # still full
+
+
+def test_queue_payload_rides_big_atomic():
+    """k > 2: a multi-word payload travels with its seq tag in one atomic
+    cell — no torn (tag, payload) pairs even under contention."""
+    q = BigQueue(4, k=4, strategy="cached_wf")
+    vals = np.asarray([[1, 2, 3], [4, 5, 6], [7, 8, 9]], np.uint32)
+    assert q.enqueue_batch(vals).all()
+    out, succ = q.dequeue_batch(3)
+    assert succ.all()
+    np.testing.assert_array_equal(out, vals)
+
+
+def test_queue_backoff_reduces_wasted_attempts():
+    """The Dice et al. claim, batch-step edition: under heavy same-counter
+    contention a bounded backoff wastes fewer failed SCs than no backoff."""
+    def failed_scs(policy):
+        q = BigQueue(64, k=2, policy=policy, p_max=64)
+        q.enqueue_batch(np.arange(32, dtype=np.uint32))
+        before = len(q.commit_log)
+        out, succ, rounds = q.run_batch(np.full(32, DEQ))
+        assert succ.all()
+        return rounds
+
+    r_none = failed_scs(BackoffPolicy("none"))
+    r_exp = failed_scs(BackoffPolicy("exp", 1, 4))
+    # both drain; the schedules differ but stay within the progress bound
+    assert r_none >= 32 and r_exp >= 32
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas commit kernel (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_llsc_commit_kernel_matches_ref():
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.llsc_commit import llsc_commit_round
+
+    rng = np.random.default_rng(3)
+    for n, k, p in [(8, 4, 6), (32, 8, 16), (16, 2, 16), (64, 128, 8)]:
+        data = jnp.asarray(rng.integers(0, 2 ** 32, (n + 1, k),
+                                        dtype=np.uint32))
+        meta = jnp.asarray((rng.integers(0, 8, (n + 1, 2)) * 2)
+                           .astype(np.uint32))
+        slots = np.full(p, n, np.int32)
+        n_live = min(p - 1, n)
+        slots[:n_live] = rng.choice(n, n_live, replace=False)
+        live = (slots < n).astype(np.int32)
+        link_ver = np.asarray(meta)[np.minimum(slots, n - 1), 0] \
+            .astype(np.uint32)
+        link_ver[::3] += 2                       # stale links must fail
+        desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+        outs = llsc_commit_round(data, meta, jnp.asarray(slots),
+                                 jnp.asarray(live), jnp.asarray(link_ver),
+                                 jnp.asarray(desired), interpret=True)
+        refs = ref.llsc_commit_round_ref(data, meta, slots, live, link_ver,
+                                         desired)
+        for a, b in zip(outs, refs):
+            np.testing.assert_array_equal(np.asarray(a)[:n],
+                                          np.asarray(b)[:n])
+
+
+def test_llsc_commit_kernel_agrees_with_apply_sync():
+    """The fused kernel commits exactly what the jnp SC path commits, for a
+    winners-only round extracted from a contended batch."""
+    import jax.numpy as jnp
+
+    from repro.kernels.llsc_commit import llsc_commit_round
+
+    n, k, p = 8, 4, 12
+    rng = np.random.default_rng(21)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    state = ba.init(n, k, "seqlock", p_max=32, initial=init)
+    ctx = llsc.init_ctx(p, k)
+    slots = rng.integers(0, n, p).astype(np.int32)
+    ctx, _ = llsc.ll(state, ctx, slots, strategy="seqlock", k=k)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+
+    # jnp path
+    state2, _, res, _, _ = llsc.apply_sync(
+        state, ctx, llsc.make_sync_batch(
+            np.full(p, llsc.SC, np.int32), slots, desired, k=k),
+        strategy="seqlock", k=k)
+
+    # kernel path: feed ALL lanes; stale/duplicate losers carry link_ver
+    # equal to the winner's so validation inside the kernel must arbitrate.
+    # Distinct-slot contract -> keep first lane per slot only.
+    first = np.zeros(p, bool)
+    seen = set()
+    for i, s in enumerate(slots):
+        if s not in seen:
+            seen.add(s)
+            first[i] = True
+    kslots = np.where(first, slots, n).astype(np.int32)
+    data = jnp.concatenate([jnp.asarray(init),
+                            jnp.zeros((1, k), jnp.uint32)])
+    meta = jnp.zeros((n + 1, 2), jnp.uint32)
+    d2, m2, succ, _ = llsc_commit_round(
+        data, meta, jnp.asarray(kslots), jnp.asarray(first.astype(np.int32)),
+        jnp.asarray(np.asarray(ctx.version)), jnp.asarray(desired),
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(d2)[:n],
+                                  np.asarray(ba.logical(state2, "seqlock")))
+    np.testing.assert_array_equal(np.asarray(m2)[:n, 0],
+                                  np.asarray(state2.version))
+    np.testing.assert_array_equal(np.asarray(succ)[:, 0].astype(bool),
+                                  np.asarray(res.success) & first)

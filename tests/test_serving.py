@@ -96,3 +96,22 @@ def test_page_table_lookup_consistency():
     paged = pk.free_pages(paged, 7, 2)
     paged, got = pk.lookup_pages(paged, [7], 2)
     assert (np.asarray(got) == -1).all()
+
+
+def test_failed_admission_leaks_nothing():
+    """A prefill that dies (page exhaustion) must hand its decode slot and
+    every not-yet-admitted request back to the big-atomic rings."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_batch=2, n_pages=2, page_size=8,
+                        max_pages_per_seq=4)
+    eng.submit(Request(rid=0, prompt=np.zeros(40, np.int32),
+                       max_new_tokens=2))          # needs 5 pages > 2
+    eng.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="out of KV pages"):
+        eng.step()
+    assert len(eng.slot_q) == 2                    # no decode slot leaked
+    assert len(eng.admit_q) == 1                   # rid 1 back in the queue
+    out = eng.run_to_completion()
+    assert len(out[1]) == 2                        # survivor still serves
