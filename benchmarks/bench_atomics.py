@@ -11,14 +11,24 @@ For every cell we record
 
 INDIRECT's 2-deep chain and SEQLOCK/CACHED_*'s 1-deep fast path are the
 paper's central claim, visible here as structure, not just time.
+
+v2 additions:
+  * a MIXED-op-batch sweep (LOAD/STORE/CAS/LL/SC/VALIDATE lanes in ONE
+    `atomics.apply` call) over the sync-lane fraction — the unified-engine
+    capability the v1 API could not express at all;
+  * the fused-serving-step delta: decode steps/s and host->device
+    dispatches per step for the v1 4-dispatch decode path vs the v2 single
+    jitted program (engine `fused=True`).
 """
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import print_table, save_results, time_op
-from repro.core import bigatomic as ba
+from repro import atomics
 from repro.core import semantics as sem
 
 STRATEGIES = ["seqlock", "indirect", "cached_wf", "cached_me", "simplock",
@@ -29,18 +39,17 @@ DEF = dict(n=1 << 16, k=4, p=4096, u=0.2, z=0.0)
 
 def run_cell(strategy: str, *, n, k, p, u, z, reps=3, seed=0):
     rng = np.random.default_rng(seed)
-    table = ba.BigAtomicTable(n, k, strategy, p_max=p)
-    cur = np.asarray(table.logical())
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=p)
+    state0 = atomics.init(spec)
+    cur = np.asarray(atomics.logical(spec, state0))
     ops = sem.random_batch(rng, p=p, n=n, k=k, update_frac=u, zipf=z,
                            current=cur)
 
     def step(state, ops):
-        new_state, res, stats, traffic = ba.apply_ops(
-            state, ops, strategy=strategy, k=k)
+        new_state, _, res, stats, traffic = atomics.apply(spec, state, ops)
         return new_state, res, stats, traffic
 
-    dt, (state, res, stats, traffic) = time_op(step, table.state, ops,
-                                               reps=reps)
+    dt, (state, res, stats, traffic) = time_op(step, state0, ops, reps=reps)
     return {
         "strategy": strategy, "n": n, "k": k, "p": p, "u": u, "z": z,
         "mops_s": p / dt / 1e6,
@@ -49,6 +58,119 @@ def run_cell(strategy: str, *, n, k, p, u, z, reps=3, seed=0):
         "dep_chains": int(traffic.dep_chains),
         "rmw_op": float(traffic.rmw_ops / p),
     }
+
+
+def mixed_batch(rng, *, p, n, k, sync_frac, z=0.0):
+    """Mixed unified batch: sync_frac of the lanes are LL/SC/VALIDATE, the
+    rest LOAD/STORE/CAS (paper mix), all in one op schema."""
+    table_kinds = np.asarray([atomics.LOAD, atomics.STORE, atomics.CAS])
+    sync_kinds = np.asarray([atomics.LL, atomics.SC, atomics.VALIDATE])
+    is_sync = rng.random(p) < sync_frac
+    kind = np.where(is_sync, rng.choice(sync_kinds, p),
+                    rng.choice(table_kinds, p)).astype(np.int32)
+    if z <= 0.0:
+        slots = rng.integers(0, n, p)
+    else:
+        slots = (rng.zipf(max(z, 1.01), size=p) - 1) % n
+    expected = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    return atomics.make_ops(kind, slots.astype(np.int32), expected, desired,
+                            k=k)
+
+
+def run_mixed_cell(strategy: str, *, n, k, p, sync_frac, reps=3, seed=0):
+    """One mixed-kind batch through the unified engine, timed end to end."""
+    rng = np.random.default_rng(seed)
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=p)
+    state = atomics.init(spec)
+    ctx = atomics.init_ctx(p, k)
+    # pre-link every lane so SC/VALIDATE lanes have live links to consume
+    slots = rng.integers(0, n, p).astype(np.int32)
+    state, ctx, _, _, _ = atomics.apply(
+        spec, state, atomics.sync_ops(np.full(p, atomics.LL), slots, k=k),
+        ctx)
+    ops = mixed_batch(rng, p=p, n=n, k=k, sync_frac=sync_frac)
+    # SC/VALIDATE lanes target their linked slot to be meaningful
+    kind = np.asarray(ops.kind)
+    tgt = np.where(np.isin(kind, [atomics.SC, atomics.VALIDATE]),
+                   np.asarray(ctx.slot), np.asarray(ops.slot))
+    ops = atomics.OpBatch(ops.kind, np.asarray(tgt, np.int32), ops.expected,
+                          ops.desired)
+
+    def step(state, ctx, ops):
+        return atomics.apply(spec, state, ops, ctx)
+
+    dt, (st2, ctx2, res, stats, traffic) = time_op(step, state, ctx, ops,
+                                                   reps=reps)
+    return {
+        "strategy": strategy, "n": n, "k": k, "p": p,
+        "sync_frac": sync_frac,
+        "mops_s": p / dt / 1e6,
+        "rounds": int(stats.rounds),
+        "writes": int(stats.n_updates),
+        "bytes_op": float((traffic.bytes_read + traffic.bytes_written) / p),
+    }
+
+
+def sweep_mixed(*, quick=False, strategies=None):
+    strategies = strategies or ["seqlock", "indirect", "cached_wf",
+                                "cached_me"]
+    n = 1 << 12 if quick else 1 << 16
+    p = 1024 if quick else 4096
+    rows = []
+    for sync_frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+        for s in strategies:
+            rows.append(run_mixed_cell(s, n=n, k=4, p=p,
+                                       sync_frac=sync_frac))
+    return rows
+
+
+def bench_fused_serving(quick: bool = False):
+    """Dispatch-count / wall-clock delta from jitting the fused serving step:
+    the same decode workload through the v1 4-dispatch path and the v2
+    single compiled program (ISSUE 2 satellite)."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("deepseek_7b", reduced=True)
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_new = 8 if quick else 16
+    prompts = [rng.integers(0, cfg.vocab, 12).astype(np.int32)
+               for _ in range(2)]
+
+    rows = []
+    for fused in (False, True):
+        eng = ServingEngine(cfg, params, max_batch=2, n_pages=32,
+                            page_size=8, max_pages_per_seq=8, fused=fused)
+        # Warmup wave: pays every one-time JIT (prefill, decode, page
+        # alloc/free) on THIS engine so the timed wave measures steady state.
+        for rid, pr in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=pr, max_new_tokens=n_new))
+        eng.run_to_completion()
+        d0, t0 = eng.dispatch_count, time.perf_counter()
+        for rid, pr in enumerate(prompts):
+            eng.submit(Request(rid=100 + rid, prompt=pr,
+                               max_new_tokens=n_new))
+        steps = 0
+        while eng.step():
+            steps += 1
+        dt = time.perf_counter() - t0
+        rows.append({
+            "mode": "fused" if fused else "v1 (4-dispatch)",
+            "decode_steps": steps,
+            "dispatches_step": (eng.dispatch_count - d0) / max(steps, 1),
+            "ms_step": dt / max(steps, 1) * 1e3,
+            "steps_s": steps / dt,
+        })
+    return rows
 
 
 def sweep(param: str, values, *, quick=False, strategies=STRATEGIES):
@@ -78,6 +200,19 @@ def main(quick: bool = False):
         print_table(f"Fig2 analogue: vary {key}", rows,
                     ["strategy", key, "mops_s", "rounds", "bytes_op",
                      "dep_chains", "rmw_op"])
+    all_rows["mixed"] = sweep_mixed(quick=quick)
+    print_table("Mixed LOAD/STORE/CAS + LL/SC/VALIDATE batches "
+                "(one unified apply)", all_rows["mixed"],
+                ["strategy", "sync_frac", "mops_s", "rounds", "writes",
+                 "bytes_op"])
+    try:
+        all_rows["fused_serving"] = bench_fused_serving(quick=quick)
+        print_table("Fused serving decode step: v1 4-dispatch vs one "
+                    "compiled program", all_rows["fused_serving"],
+                    ["mode", "decode_steps", "dispatches_step", "ms_step",
+                     "steps_s"])
+    except Exception as e:                     # model deps optional here
+        print(f"[fused serving bench skipped: {e!r}]")
     save_results("bench_atomics", all_rows)
     # paper-claim checks (soft, printed): cached fast path beats indirect
     by = {}

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_table, save_results, time_op
+from repro import atomics
 from repro.core import cachehash as ch
 
 VARIANTS = [("cachehash/seqlock", "seqlock", True),
@@ -33,27 +34,29 @@ def _ops(rng, *, nb, p, u, z, vw=1):
         keys = (rng.zipf(max(z, 1.01), p) - 1) % nb
     upd = rng.random(p) < u
     ins = rng.random(p) < 0.5
-    kind = np.where(upd, np.where(ins, ch.INSERT, ch.DELETE),
-                    ch.FIND).astype(np.int32)
+    kind = np.where(upd, np.where(ins, atomics.INSERT, atomics.DELETE),
+                    atomics.FIND).astype(np.int32)
     vals = rng.integers(0, 2**32, (p, vw), dtype=np.uint32)
-    return ch.OpBatch(jnp.asarray(kind), jnp.asarray(keys.astype(np.uint32)),
-                      jnp.asarray(vals))
+    return ch.make_hash_ops(jnp.asarray(kind),
+                            jnp.asarray(keys.astype(np.uint32)),
+                            jnp.asarray(vals), vw=vw)
 
 
 def run_cell(name, strategy, inline, *, nb, p, u, z, seed=0):
     rng = np.random.default_rng(seed)
-    table = ch.CacheHash(nb, vw=1, strategy=strategy, p_max=p, inline=inline)
+    spec = atomics.HashSpec(nb, vw=1, strategy=strategy, p_max=p,
+                            inline=inline)
+    state0 = ch.init_hash(spec)
     # preload ~ load factor 0.5
     pre = _ops(rng, nb=nb, p=min(nb // 2, 4 * p), u=1.0, z=0.0)
-    pre = pre._replace(kind=jnp.full_like(pre.kind, ch.INSERT))
-    table.apply(pre)
+    pre = pre._replace(kind=jnp.full_like(pre.kind, atomics.INSERT))
+    state0, _, _ = ch.apply_hash(spec, state0, pre)
     ops = _ops(rng, nb=nb, p=p, u=u, z=z)
 
     def step(state, ops):
-        return ch.apply_hash_ops(state, ops, strategy=strategy,
-                                 inline=inline, vw=1)
+        return ch.apply_hash(spec, state, ops)
 
-    dt, (state, res, stats) = time_op(step, table.state, ops, reps=3)
+    dt, (state, res, stats) = time_op(step, state0, ops, reps=3)
     live = p
     return {
         "variant": name, "nb": nb, "p": p, "u": u, "z": z,
@@ -69,15 +72,15 @@ def dict_oracle_throughput(*, nb, p, u, z, seed=0):
     rng = np.random.default_rng(seed)
     ops = _ops(rng, nb=nb, p=p, u=u, z=z)
     kind = np.asarray(ops.kind)
-    key = np.asarray(ops.key)
-    val = np.asarray(ops.value)
+    key = np.asarray(ops.slot).astype(np.uint32)
+    val = np.asarray(ops.desired)
     model = {}
     t0 = time.perf_counter()
     for i in range(p):
         k = int(key[i])
-        if kind[i] == ch.FIND:
+        if kind[i] == atomics.FIND:
             model.get(k)
-        elif kind[i] == ch.INSERT:
+        elif kind[i] == atomics.INSERT:
             model.setdefault(k, val[i])
         else:
             model.pop(k, None)

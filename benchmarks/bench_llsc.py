@@ -26,8 +26,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import print_table, save_results, time_op
-from repro.core import bigatomic as ba
-from repro.sync import llsc
+from repro import atomics
 from repro.sync.queue import DEQ, ENQ, BackoffPolicy, BigQueue
 
 STRATEGIES = ["seqlock", "indirect", "cached_wf", "cached_me"]
@@ -37,33 +36,37 @@ CONTENTION_Z = [0.0, 0.9, 2.0]        # >= 3 contention levels (acceptance)
 
 
 def _llsc_batch(rng, *, p, n, k, ll_frac, z):
-    kind = np.where(rng.random(p) < ll_frac, llsc.LL, llsc.SC).astype(
+    kind = np.where(rng.random(p) < ll_frac, atomics.LL, atomics.SC).astype(
         np.int32)
     if z <= 0.0:
         slots = rng.integers(0, n, p)
     else:
         slots = (rng.zipf(max(z, 1.01), size=p) - 1) % n
     desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
-    return llsc.make_sync_batch(kind, slots.astype(np.int32), desired, k=k)
+    return atomics.sync_ops(kind, slots.astype(np.int32), desired, k=k)
 
 
 def run_llsc_cell(strategy, *, n, k, p, ll_frac, z, reps=3, seed=0):
     rng = np.random.default_rng(seed)
-    state = ba.init(n, k, strategy, p_max=p)
-    ctx = llsc.init_ctx(p, k)
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=p)
+    state = atomics.init(spec)
+    ctx = atomics.init_ctx(p, k)
     # link every lane first so the SC lanes have something to commit against
-    ctx, _ = llsc.ll(state, ctx,
-                     (rng.zipf(max(z, 1.01), size=p) - 1) % n if z > 0
-                     else rng.integers(0, n, p), strategy=strategy, k=k)
+    link_slots = (rng.zipf(max(z, 1.01), size=p) - 1) % n if z > 0 \
+        else rng.integers(0, n, p)
+    state, ctx, _, _, _ = atomics.apply(
+        spec, state,
+        atomics.sync_ops(np.full(p, atomics.LL),
+                         np.asarray(link_slots, np.int32), k=k), ctx)
     ops = _llsc_batch(rng, p=p, n=n, k=k, ll_frac=ll_frac, z=z)
     # SC lanes must target their linked slot to be meaningful
-    slots = np.where(np.asarray(ops.kind) == llsc.SC,
+    slots = np.where(np.asarray(ops.kind) == atomics.SC,
                      np.asarray(ctx.slot), np.asarray(ops.slot))
-    ops = llsc.SyncOpBatch(ops.kind, np.asarray(slots, np.int32),
-                           ops.desired)
+    ops = atomics.OpBatch(ops.kind, np.asarray(slots, np.int32),
+                          ops.expected, ops.desired)
 
     def step(state, ctx, ops):
-        return llsc.apply_sync(state, ctx, ops, strategy=strategy, k=k)
+        return atomics.apply(spec, state, ops, ctx)
 
     dt, (st2, ctx2, res, stats, traffic) = time_op(step, state, ctx, ops,
                                                    reps=reps)

@@ -4,7 +4,7 @@ against the actual bytes held by the pytree layouts."""
 from __future__ import annotations
 
 from benchmarks.common import print_table, save_results
-from repro.core import bigatomic as ba
+from repro import atomics
 
 CASES = [(1 << 14, 4, 256), (1 << 17, 4, 256), (1 << 14, 16, 1024)]
 
@@ -14,9 +14,10 @@ def main(quick: bool = False):
     for n, k, p in CASES[:2] if quick else CASES:
         for strategy in ["plain", "seqlock", "simplock", "indirect",
                          "cached_wf", "cached_me"]:
-            pred = ba.memory_bytes(n, k, p, ba.Strategy(strategy))
-            state = ba.init(n, k, ba.Strategy(strategy), p)
-            actual = ba.state_nbytes(state)
+            spec = atomics.AtomicSpec(n, k, strategy, p_max=p)
+            pred = atomics.memory_bytes(spec)
+            state = atomics.init(spec)
+            actual = atomics.state_nbytes(state)
             rows.append({
                 "strategy": strategy, "n": n, "k": k, "p": p,
                 "model_bytes": pred, "actual_bytes": actual,

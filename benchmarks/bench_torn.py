@@ -19,7 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import print_table, save_results
-from repro.core import bigatomic as ba
+from repro import atomics
 
 STRATEGIES = ["seqlock", "simplock", "indirect", "cached_wf", "cached_me",
               "plain"]
@@ -29,15 +29,15 @@ def run(n=1024, k=8, n_writers=64, q=4096, seed=0):
     rng = np.random.default_rng(seed)
     rows = []
     for strategy in STRATEGIES:
-        table = ba.BigAtomicTable(n, k, strategy, p_max=256)
-        old = np.asarray(table.logical()).copy()
+        spec = atomics.AtomicSpec(n, k, strategy, p_max=256)
+        state = atomics.init(spec)
+        old = np.asarray(atomics.logical(spec, state)).copy()
         hot = rng.choice(n, n_writers, replace=False)
         new_vals = rng.integers(0, 2**32, (n_writers, k), dtype=np.uint32)
-        state = table.state
         for slot, nv in zip(hot, new_vals):
-            state = ba.begin_update(state, int(slot), nv, strategy=strategy)
+            state = atomics.begin_update(spec, state, int(slot), nv)
         slots = rng.choice(hot, q)                     # readers hit hot cells
-        vals, ok = ba.read_protocol(state, slots, strategy=strategy)
+        vals, ok = atomics.read(spec, state, slots)
         vals, ok = np.asarray(vals), np.asarray(ok)
         want_new = {int(s): nv for s, nv in zip(hot, new_vals)}
         is_old = (vals == old[slots]).all(1)

@@ -3,7 +3,9 @@ on them (CacheHash, multiversion stores, LL/SC + queues), and a jax_pallas
 training/serving stack that exercises them at production scale.
 
 Subpackage map:
-  core      — big-atomic strategies, batch linearization semantics, CacheHash
+  atomics   — THE public big-atomic API: specs, pytree states, one op
+              schema, strategy registry (DESIGN.md §5)
+  core      — big-atomic strategies, the unified engine, CacheHash
   sync      — LL/SC, atomic copy, MPMC ring queue (DESIGN.md §4)
   kernels   — Pallas TPU kernels + pure-jnp oracles
   serving   — paged-KV continuous-batching engine (DESIGN.md §3)

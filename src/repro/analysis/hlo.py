@@ -30,7 +30,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Iterable
 
 # ---------------------------------------------------------------------------
 # Hardware model (TPU v5e, per chip)

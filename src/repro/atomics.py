@@ -1,0 +1,70 @@
+"""repro.atomics — the single public entry point for big atomics (v2 API).
+
+The paper's central claim is that one abstraction — a k-word linearizable
+register with load/store/CAS (and LL/SC per Blelloch & Wei, arXiv:1911.09671)
+— cleanly underlies tuples, version lists and hash tables.  This module IS
+that abstraction:
+
+  Specs (static)     AtomicSpec / HashSpec / QueueSpec — frozen, hashable
+                     descriptions of shape + strategy; the ONLY static
+                     argument any entry point takes.
+  States (pytrees)   TableState / HashState / LinkCtx / queue ring states —
+                     pure pytrees that ride through `jax.jit`, `lax.scan`,
+                     donation and `shard_map` unchanged.
+  One op schema      OpBatch with per-lane kind LOAD / STORE / CAS / LL /
+                     SC / VALIDATE (+ FIND / INSERT / DELETE for CacheHash),
+                     one linearization for mixed batches.
+  Strategy registry  StrategyImpl + register_strategy(): memory layouts
+                     plug in without touching core.
+
+Canonical usage:
+
+    from repro import atomics
+
+    spec = atomics.AtomicSpec(n=1024, k=4, strategy="cached_me", p_max=256)
+    state = atomics.init(spec)
+    ops = atomics.make_ops(kind, slot, expected, desired, k=spec.k)
+    state, ctx, res, stats, traffic = atomics.apply(spec, state, ops, ctx)
+    vals, ok = atomics.read(spec, state, slots)        # honest layout read
+
+Legacy entry points (`core.bigatomic.apply_ops`, `sync.llsc.apply_sync`,
+`core.cachehash.apply_hash_ops`, the `BigAtomicTable`/`CacheHash` wrappers)
+survive as thin deprecation shims over this module; see DESIGN.md §5 for
+the migration table.
+"""
+
+from repro.core.engine import (  # noqa: F401
+    CAS, DELETE, FIND, IDLE, INSERT, LL, LOAD, SC, STORE, VALIDATE,
+    ApplyResult, ApplyStats, LinkCtx, OpBatch,
+    apply, apply_ops_reference, cas_ops, init, init_ctx, linearize, loads,
+    logical, make_ops, read, stores, sync_ops,
+)
+from repro.core.layout import (  # noqa: F401
+    TableState, Traffic, WORD_BYTES, WORD_DTYPE, state_nbytes,
+)
+from repro.core.registry import (  # noqa: F401
+    StrategyImpl, get_strategy, register_strategy, registered_strategies,
+    unregister_strategy,
+)
+from repro.core.specs import (  # noqa: F401
+    DEFAULT_STRATEGY, AtomicSpec, HashSpec, QueueSpec,
+)
+from repro.core import strategies as _builtin_strategies  # noqa: F401
+
+
+def memory_bytes(spec: AtomicSpec) -> int:
+    """Exact bytes of the layout (paper Table 1 / §5.5 forms)."""
+    return get_strategy(spec.strategy).memory_bytes(spec.n, spec.k,
+                                                    spec.p_max)
+
+
+def begin_update(spec: AtomicSpec, state, slot: int, new_value,
+                 torn_words: int | None = None):
+    """Freeze a writer at its most vulnerable point (mid-cache-copy), exactly
+    as oversubscription deschedules a lock-holder in the paper.  Test/bench
+    adversary; see `core.bigatomic.begin_update` for per-strategy effects."""
+    import jax.numpy as jnp
+    new_value = jnp.asarray(new_value, WORD_DTYPE)
+    torn = spec.k // 2 if torn_words is None else torn_words
+    return get_strategy(spec.strategy).begin_update(state, slot, new_value,
+                                                    torn)

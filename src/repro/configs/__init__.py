@@ -9,7 +9,6 @@ DESIGN.md §5."""
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCHS = [

@@ -1,47 +1,43 @@
-"""Big-atomic tables: the paper's four strategies as real memory layouts.
+"""Big-atomic tables — v1 compatibility layer over the v2 `repro.atomics` API.
 
-Every strategy provides the *same* linearizable batch semantics (delegated to
-`semantics.apply_batch`, property-tested against the sequential oracle) but a
-*different* memory layout, reader protocol, and traffic profile:
+The paper's four lock-free strategies (plus the SIMPLOCK / PLAIN controls)
+now live behind the strategy registry: layouts are `StrategyImpl`s in
+`repro.core.strategies`, linearization is the unified engine in
+`repro.core.engine`, and the canonical entry point is
 
-  SEQLOCK    data[n,k] + ver[n].            1 gather/load; blocking on torn state.
-  INDIRECT   ptr[n] -> pool[n+2p, k].       2 *dependent* gathers per load; never blocks.
-  CACHED_WF  cache[n,k] + ver[n] + bptr[n] -> pool[n+2p,k].  1 gather fast path,
-             backup fallback on race; never blocks.  Space 2nk + O(pk).
-  CACHED_ME  cache[n,k] + ver[n] + bptr[n](tagged null) -> pool[3p,k].  1 gather
-             fast path; backup only *during* a race; space nk + O(pk).
-  SIMPLOCK   data[n,k] + lock[n].           lock RMW on every op; blocks readers.
-  PLAIN      data[n,k], no protocol.        negative control: returns torn data.
+    repro.atomics.apply(spec, state, ops [, ctx])
 
-The reader protocol (`read_protocol`) is honest: it computes its answer only
-from layout fields, and the torn-state simulator (`begin_update`) freezes a
-writer at its most vulnerable point so tests can verify which strategies
-detect (seqlock), tolerate (indirect/cached), or corrupt (plain).
-
-Node reclamation uses a FIFO ring of free slots — the deterministic analogue
-of the paper's hazard-pointer/private-slab schemes: a retired node is reused
-only after every other free slot has been consumed, giving the same O(p·k)
-in-flight bound without a scheduler adversary (see DESIGN.md §2).
+with `AtomicSpec` the only static argument (see DESIGN.md §5 for the
+migration table).  This module keeps the v1 surface — `init` / `logical` /
+`apply_ops` / `read_protocol` / `commit_layout` / `begin_update` /
+`memory_bytes` and the stateful `BigAtomicTable` wrapper — as thin shims so
+existing callers and the tier-1 suite keep working; the old five if/elif
+strategy chains are gone, every path dispatches through the registry, so a
+strategy registered from *anywhere* works here too.
 """
 
 from __future__ import annotations
 
 import enum
-import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
+from repro.core import engine
 from repro.core import semantics as sem
-
-WORD_BYTES = 4  # uint32 words
-NULL = jnp.int32(-1)
+from repro.core.layout import (  # noqa: F401  (re-exports: v1 import surface)
+    NULL, TableState, Traffic, WORD_BYTES, state_nbytes,
+)
+from repro.core.registry import get_strategy
+from repro.core.specs import DEFAULT_STRATEGY, AtomicSpec
 
 
 class Strategy(str, enum.Enum):
+    """The built-in layouts (legacy enum).  The v2 API uses plain registry
+    names so third-party strategies are first-class; `strategy_name` accepts
+    both."""
+
     SEQLOCK = "seqlock"
     INDIRECT = "indirect"
     CACHED_WF = "cached_wf"
@@ -50,265 +46,53 @@ class Strategy(str, enum.Enum):
     PLAIN = "plain"
 
 
-class TableState(NamedTuple):
-    """Unified pytree; unused fields are size-0 arrays for lean strategies.
-
-    data:      word[n, k]  inline cache / value array (INDIRECT: engine shadow,
-               not part of the logical layout — reads never touch it).
-    version:   uint32[n]   seqlock version (even = unlocked).
-    bptr:      int32[n]    backup / indirect node index; -1 null; for
-               CACHED_ME, -(tag+2) encodes a *tagged* null (paper §3.2).
-    mark:      bool[n]     CACHED_WF invalid-mark on the backup pointer.
-    lock:      uint32[n]   SIMPLOCK lock word (0 = free).
-    pool:      word[m, k]  node pool.
-    free_ring: int32[m]    FIFO ring of free node indices.
-    ring_head: uint32[]    next allocation position (mod ring size).
-    alloc_gen: uint32[]    total allocations ever (reclamation generation).
-    """
-
-    data: jax.Array
-    version: jax.Array
-    bptr: jax.Array
-    mark: jax.Array
-    lock: jax.Array
-    pool: jax.Array
-    free_ring: jax.Array
-    ring_head: jax.Array
-    alloc_gen: jax.Array
+def strategy_name(strategy) -> str:
+    """Normalize a Strategy enum / string to its registry name."""
+    return strategy.value if isinstance(strategy, Strategy) else str(strategy)
 
 
-class Traffic(NamedTuple):
-    """Analytic HBM traffic for one batch (TPU roofline inputs).
-
-    bytes_read / bytes_written: modeled HBM bytes.
-    dep_chains: number of *dependent* gather rounds on the critical path
-                (1 = fully pipelineable, 2 = pointer chase).
-    rmw_ops:    single-word atomic RMWs (CAS/lock) — contention proxy.
-    """
-
-    bytes_read: jax.Array
-    bytes_written: jax.Array
-    dep_chains: jax.Array
-    rmw_ops: jax.Array
+def _spec(state: TableState, strategy, k: int | None = None,
+          p_max: int = 1024) -> AtomicSpec:
+    n = state.version.shape[0]
+    k = state.data.shape[1] if k is None else k
+    return AtomicSpec(n, k, strategy_name(strategy), p_max)
 
 
-def _empty(dtype, shape=(0,)):
-    return jnp.zeros(shape, dtype)
-
-
-def init(n: int, k: int, strategy: Strategy, p_max: int,
+def init(n: int, k: int, strategy, p_max: int,
          initial: np.ndarray | None = None) -> TableState:
     """Build the initial state for a table of n cells × k words."""
-    strategy = Strategy(strategy)
-    data = jnp.zeros((n, k), sem.WORD_DTYPE) if initial is None else jnp.asarray(
-        initial, sem.WORD_DTYPE)
-    version = jnp.zeros((n,), jnp.uint32)
-    if strategy in (Strategy.SEQLOCK, Strategy.PLAIN):
-        return TableState(data, version, _empty(jnp.int32), _empty(bool),
-                          _empty(jnp.uint32), _empty(sem.WORD_DTYPE, (0, k)),
-                          _empty(jnp.int32), jnp.uint32(0), jnp.uint32(0))
-    if strategy == Strategy.SIMPLOCK:
-        return TableState(data, version, _empty(jnp.int32), _empty(bool),
-                          jnp.zeros((n,), jnp.uint32),
-                          _empty(sem.WORD_DTYPE, (0, k)),
-                          _empty(jnp.int32), jnp.uint32(0), jnp.uint32(0))
-    if strategy in (Strategy.INDIRECT, Strategy.CACHED_WF):
-        # n installed nodes + 2p slack (SMR in-flight bound).
-        m = n + 2 * p_max
-        pool = jnp.zeros((m, k), sem.WORD_DTYPE)
-        pool = pool.at[:n].set(data)
-        bptr = jnp.arange(n, dtype=jnp.int32)           # cell i -> node i
-        free_ring = jnp.concatenate(
-            [jnp.arange(n, m, dtype=jnp.int32),
-             jnp.full((n,), NULL)])                      # slots occupied by live nodes
-        mark = jnp.zeros((n,), bool) if strategy == Strategy.CACHED_WF else _empty(bool)
-        return TableState(data, version, bptr, mark, _empty(jnp.uint32),
-                          pool, free_ring, jnp.uint32(0), jnp.uint32(0))
-    if strategy == Strategy.CACHED_ME:
-        m = max(3 * p_max, 1)
-        pool = jnp.zeros((m, k), sem.WORD_DTYPE)
-        bptr = jnp.full((n,), NULL)                      # null: cache is live
-        free_ring = jnp.arange(m, dtype=jnp.int32)
-        return TableState(data, version, bptr, mark=_empty(bool),
-                          lock=_empty(jnp.uint32), pool=pool,
-                          free_ring=free_ring, ring_head=jnp.uint32(0),
-                          alloc_gen=jnp.uint32(0))
-    raise ValueError(strategy)
+    return engine.init(AtomicSpec(n, k, strategy_name(strategy), p_max),
+                       initial)
 
 
-def logical(state: TableState, strategy: Strategy) -> jax.Array:
+def logical(state: TableState, strategy) -> jax.Array:
     """The current logical value of every cell, derived from the layout."""
-    strategy = Strategy(strategy)
-    if strategy == Strategy.INDIRECT:
-        return state.pool[state.bptr]
-    return state.data
-
-
-# ---------------------------------------------------------------------------
-# Batched apply: engine semantics + per-strategy layout maintenance.
-# ---------------------------------------------------------------------------
-
-def _ring_alloc(state: TableState, want: jax.Array, max_want: int):
-    """Pop up to `max_want` node slots from the FIFO free ring (masked by
-    rank < want).  Returns (slots[max_want], new_state)."""
-    m = state.free_ring.shape[0]
-    ranks = jnp.arange(max_want, dtype=jnp.uint32)
-    pos = (state.ring_head + ranks) % jnp.uint32(m)
-    slots = state.free_ring[pos]
-    live = ranks < want
-    # Consumed entries are cleared (debug hygiene; not required for safety).
-    ring = state.free_ring.at[jnp.where(live, pos, m)].set(NULL, mode="drop")
-    new_head = state.ring_head + want
-    return jnp.where(live, slots, NULL), state._replace(
-        free_ring=ring, ring_head=new_head % jnp.uint32(m),
-        alloc_gen=state.alloc_gen + want)
-
-
-def _ring_free(state: TableState, slots: jax.Array, count: jax.Array,
-               live_total: int):
-    """Push retired node slots at the ring tail (head + free_count)."""
-    m = state.free_ring.shape[0]
-    # Tail = head + number of currently-free entries.  We track it implicitly:
-    # ring is FIFO and #free is invariant per strategy, so tail == head works
-    # when every alloc is matched by exactly one free in the same batch.
-    ranks = jnp.arange(live_total, dtype=jnp.uint32)
-    live = ranks < count
-    pos = (state.ring_head + jnp.uint32(m) - count + ranks) % jnp.uint32(m)
-    ring = state.free_ring.at[jnp.where(live, pos, m)].set(
-        jnp.where(live, slots, NULL), mode="drop")
-    return state._replace(free_ring=ring)
+    return get_strategy(strategy_name(strategy)).logical(state)
 
 
 def commit_layout(state: TableState, new_data: jax.Array,
                   new_version: jax.Array, n_updates: jax.Array,
-                  strategy: Strategy, p: int) -> TableState:
+                  strategy, p: int) -> TableState:
     """Reconcile a strategy's layout after the logical values have advanced
-    (shared by `apply_ops` and by CacheHash's bucket table).
-
-    `new_data`/`new_version` are the post-batch logical values + versions;
-    `n_updates` the number of update operations performed (CACHED_ME transient
-    accounting).  Versions advance by 2 per successful update (paper parity).
-    """
-    strategy = Strategy(strategy)
-    n = state.version.shape[0]
-    dirty = new_version != state.version
-
-    if strategy in (Strategy.SEQLOCK, Strategy.PLAIN, Strategy.SIMPLOCK):
-        return state._replace(data=new_data, version=new_version)
-
-    if strategy in (Strategy.INDIRECT, Strategy.CACHED_WF):
-        # One fresh node per dirty cell holds the final value; the old node is
-        # retired to the ring.  (Intermediate values of a CAS chain live and
-        # die inside the batch; they are counted in stats.n_updates.)
-        d_count = jnp.sum(dirty.astype(jnp.uint32))
-        order = jnp.argsort(~dirty, stable=True)   # dirty slots first
-        dslots = jnp.where(jnp.arange(n) < d_count, order, n)
-        max_d = min(n, p)
-        dslots = dslots[:max_d]
-        live = dslots < n
-        new_nodes, st2 = _ring_alloc(state, d_count, max_d)
-        old_nodes = state.bptr[jnp.minimum(dslots, n - 1)]
-        pool = st2.pool.at[jnp.where(live, new_nodes, st2.pool.shape[0])].set(
-            new_data[jnp.minimum(dslots, n - 1)], mode="drop")
-        bptr = st2.bptr.at[jnp.where(live, dslots, n)].set(
-            jnp.where(live, new_nodes, NULL), mode="drop")
-        st3 = st2._replace(pool=pool, bptr=bptr, data=new_data,
-                           version=new_version)
-        new_state = _ring_free(st3, jnp.where(live, old_nodes, NULL),
-                               d_count, max_d)
-        if strategy == Strategy.CACHED_WF:
-            # Batch completes cleanly: every dirty cell ends validated
-            # (unmarked) with cache == backup.
-            new_state = new_state._replace(mark=jnp.zeros_like(state.mark))
-        return new_state
-
-    if strategy == Strategy.CACHED_ME:
-        # Transient backups: installed during the update, uninstalled after
-        # the cache copy (backup returns to tagged null carrying the version).
-        # Pool slots cycle through the 3p ring within the batch; the final
-        # layout has all-null bptr (paper §3.2 invariant).
-        ring_cap = state.free_ring.shape[0]
-        u_count = jnp.minimum(n_updates.astype(jnp.uint32),
-                              jnp.uint32(ring_cap))
-        max_u = min(p, ring_cap)
-        slots_alloc, st2 = _ring_alloc(state, u_count, max_u)
-        # All transients are freed within the batch: push them straight back.
-        st3 = _ring_free(st2, slots_alloc, u_count, max_u)
-        # Tagged null: encode low version bits so a stale CAS can't ABA.
-        tag = (new_version >> 1).astype(jnp.int32) & jnp.int32(0x3FFFFFFF)
-        bptr = jnp.where(dirty, -(tag + 2), st3.bptr)
-        return st3._replace(data=new_data, version=new_version, bptr=bptr)
-
-    raise ValueError(strategy)  # pragma: no cover
+    (shared by the unified engine and by CacheHash's bucket table)."""
+    return get_strategy(strategy_name(strategy)).commit(
+        state, new_data, new_version, n_updates, p)
 
 
-@functools.partial(jax.jit, static_argnames=("strategy", "k"))
+def _traffic_model(strategy, stats: sem.ApplyStats, k: int, p: int):
+    """Analytic HBM bytes + dependency depth per batch (roofline inputs)."""
+    return get_strategy(strategy_name(strategy)).traffic(stats, k, p)
+
+
 def apply_ops(state: TableState, ops: sem.OpBatch, *, strategy: str, k: int):
-    """Linearize `ops` against the table; maintain the strategy's layout.
+    """DEPRECATED shim: use `repro.atomics.apply(spec, state, ops)`.
 
-    Returns (new_state, ApplyResult, ApplyStats, Traffic).
-    """
-    strategy = Strategy(strategy)
-    p = ops.p
-
-    ver_before = state.version
-    new_logical, new_version, result, stats = sem.apply_batch(
-        logical(state, strategy) if strategy != Strategy.INDIRECT else state.data,
-        ver_before, ops)
-
-    new_state = commit_layout(state, new_logical, new_version,
-                              stats.n_updates, strategy, p)
-    traffic = _traffic_model(strategy, stats, k, p)
+    Returns (new_state, ApplyResult, ApplyStats, Traffic)."""
+    new_state, _, result, stats, traffic = engine.apply(
+        _spec(state, strategy, k), state, ops)
     return new_state, result, stats, traffic
 
 
-def _traffic_model(strategy: Strategy, stats: sem.ApplyStats, k: int, p: int):
-    """Analytic HBM bytes + dependency depth per batch (roofline inputs)."""
-    w = WORD_BYTES
-    cell = k * w
-    loads = stats.n_loads
-    raced = stats.n_raced_loads
-    fast = loads - raced
-    upd = stats.n_updates
-    dirty = stats.n_dirty_cells
-    z = jnp.int32(0)
-
-    if strategy == Strategy.SEQLOCK:
-        br = loads * (cell + 2 * w) + raced * (cell + 2 * w) + upd * (cell + 2 * w)
-        bw = upd * (cell + 2 * w)
-        chains = jnp.where(raced > 0, 2, 1)
-        rmw = upd  # version lock increment
-    elif strategy == Strategy.PLAIN:
-        br, bw, chains, rmw = loads * cell + upd * cell, upd * cell, jnp.int32(1), z
-    elif strategy == Strategy.SIMPLOCK:
-        br = (loads + upd) * (cell + w)
-        bw = upd * cell + (loads + upd) * 2 * w        # lock/unlock writes
-        chains, rmw = jnp.int32(2), loads + upd        # lock acquire precedes data
-    elif strategy == Strategy.INDIRECT:
-        br = loads * (w + cell) + upd * (w + cell)
-        bw = upd * cell + dirty * w
-        chains, rmw = jnp.int32(2), upd                 # ptr chase on EVERY load
-    elif strategy == Strategy.CACHED_WF:
-        br = fast * (cell + 2 * w) + raced * (cell + 2 * w + cell) + upd * (cell + 3 * w)
-        bw = upd * (2 * cell + 3 * w)                   # node + cache + ver/ptr
-        chains = jnp.where(raced > 0, 2, 1)             # fast path: ONE gather
-        rmw = 2 * upd                                   # ptr CAS + ver lock
-    elif strategy == Strategy.CACHED_ME:
-        br = fast * (cell + 2 * w) + raced * (cell + 2 * w + cell) + upd * (cell + 3 * w)
-        bw = upd * (2 * cell + 3 * w)
-        chains = jnp.where(raced > 0, 2, 1)
-        rmw = 2 * upd
-    else:  # pragma: no cover
-        raise ValueError(strategy)
-    return Traffic(jnp.asarray(br, jnp.float32), jnp.asarray(bw, jnp.float32),
-                   jnp.asarray(chains, jnp.int32), jnp.asarray(rmw, jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# Honest reader protocol + torn-state simulation (oversubscription analogue).
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("strategy",))
 def read_protocol(state: TableState, slots: jax.Array, *, strategy: str):
     """Read cells using ONLY the strategy's layout fields, exactly as the
     paper's load would.  Returns (values[q,k], ok[q]).
@@ -318,52 +102,7 @@ def read_protocol(state: TableState, slots: jax.Array, *, strategy: str):
     Lock-free strategies always return ok=True with a consistent value.
     PLAIN returns whatever bytes are there (possibly torn) with ok=True.
     """
-    strategy = Strategy(strategy)
-    q = slots.shape[0]
-    if strategy == Strategy.PLAIN:
-        return state.data[slots], jnp.ones((q,), bool)
-    if strategy == Strategy.SEQLOCK:
-        v1 = state.version[slots]
-        val = state.data[slots]
-        v2 = state.version[slots]
-        ok = (v1 == v2) & (v1 % 2 == 0)
-        return val, ok
-    if strategy == Strategy.SIMPLOCK:
-        held = state.lock[slots] != 0
-        return state.data[slots], ~held
-    if strategy == Strategy.INDIRECT:
-        node = state.bptr[slots]
-        return state.pool[node], jnp.ones((q,), bool)
-    if strategy == Strategy.CACHED_WF:
-        v1 = state.version[slots]
-        val = state.data[slots]
-        marked = state.mark[slots]
-        v2 = state.version[slots]
-        fastok = (~marked) & (v1 == v2) & (v1 % 2 == 0)
-        backup = state.pool[state.bptr[slots]]          # slow path (protected)
-        return jnp.where(fastok[:, None], val, backup), jnp.ones((q,), bool)
-    if strategy == Strategy.CACHED_ME:
-        v1 = state.version[slots]
-        val = state.data[slots]
-        bp = state.bptr[slots]
-        is_null = bp < 0
-        v2 = state.version[slots]
-        fastok = is_null & (v1 == v2) & (v1 % 2 == 0)
-        backup = state.pool[jnp.maximum(bp, 0)]         # slow path: live node
-        # If bptr is a real node, the node holds the live value (invariant);
-        # either way the reader makes progress -> ok is always True.
-        return jnp.where(fastok[:, None], val, backup), jnp.ones((q,), bool)
-    raise ValueError(strategy)
-
-
-def _sim_alloc(state: TableState):
-    """Pop ONE node slot for the torn-state simulator (each frozen writer
-    must hold a distinct node, like a distinct thread's private slab)."""
-    m = state.free_ring.shape[0]
-    slot = state.free_ring[state.ring_head]
-    return slot, state._replace(
-        ring_head=(state.ring_head + 1) % jnp.uint32(m),
-        alloc_gen=state.alloc_gen + 1)
+    return engine.read(_spec(state, strategy), state, slots)
 
 
 def begin_update(state: TableState, slot: int, new_value: np.ndarray,
@@ -378,112 +117,82 @@ def begin_update(state: TableState, slot: int, new_value: np.ndarray,
     CACHED_ME: backup installed (non-null), cache half-torn  -> readers see NEW value.
     PLAIN:     cache half-written, no protocol               -> readers corrupt.
     """
-    strategy = Strategy(strategy)
     k = state.data.shape[1] if state.data.size else state.pool.shape[1]
     torn = k // 2 if torn_words is None else torn_words
     new_value = jnp.asarray(new_value, sem.WORD_DTYPE)
-    half = state.data[slot].at[:torn].set(new_value[:torn]) if state.data.size else None
-
-    if strategy == Strategy.PLAIN:
-        return state._replace(data=state.data.at[slot].set(half))
-    if strategy == Strategy.SEQLOCK:
-        return state._replace(
-            version=state.version.at[slot].add(jnp.uint32(1)),  # odd = locked
-            data=state.data.at[slot].set(half))
-    if strategy == Strategy.SIMPLOCK:
-        return state._replace(lock=state.lock.at[slot].set(jnp.uint32(1)),
-                              data=state.data.at[slot].set(half))
-    if strategy == Strategy.INDIRECT:
-        # Node written; pointer swing (the linearization point) pending.
-        free_slot, state = _sim_alloc(state)
-        pool = state.pool.at[free_slot].set(new_value)
-        return state._replace(pool=pool)
-    if strategy == Strategy.CACHED_WF:
-        # Linearization point (pointer install) HAS happened: new node is the
-        # truth; cache is mid-copy and marked invalid; version odd.
-        free_slot, state = _sim_alloc(state)
-        pool = state.pool.at[free_slot].set(new_value)
-        return state._replace(
-            pool=pool,
-            bptr=state.bptr.at[slot].set(free_slot),
-            mark=state.mark.at[slot].set(True),
-            version=state.version.at[slot].add(jnp.uint32(1)),
-            data=state.data.at[slot].set(half))
-    if strategy == Strategy.CACHED_ME:
-        free_slot, state = _sim_alloc(state)
-        pool = state.pool.at[free_slot].set(new_value)
-        return state._replace(
-            pool=pool,
-            bptr=state.bptr.at[slot].set(free_slot),
-            version=state.version.at[slot].add(jnp.uint32(1)),
-            data=state.data.at[slot].set(half))
-    raise ValueError(strategy)
+    return get_strategy(strategy_name(strategy)).begin_update(
+        state, slot, new_value, torn)
 
 
-# ---------------------------------------------------------------------------
-# Table 1 space accounting (§5.5 constants).
-# ---------------------------------------------------------------------------
-
-def memory_bytes(n: int, k: int, p: int, strategy: Strategy) -> int:
+def memory_bytes(n: int, k: int, p: int, strategy) -> int:
     """Exact bytes of the layout, matching the paper's Table 1 / §5.5 forms."""
-    w = WORD_BYTES
-    strategy = Strategy(strategy)
-    if strategy == Strategy.PLAIN:
-        return n * k * w
-    if strategy == Strategy.SEQLOCK:
-        return n * (k + 1) * w
-    if strategy == Strategy.SIMPLOCK:
-        return n * (k + 1) * w
-    if strategy == Strategy.INDIRECT:
-        return n * w + (n + 2 * p) * k * w + (n + 2 * p) * w      # ptr + pool + ring
-    if strategy == Strategy.CACHED_WF:
-        return n * (k + 2) * w + (n + 2 * p) * k * w + (n + 2 * p) * w
-    if strategy == Strategy.CACHED_ME:
-        return n * (k + 2) * w + 3 * p * k * w + 3 * p * w
-    raise ValueError(strategy)
-
-
-def state_nbytes(state: TableState) -> int:
-    """Actual bytes held by the pytree (validates memory_bytes in tests)."""
-    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(state))
+    return get_strategy(strategy_name(strategy)).memory_bytes(n, k, p)
 
 
 class BigAtomicTable:
-    """Thin stateful wrapper (functional core above) — the public API."""
+    """Thin stateful DEPRECATION shim over `repro.atomics` — new code should
+    hold an `AtomicSpec` + `TableState` and call `atomics.apply` directly."""
 
-    def __init__(self, n: int, k: int, strategy: str | Strategy = Strategy.CACHED_ME,
+    def __init__(self, n: int, k: int, strategy=None,
                  p_max: int = 1024, initial: np.ndarray | None = None):
-        self.n, self.k = n, k
-        self.strategy = Strategy(strategy)
-        self.p_max = p_max
-        self.state = init(n, k, self.strategy, p_max, initial)
+        name = strategy_name(strategy) if strategy is not None \
+            else DEFAULT_STRATEGY
+        self.spec = AtomicSpec(n, k, name, p_max)
+        self.state = engine.init(self.spec, initial)
+
+    # -- v1 attribute surface ------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.spec.n
+
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    @property
+    def p_max(self) -> int:
+        return self.spec.p_max
+
+    @property
+    def strategy(self) -> str:
+        return self.spec.strategy
+
+    # -- ops (all construction routes through the checked make_ops family) ---
 
     def apply(self, ops: sem.OpBatch):
-        self.state, result, stats, traffic = apply_ops(
-            self.state, ops, strategy=self.strategy.value, k=self.k)
+        self.state, _, result, stats, traffic = engine.apply(
+            self.spec, self.state, ops)
         return result, stats, traffic
 
-    def load(self, slots) -> jax.Array:
-        vals, ok = read_protocol(self.state, jnp.asarray(slots, jnp.int32),
-                                 strategy=self.strategy.value)
-        return vals
+    def load(self, slots, *, return_ok: bool = False):
+        """Honest per-strategy read of `slots`.
+
+        Returns values[q, k]; with `return_ok=True`, returns (values, ok).
+
+        Torn-read/retry contract: `ok[i]` is False when the strategy's
+        reader protocol *blocked* — a SEQLOCK cell observed mid-update (torn
+        version check) or a SIMPLOCK cell whose lock is held — in which case
+        `values[i]` is NOT a linearizable snapshot and the caller must retry
+        the read (the paper's oversubscription failure mode).  The four
+        lock-free strategies always return ok=True with a consistent value;
+        PLAIN returns ok=True even for torn bytes (negative control).  The
+        default `return_ok=False` form is only safe on lock-free strategies
+        and asserts nothing — prefer `return_ok=True` anywhere a blocking
+        strategy may be in play.
+        """
+        vals, ok = engine.read(self.spec, self.state,
+                               jnp.asarray(slots, jnp.int32))
+        return (vals, ok) if return_ok else vals
 
     def store(self, slots, values):
-        p = len(slots)
-        ops = sem.make_op_batch(np.full(p, sem.STORE), slots,
-                                desired=values, k=self.k)
-        return self.apply(ops)
+        return self.apply(engine.stores(slots, values, k=self.k))
 
     def cas(self, slots, expected, desired):
-        p = len(slots)
-        ops = sem.OpBatch(jnp.full((p,), sem.CAS, jnp.int32),
-                          jnp.asarray(slots, jnp.int32),
-                          jnp.asarray(expected, sem.WORD_DTYPE),
-                          jnp.asarray(desired, sem.WORD_DTYPE))
-        return self.apply(ops)
+        return self.apply(engine.cas_ops(slots, expected, desired, k=self.k))
 
     def logical(self) -> jax.Array:
-        return logical(self.state, self.strategy)
+        return engine.logical(self.spec, self.state)
 
     def memory_bytes(self) -> int:
         return memory_bytes(self.n, self.k, self.p_max, self.strategy)

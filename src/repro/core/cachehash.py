@@ -20,12 +20,20 @@ Semantics (faithful to §4):
 Chain nodes are written once and are immutable until retired (that is what
 makes the scheme lock-free given a big-atomic bucket cell); only the bucket
 cell mutates, which is exactly why it must be a big atomic.  The bucket array
-is a `bigatomic.TableState` parameterized by strategy, and layout maintenance
-is shared via `bigatomic.commit_layout`, so the Fig-3 comparison (CacheHash
-over seqlock / cached_me / cached_wf / indirect vs Chaining) falls out of one
-implementation.
+is a `TableState` parameterized by the spec's strategy, and layout
+maintenance dispatches through the strategy registry, so the Fig-3
+comparison (CacheHash over seqlock / cached_me / cached_wf / indirect vs
+Chaining) falls out of one implementation — and a strategy registered from
+anywhere works here untouched.
 
-Batch execution mirrors `semantics.apply_batch`: ops are grouped by bucket and
+v2 API (DESIGN.md §5): `apply_hash(spec, state, ops)` with a static
+`HashSpec` and ops in the unified schema (`kind` ∈ FIND/INSERT/DELETE/IDLE,
+`slot` = key bits, `desired[:, :vw]` = value; build with `make_hash_ops`).
+`HashState` is a pure pytree.  The legacy `apply_hash_ops(...,
+strategy=..., inline=..., vw=...)`, the 3-field `OpBatch` and the stateful
+`CacheHash` wrapper survive as deprecation shims.
+
+Batch execution mirrors the unified engine: ops are grouped by bucket and
 serialized per bucket in lane order (`L = max ops per bucket` rounds); rounds
 touch disjoint buckets so all scatters are conflict-free.  Pool slots come
 from an explicit FIFO ring (head = alloc cursor, tail = free cursor), the
@@ -44,13 +52,20 @@ import numpy as np
 from jax import lax
 
 from repro.core import bigatomic as ba
+from repro.core import engine
 from repro.core import semantics as sem
-from repro.core.semantics import _segmented_scan_max
+from repro.core.engine import _segmented_scan_max
+from repro.core.specs import DEFAULT_STRATEGY, HashSpec
 
+# Legacy kind numbering (v1).  The unified namespace uses engine.FIND /
+# INSERT / DELETE; `_TO_UNIFIED` maps v1 batches onto it.
 FIND = 0
 INSERT = 1
 DELETE = 2
 IDLE = 3
+
+_TO_UNIFIED = np.asarray(
+    [engine.FIND, engine.INSERT, engine.DELETE, engine.IDLE], np.int32)
 
 EMPTY = jnp.uint32(0xFFFFFFFF)   # bucket has no first link
 NULLP = jnp.uint32(0xFFFFFFFE)   # link has no successor
@@ -58,6 +73,8 @@ _CODE_MIN = jnp.uint32(0xFFFFFFFE)  # next >= this <=> not a pool index
 
 
 class HashState(NamedTuple):
+    """Pure pytree: rides through `jax.jit` / `lax.scan` unchanged."""
+
     table: ba.TableState      # bucket cells [nb, cellw] (+ strategy fields)
     pool: jax.Array           # chain nodes [cap, 2+vw]
     free_ring: jax.Array      # FIFO ring of free pool slots
@@ -81,9 +98,28 @@ class HashStats(NamedTuple):
 
 
 class OpBatch(NamedTuple):
-    kind: jax.Array      # int32[q]
+    """Legacy 3-field hash batch (v1).  New code: `make_hash_ops`."""
+
+    kind: jax.Array      # int32[q]  (v1 numbering)
     key: jax.Array       # uint32[q]
     value: jax.Array     # uint32[q, vw]
+
+
+def make_hash_ops(kind, key, value=None, *, vw: int) -> engine.OpBatch:
+    """Build a unified-schema hash batch: `slot` carries the uint32 key
+    bit-pattern, `desired[:, :vw]` the value.  Kinds are the unified
+    FIND/INSERT/DELETE/IDLE constants."""
+    key = jnp.asarray(key, jnp.uint32).astype(jnp.int32)
+    return engine.make_ops(kind, key, desired=value, k=vw)
+
+
+def _to_unified(ops) -> engine.OpBatch:
+    """Accept a legacy 3-field OpBatch or a unified batch; return unified."""
+    if isinstance(ops, OpBatch) or hasattr(ops, "key"):
+        kind = jnp.asarray(_TO_UNIFIED)[jnp.clip(ops.kind, 0, 3)]
+        return make_hash_ops(kind, ops.key, ops.value,
+                             vw=ops.value.shape[1])
+    return ops
 
 
 def hash_u32(key: jax.Array) -> jax.Array:
@@ -94,44 +130,50 @@ def hash_u32(key: jax.Array) -> jax.Array:
     return h ^ (h >> 16)
 
 
-def init(nb: int, vw: int, strategy: str | ba.Strategy, p_max: int,
-         *, inline: bool = True, chain_factor: float = 2.0) -> HashState:
-    """`nb` power-of-two buckets; `vw` value words; `inline=False` gives the
-    Chaining baseline (bucket holds only the chain head pointer)."""
-    assert nb & (nb - 1) == 0, "nb must be a power of two"
-    cellw = (2 + vw) if inline else 1
+def init_hash(spec: HashSpec) -> HashState:
+    """Build the initial `HashState` pytree for `spec`."""
+    nb, vw = spec.nb, spec.vw
+    cellw = spec.cellw
     empty_cell = np.zeros((cellw,), np.uint32)
     empty_cell[-1] = 0xFFFFFFFF
     data = np.broadcast_to(empty_cell, (nb, cellw))
-    table = ba.init(nb, cellw, ba.Strategy(strategy), p_max, initial=data)
-    cap = int(nb * chain_factor) + 2 * p_max
+    table = ba.init(nb, cellw, spec.strategy, spec.p_max, initial=data)
+    cap = spec.pool_cap
     pool = jnp.zeros((cap, 2 + vw), sem.WORD_DTYPE)
     return HashState(table, pool, jnp.arange(cap, dtype=jnp.int32),
                      jnp.uint32(0), jnp.uint32(cap), jnp.uint32(0))
+
+
+def init(nb: int, vw: int, strategy, p_max: int,
+         *, inline: bool = True, chain_factor: float = 2.0) -> HashState:
+    """DEPRECATED shim: use `init_hash(HashSpec(...))`."""
+    return init_hash(HashSpec(nb, vw, ba.strategy_name(strategy), p_max,
+                              inline=inline, chain_factor=chain_factor))
 
 
 # ---------------------------------------------------------------------------
 # Sequential oracle (python dict) — defines the semantics.
 # ---------------------------------------------------------------------------
 
-def apply_reference(model: dict, ops: OpBatch, vw: int):
+def apply_reference(model: dict, ops, vw: int):
+    ops = _to_unified(ops)
     kind = np.asarray(ops.kind)
-    key = np.asarray(ops.key)
-    value = np.asarray(ops.value)
+    key = np.asarray(ops.slot).astype(np.uint32)
+    value = np.asarray(ops.desired)[:, :vw]
     q = kind.shape[0]
     found = np.zeros(q, bool)
     out = np.zeros((q, vw), np.uint32)
     for i in range(q):
         k = int(key[i])
-        if kind[i] == FIND:
+        if kind[i] == engine.FIND:
             if k in model:
                 found[i] = True
                 out[i] = model[k]
-        elif kind[i] == INSERT:
+        elif kind[i] == engine.INSERT:
             if k not in model:        # add-if-absent (paper semantics)
                 model[k] = value[i].copy()
                 found[i] = True
-        elif kind[i] == DELETE:
+        elif kind[i] == engine.DELETE:
             if k in model:
                 del model[k]
                 found[i] = True
@@ -142,15 +184,21 @@ def apply_reference(model: dict, ops: OpBatch, vw: int):
 # Vectorized batched ops.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit,
-                   static_argnames=("strategy", "inline", "max_chain", "vw"))
-def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
-                   inline: bool, vw: int, max_chain: int = 8):
+def apply_hash(spec: HashSpec, state: HashState, ops: engine.OpBatch):
     """Apply a batch of FIND/INSERT/DELETE ops, linearized in lane order.
+
+    `spec` is the only static argument; `state` and `ops` are pure pytrees
+    (ops in the unified schema — see `make_hash_ops`).
 
     Returns (new_state, HashResult, HashStats).
     """
-    strategy = ba.Strategy(strategy)
+    engine.check_kinds(ops.kind, engine.HASH_KINDS, "hash")
+    return _apply_hash(spec, state, ops)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _apply_hash(spec: HashSpec, state: HashState, ops: engine.OpBatch):
+    inline, vw, max_chain = spec.inline, spec.vw, spec.max_chain
     nb = state.table.version.shape[0]
     cap = state.pool.shape[0]
     q = ops.kind.shape[0]
@@ -158,15 +206,16 @@ def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
     cellw_pool = 2 + vw
     grab_n = min(q * max_chain, cap)   # per-round allocation upper bound
 
-    active = ops.kind != IDLE
+    u_key = ops.slot.astype(jnp.uint32)
+    active = ops.kind != engine.IDLE
     bucket = jnp.where(
-        active, (hash_u32(ops.key) & jnp.uint32(nb - 1)).astype(jnp.int32), nb)
+        active, (hash_u32(u_key) & jnp.uint32(nb - 1)).astype(jnp.int32), nb)
     order = jnp.argsort(bucket, stable=True)
     inv_order = jnp.argsort(order, stable=True)
     s_bucket = bucket[order]
     s_kind = ops.kind[order]
-    s_key = ops.key[order]
-    s_value = ops.value[order]
+    s_key = u_key[order]
+    s_value = ops.desired[order, :vw]
 
     idx = jnp.arange(q, dtype=jnp.int32)
     seg_start = jnp.concatenate([jnp.ones((1,), bool),
@@ -227,7 +276,7 @@ def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
             (live & ((fd == 0) | is_empty)).astype(jnp.int32))
 
         # ---- FIND ----------------------------------------------------------
-        f_live = live & (s_kind == FIND)
+        f_live = live & (s_kind == engine.FIND)
         node_at_fd = vis[lanes, jnp.clip(fd - 1, 0, max_chain - 1)]
         if inline:
             inline_val = cell[:, 1:1 + vw]
@@ -239,8 +288,8 @@ def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
         r_found = jnp.where(f_live, found, r_found)
 
         # ---- allocation plan (conflict-free: disjoint buckets) -------------
-        i_live = live & (s_kind == INSERT) & ~found & ~w["overflow"]
-        d_live = live & (s_kind == DELETE) & found
+        i_live = live & (s_kind == engine.INSERT) & ~found & ~w["overflow"]
+        d_live = live & (s_kind == engine.DELETE) & found
         if inline:
             ins_need = jnp.where(i_live & ~is_empty, 1, 0)
         else:
@@ -276,7 +325,7 @@ def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
             w_idx = jnp.where(i_live, s_bucket, nb)
             data = data.at[w_idx, 0].set(slot_at(off).astype(jnp.uint32),
                                          mode="drop")
-        r_found = jnp.where(live & (s_kind == INSERT), i_live, r_found)
+        r_found = jnp.where(live & (s_kind == engine.INSERT), i_live, r_found)
 
         # ---- DELETE ---------------------------------------------------------
         # Case A (inline only): victim is the inlined first link (fd == 0).
@@ -319,7 +368,7 @@ def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
             w_idx = jnp.where(b_live, s_bucket, nb)
             hcode = jnp.where(new_head_code == NULLP, EMPTY, new_head_code)
             data = data.at[w_idx, 0].set(hcode, mode="drop")
-        r_found = jnp.where(live & (s_kind == DELETE), d_live, r_found)
+        r_found = jnp.where(live & (s_kind == engine.DELETE), d_live, r_found)
         r_over = jnp.where(live, w["overflow"], r_over)
 
         # ---- retire: case A successor, case B originals(1..fd-1) + victim --
@@ -359,12 +408,21 @@ def apply_hash_ops(state: HashState, ops: OpBatch, *, strategy: str,
 
     n_upd = ((ver - state.table.version) // 2).sum().astype(jnp.int32)
     table = ba.commit_layout(state.table, data, ver, n_upd,
-                             strategy, min(q, nb))
+                             spec.strategy, min(q, nb))
     new_state = HashState(table, pool, ring, head, tail, count)
     result = HashResult(r_found[inv_order], r_value[inv_order],
                         r_over[inv_order])
     stats = HashStats(n_rounds, chain_steps, inline_hits, allocs, frees)
     return new_state, result, stats
+
+
+def apply_hash_ops(state: HashState, ops, *, strategy: str,
+                   inline: bool, vw: int, max_chain: int = 8):
+    """DEPRECATED shim: use `apply_hash(HashSpec(...), state, ops)`."""
+    nb = state.table.version.shape[0]
+    spec = HashSpec(nb, vw, ba.strategy_name(strategy), inline=inline,
+                    max_chain=max_chain)
+    return apply_hash(spec, state, _to_unified(ops))
 
 
 # ---------------------------------------------------------------------------
@@ -400,45 +458,68 @@ def free_slots_available(state: HashState) -> int:
 
 
 class CacheHash:
-    """Stateful wrapper.  strategy + inline select the paper's variants:
-    CacheHash = inline=True over {seqlock, cached_me, cached_wf, indirect};
-    Chaining baseline = inline=False."""
+    """Stateful DEPRECATION shim.  strategy + inline select the paper's
+    variants: CacheHash = inline=True over {seqlock, cached_me, cached_wf,
+    indirect}; Chaining baseline = inline=False.  New code should hold a
+    `HashSpec` + `HashState` and call `apply_hash` directly."""
 
-    def __init__(self, nb: int, vw: int = 1,
-                 strategy: str = "cached_me", p_max: int = 1024,
+    def __init__(self, nb: int | None = None, vw: int = 1,
+                 strategy: str | None = None, p_max: int = 1024,
                  *, inline: bool = True, max_chain: int = 8,
-                 chain_factor: float = 2.0):
-        self.nb, self.vw = nb, vw
-        self.strategy = ba.Strategy(strategy).value
-        self.inline = inline
-        self.max_chain = max_chain
-        self.state = init(nb, vw, strategy, p_max, inline=inline,
-                          chain_factor=chain_factor)
+                 chain_factor: float = 2.0, spec: HashSpec | None = None):
+        if spec is None:
+            if nb is None:
+                raise ValueError("pass either nb or spec")
+            spec = HashSpec(nb, vw,
+                            ba.strategy_name(strategy) if strategy is not None
+                            else DEFAULT_STRATEGY,
+                            p_max, inline=inline, max_chain=max_chain,
+                            chain_factor=chain_factor)
+        self.spec = spec
+        self.state = init_hash(spec)
 
-    def apply(self, ops: OpBatch):
-        self.state, result, stats = apply_hash_ops(
-            self.state, ops, strategy=self.strategy, inline=self.inline,
-            vw=self.vw, max_chain=self.max_chain)
+    @property
+    def nb(self) -> int:
+        return self.spec.nb
+
+    @property
+    def vw(self) -> int:
+        return self.spec.vw
+
+    @property
+    def strategy(self) -> str:
+        return self.spec.strategy
+
+    @property
+    def inline(self) -> bool:
+        return self.spec.inline
+
+    @property
+    def max_chain(self) -> int:
+        return self.spec.max_chain
+
+    def apply(self, ops):
+        self.state, result, stats = apply_hash(self.spec, self.state,
+                                               _to_unified(ops))
         return result, stats
 
     def find(self, keys):
-        return self.apply(self._ops(FIND, keys))
+        return self.apply(self._ops(engine.FIND, keys))
 
     def insert(self, keys, values):
         q = len(keys)
-        ops = OpBatch(jnp.full((q,), INSERT, jnp.int32),
-                      jnp.asarray(keys, jnp.uint32),
-                      jnp.asarray(values, sem.WORD_DTYPE).reshape(q, self.vw))
-        return self.apply(ops)
+        values = jnp.asarray(values, sem.WORD_DTYPE).reshape(q, self.vw)
+        return self.apply(make_hash_ops(
+            jnp.full((q,), engine.INSERT, jnp.int32), keys, values,
+            vw=self.vw))
 
     def delete(self, keys):
-        return self.apply(self._ops(DELETE, keys))
+        return self.apply(self._ops(engine.DELETE, keys))
 
     def _ops(self, kind, keys):
         q = len(keys)
-        return OpBatch(jnp.full((q,), kind, jnp.int32),
-                       jnp.asarray(keys, jnp.uint32),
-                       jnp.zeros((q, self.vw), sem.WORD_DTYPE))
+        return make_hash_ops(jnp.full((q,), kind, jnp.int32), keys,
+                             vw=self.vw)
 
     def items(self) -> dict:
         return items(self.state, inline=self.inline, vw=self.vw)

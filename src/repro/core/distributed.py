@@ -25,7 +25,6 @@ reused unchanged — the distribution layer is ~150 lines on top of it.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

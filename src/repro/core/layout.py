@@ -1,0 +1,115 @@
+"""Shared big-atomic layout state and reclamation-ring helpers.
+
+`TableState` is the one pytree every strategy layout lives in (unused fields
+are size-0 arrays), so any strategy's table rides through `jax.jit`,
+`lax.scan`, donation and `shard_map` unchanged — NamedTuples are native JAX
+pytrees, and the round-trip property is asserted by tests/test_atomics_v2.py.
+
+Strategy-specific interpretation of the fields (init / commit / read /
+traffic) lives in `repro.core.strategies` behind the `StrategyImpl` protocol
+(`repro.core.registry`); this module only owns the state container and the
+FIFO free-ring allocator shared by the node-based layouts (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+WORD_BYTES = 4  # uint32 words
+WORD_DTYPE = jnp.uint32
+NULL = jnp.int32(-1)
+
+
+class TableState(NamedTuple):
+    """Unified pytree; unused fields are size-0 arrays for lean strategies.
+
+    data:      word[n, k]  inline cache / value array (INDIRECT: engine shadow,
+               not part of the logical layout — reads never touch it).
+    version:   uint32[n]   seqlock version (even = unlocked).
+    bptr:      int32[n]    backup / indirect node index; -1 null; for
+               CACHED_ME, -(tag+2) encodes a *tagged* null (paper §3.2).
+    mark:      bool[n]     CACHED_WF invalid-mark on the backup pointer.
+    lock:      uint32[n]   SIMPLOCK lock word (0 = free).
+    pool:      word[m, k]  node pool.
+    free_ring: int32[m]    FIFO ring of free node indices.
+    ring_head: uint32[]    next allocation position (mod ring size).
+    alloc_gen: uint32[]    total allocations ever (reclamation generation).
+    """
+
+    data: jax.Array
+    version: jax.Array
+    bptr: jax.Array
+    mark: jax.Array
+    lock: jax.Array
+    pool: jax.Array
+    free_ring: jax.Array
+    ring_head: jax.Array
+    alloc_gen: jax.Array
+
+
+class Traffic(NamedTuple):
+    """Analytic HBM traffic for one batch (TPU roofline inputs).
+
+    bytes_read / bytes_written: modeled HBM bytes.
+    dep_chains: number of *dependent* gather rounds on the critical path
+                (1 = fully pipelineable, 2 = pointer chase).
+    rmw_ops:    single-word atomic RMWs (CAS/lock) — contention proxy.
+    """
+
+    bytes_read: jax.Array
+    bytes_written: jax.Array
+    dep_chains: jax.Array
+    rmw_ops: jax.Array
+
+
+def _empty(dtype, shape=(0,)):
+    return jnp.zeros(shape, dtype)
+
+
+def ring_alloc(state: TableState, want: jax.Array, max_want: int):
+    """Pop up to `max_want` node slots from the FIFO free ring (masked by
+    rank < want).  Returns (slots[max_want], new_state)."""
+    m = state.free_ring.shape[0]
+    ranks = jnp.arange(max_want, dtype=jnp.uint32)
+    pos = (state.ring_head + ranks) % jnp.uint32(m)
+    slots = state.free_ring[pos]
+    live = ranks < want
+    # Consumed entries are cleared (debug hygiene; not required for safety).
+    ring = state.free_ring.at[jnp.where(live, pos, m)].set(NULL, mode="drop")
+    new_head = state.ring_head + want
+    return jnp.where(live, slots, NULL), state._replace(
+        free_ring=ring, ring_head=new_head % jnp.uint32(m),
+        alloc_gen=state.alloc_gen + want)
+
+
+def ring_free(state: TableState, slots: jax.Array, count: jax.Array,
+              live_total: int):
+    """Push retired node slots at the ring tail (head + free_count)."""
+    m = state.free_ring.shape[0]
+    # Tail = head + number of currently-free entries.  We track it implicitly:
+    # ring is FIFO and #free is invariant per strategy, so tail == head works
+    # when every alloc is matched by exactly one free in the same batch.
+    ranks = jnp.arange(live_total, dtype=jnp.uint32)
+    live = ranks < count
+    pos = (state.ring_head + jnp.uint32(m) - count + ranks) % jnp.uint32(m)
+    ring = state.free_ring.at[jnp.where(live, pos, m)].set(
+        jnp.where(live, slots, NULL), mode="drop")
+    return state._replace(free_ring=ring)
+
+
+def sim_alloc(state: TableState):
+    """Pop ONE node slot for the torn-state simulator (each frozen writer
+    must hold a distinct node, like a distinct thread's private slab)."""
+    m = state.free_ring.shape[0]
+    slot = state.free_ring[state.ring_head]
+    return slot, state._replace(
+        ring_head=(state.ring_head + 1) % jnp.uint32(m),
+        alloc_gen=state.alloc_gen + 1)
+
+
+def state_nbytes(state: TableState) -> int:
+    """Actual bytes held by the pytree (validates memory_bytes in tests)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(state))

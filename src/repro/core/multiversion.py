@@ -26,7 +26,6 @@ across process boundaries (the checkpoint package serializes snapshots).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

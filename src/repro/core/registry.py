@@ -1,0 +1,152 @@
+"""Strategy registry: big-atomic memory layouts plug into the core engine.
+
+The paper's observation is that *one* abstraction — a k-word linearizable
+register — underlies tuples, version lists and hash tables; a memory layout
+only decides how that register is stored and read.  `StrategyImpl` is that
+boundary: the unified engine (`repro.core.engine`) linearizes a batch of ops
+against logical values, then hands layout maintenance to the registered
+implementation.  New layouts (e.g. contention-managed variants per Dice,
+Hendler & Mirsky, arXiv:1305.5800) register themselves here and are
+immediately usable from every entry point — tables, CacheHash, LL/SC,
+queues, paged KV — without touching core:
+
+    from repro import atomics
+
+    class MyLayout(atomics.StrategyImpl):
+        name = "my_layout"
+        ...
+
+    atomics.register_strategy(MyLayout())
+    table = atomics.init(atomics.AtomicSpec(n, k, "my_layout", p_max))
+
+The base class implements the PLAIN protocol (raw data + version, no reader
+protection), so a minimal subclass only sets `name`; richer layouts override
+the hooks they need.  All hooks are traced under `jax.jit` (except `init`,
+`begin_update` and `memory_bytes`, which run at setup / test time).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layout import (TableState, Traffic, WORD_BYTES, WORD_DTYPE,
+                               _empty)
+
+
+class StrategyImpl:
+    """Protocol for a big-atomic memory layout (defaults = PLAIN).
+
+    name:           registry key; `AtomicSpec.strategy` strings resolve here.
+    lock_free:      readers always make progress from any observed state.
+    blocks_readers: the honest read protocol can return ok=False (retry).
+    """
+
+    name: str | None = None
+    lock_free: bool = False
+    blocks_readers: bool = False
+
+    # -- setup ---------------------------------------------------------------
+
+    def init(self, n: int, k: int, p_max: int, data) -> TableState:
+        """Build the initial layout for a table of n cells x k words; `data`
+        is the word[n, k] array of initial logical values."""
+        return TableState(data, jnp.zeros((n,), jnp.uint32),
+                          _empty(jnp.int32), _empty(bool), _empty(jnp.uint32),
+                          _empty(WORD_DTYPE, (0, k)), _empty(jnp.int32),
+                          jnp.uint32(0), jnp.uint32(0))
+
+    # -- engine hooks (traced) -----------------------------------------------
+
+    def logical(self, state: TableState):
+        """The current logical value of every cell, derived from the layout."""
+        return state.data
+
+    def engine_view(self, state: TableState):
+        """The word[n, k] array the unified engine linearizes against.
+
+        Defaults to `logical(state)`, which is always correct.  A layout
+        whose `commit` maintains `state.data` as an exact shadow of the
+        logical values may override this to return `state.data` directly and
+        skip a derivation gather (see `strategies.Indirect`)."""
+        return self.logical(state)
+
+    def commit(self, state: TableState, new_data, new_version, n_updates,
+               p: int) -> TableState:
+        """Reconcile the layout after the logical values have advanced.
+
+        `new_data`/`new_version` are the post-batch logical values and
+        versions; `n_updates` the number of update writes performed (node
+        pool accounting); `p` the batch width (static allocation bound)."""
+        return state._replace(data=new_data, version=new_version)
+
+    def read(self, state: TableState, slots):
+        """Honest reader protocol: values + ok mask from layout fields only.
+
+        ok=False means the reader is *blocked* (torn state / lock held) and
+        must retry — see `bigatomic.read_protocol` for the full contract."""
+        return state.data[slots], jnp.ones((slots.shape[0],), bool)
+
+    def traffic(self, stats, k: int, p: int) -> Traffic:
+        """Analytic HBM bytes + dependency depth per batch (roofline)."""
+        w = WORD_BYTES
+        cell = k * w
+        loads = stats.n_loads
+        upd = stats.n_updates
+        return Traffic(
+            jnp.asarray(loads * cell + upd * cell, jnp.float32),
+            jnp.asarray(upd * cell, jnp.float32),
+            jnp.asarray(1, jnp.int32), jnp.asarray(0, jnp.int32))
+
+    # -- simulation / accounting (host-side) ---------------------------------
+
+    def begin_update(self, state: TableState, slot: int, new_value,
+                     torn_words: int) -> TableState:
+        """Freeze a writer at its most vulnerable point (torn-state test)."""
+        half = state.data[slot].at[:torn_words].set(new_value[:torn_words])
+        return state._replace(data=state.data.at[slot].set(half))
+
+    def memory_bytes(self, n: int, k: int, p: int) -> int:
+        """Exact bytes of the layout (paper Table 1 / §5.5 forms)."""
+        return n * k * WORD_BYTES
+
+
+_REGISTRY: dict[str, StrategyImpl] = {}
+
+
+def register_strategy(impl: StrategyImpl | type, *,
+                      overwrite: bool = False) -> StrategyImpl:
+    """Add a layout to the dispatch table (usable as a class decorator).
+
+    Raises on duplicate names unless `overwrite=True` — tests override
+    built-ins deliberately; production code never should."""
+    if isinstance(impl, type):
+        impl = impl()
+    if not impl.name:
+        raise ValueError("StrategyImpl.name must be a non-empty string")
+    if impl.name in _REGISTRY and not overwrite:
+        raise ValueError(f"strategy {impl.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[impl.name] = impl
+    return impl
+
+
+def unregister_strategy(name: str) -> None:
+    """Remove a registered layout (test hygiene)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_strategy(name: str) -> StrategyImpl:
+    """Resolve a strategy name to its implementation."""
+    if name not in _REGISTRY:
+        # Built-ins self-register on first use; lazy import avoids a cycle.
+        from repro.core import strategies  # noqa: F401
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown big-atomic strategy {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_strategies() -> tuple[str, ...]:
+    get_strategy("plain")  # force built-in registration
+    return tuple(sorted(_REGISTRY))

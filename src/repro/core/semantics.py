@@ -1,115 +1,43 @@
-"""Deterministic batch linearization of big-atomic operations.
+"""v1 load/store/CAS batch semantics — now a facade over the unified engine.
 
-This module is the TPU-native core of the Big Atomics reproduction.  On a CPU,
-`p` threads issue load/store/CAS operations against `n` cells of `k` adjacent
-words each, and the hardware's coherence protocol serializes conflicting
-accesses.  In an SPMD/XLA program there are no threads: we model one "step" of
-the concurrent system as a *batch* of `p` operations applied against a
-device-resident table, linearized in a deterministic order (lane order).  The
-result is bit-identical to applying the ops one at a time — the sequential
-oracle in `apply_batch_reference` defines the semantics and the vectorized
-`apply_batch` must match it exactly (property-tested).
+This module used to own the vectorized linearizer for LOAD/STORE/CAS
+batches; that algorithm (stable-sort by cell, L combining rounds for
+updates, segmented-scan load resolution — see the module history and
+DESIGN.md §1) now lives generalized in `repro.core.engine.linearize`, which
+adds LL/SC/VALIDATE lanes and a one-round fast path for pure-sync batches.
+What remains here is the v1 surface:
 
-Algorithm (vectorized, jit-able):
-  1. stable-sort ops by cell id -> per-cell contiguous segments;
-  2. updates (store / CAS) are serialized *within* a segment only: a
-     `lax.while_loop` runs ``L = max updates per cell`` rounds, and round ``t``
-     applies the t-th update of every segment in parallel (masked gather ->
-     compare -> masked scatter).  This is the classic PRAM "combining"
-     technique: contention (the paper's Zipfian ``z``) shows up as L rounds,
-     uncontended batches finish in one.
-  3. loads never serialize: each load reads the recorded post-value of the
-     last update preceding it in its segment (segmented max-scan), or the
-     pre-batch value.
+  * the kind constants LOAD/STORE/CAS/IDLE (numerically identical to the
+    unified namespace, so a v1 `OpBatch` IS a valid unified batch),
+  * `apply_batch(data, version, ops)` — raw-array entry point used by
+    `wf_writable` and the sharded table (`core/distributed.py`),
+  * `apply_batch_reference` — the sequential numpy oracle that DEFINES
+    store/CAS correctness (property tests),
+  * `make_op_batch` / `random_batch` — batch constructors shared by tests
+    and benchmarks.
 
-Cost: O(p) work per round, L rounds.  Throughput ~ p / L, matching the
-qualitative contention behaviour of the paper's microbenchmarks.
+Table-level callers should use `repro.atomics.apply(spec, state, ops)`.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
+import jax.numpy as jnp
 
-# Op kinds.  IDLE lanes are padding: they read slot 0 but report invalid.
-LOAD = 0
-STORE = 1
-CAS = 2
-IDLE = 3
-
-WORD_DTYPE = jnp.uint32  # one "word" of a big atomic; k words per cell
-
-
-class OpBatch(NamedTuple):
-    """A batch of `p` operations over an `(n, k)` table.
-
-    kind:     int32[p]   — LOAD / STORE / CAS / IDLE
-    slot:     int32[p]   — target cell index in [0, n)
-    expected: word[p, k] — CAS comparand (ignored for load/store)
-    desired:  word[p, k] — value to write (store / successful CAS)
-    """
-
-    kind: jax.Array
-    slot: jax.Array
-    expected: jax.Array
-    desired: jax.Array
-
-    @property
-    def p(self) -> int:
-        return self.kind.shape[0]
-
-    @property
-    def k(self) -> int:
-        return self.desired.shape[1]
-
-
-class ApplyResult(NamedTuple):
-    """Per-lane results of a linearized batch.
-
-    value:   word[p, k] — the value witnessed at the op's linearization point
-                          (loads: the loaded value; CAS: the comparand seen).
-    success: bool[p]    — CAS success (loads/stores: True, IDLE: False).
-    """
-
-    value: jax.Array
-    success: jax.Array
-
-
-class ApplyStats(NamedTuple):
-    """Traffic/contention statistics for one batch (all scalars).
-
-    rounds:        number of serialization rounds L (max updates on one cell).
-    n_updates:     number of store/CAS lanes.
-    n_loads:       number of load lanes.
-    n_cas_fail:    CAS lanes that failed.
-    n_raced_loads: loads whose cell had >=1 update in this batch (these take
-                   the slow path in the cached strategies).
-    n_dirty_cells: distinct cells receiving >=1 successful update.
-    """
-
-    rounds: jax.Array
-    n_updates: jax.Array
-    n_loads: jax.Array
-    n_cas_fail: jax.Array
-    n_raced_loads: jax.Array
-    n_dirty_cells: jax.Array
+from repro.core import engine
+from repro.core.engine import (  # noqa: F401  (v1 re-exports)
+    CAS, IDLE, LOAD, STORE, ApplyResult, ApplyStats, OpBatch,
+    _segmented_scan_max,
+)
+from repro.core.layout import WORD_DTYPE  # noqa: F401  (v1 re-export)
 
 
 def make_op_batch(kind, slot, expected=None, desired=None, *, k: int) -> OpBatch:
-    """Convenience constructor that fills unused fields with zeros."""
-    kind = jnp.asarray(kind, jnp.int32)
-    slot = jnp.asarray(slot, jnp.int32)
-    p = kind.shape[0]
-    if expected is None:
-        expected = jnp.zeros((p, k), WORD_DTYPE)
-    if desired is None:
-        desired = jnp.zeros((p, k), WORD_DTYPE)
-    return OpBatch(kind, slot, jnp.asarray(expected, WORD_DTYPE), jnp.asarray(desired, WORD_DTYPE))
+    """Checked constructor (validation + dtype coercion in `engine.make_ops`)."""
+    return engine.make_ops(kind, slot, expected, desired, k=k)
 
 
 # ---------------------------------------------------------------------------
@@ -121,53 +49,17 @@ def apply_batch_reference(data: np.ndarray, version: np.ndarray, ops: OpBatch):
 
     Returns (new_data, new_version, ApplyResult-as-numpy).
     """
-    data = np.array(data, copy=True)
-    version = np.array(version, copy=True)
-    kind = np.asarray(ops.kind)
-    slot = np.asarray(ops.slot)
-    expected = np.asarray(ops.expected)
-    desired = np.asarray(ops.desired)
-    p, k = expected.shape
-    value = np.zeros((p, k), dtype=data.dtype)
-    success = np.zeros((p,), dtype=bool)
-    for i in range(p):
-        s = slot[i]
-        if kind[i] == IDLE:
-            continue
-        cur = data[s].copy()
-        value[i] = cur
-        if kind[i] == LOAD:
-            success[i] = True
-        elif kind[i] == STORE:
-            data[s] = desired[i]
-            version[s] += 2
-            success[i] = True
-        elif kind[i] == CAS:
-            if np.array_equal(cur, expected[i]):
-                data[s] = desired[i]
-                version[s] += 2
-                success[i] = True
-            else:
-                success[i] = False
-    return data, version, ApplyResult(value, success)
+    p, k = np.asarray(ops.desired).shape
+    ctx = engine.LinkCtx(np.full(p, -1, np.int32), np.zeros(p, np.uint32),
+                         np.zeros((p, k), np.uint32), np.zeros(p, bool))
+    new_data, new_version, _, result = engine.apply_ops_reference(
+        data, version, ctx, ops)
+    return new_data, new_version, result
 
 
 # ---------------------------------------------------------------------------
-# Vectorized linearization (jnp) — bit-identical to the oracle.
+# Vectorized linearization — the unified engine, ctx-free entry point.
 # ---------------------------------------------------------------------------
-
-def _segmented_scan_max(values: jax.Array, seg_start: jax.Array) -> jax.Array:
-    """Inclusive segmented max-scan.  seg_start marks first element of a segment."""
-
-    def combine(a, b):
-        a_flag, a_val = a
-        b_flag, b_val = b
-        val = jnp.where(b_flag, b_val, jnp.maximum(a_val, b_val))
-        return (a_flag | b_flag, val)
-
-    _, out = lax.associative_scan(combine, (seg_start, values))
-    return out
-
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def apply_batch(data: jax.Array, version: jax.Array, ops: OpBatch):
@@ -176,120 +68,11 @@ def apply_batch(data: jax.Array, version: jax.Array, ops: OpBatch):
     `data` is word[n, k]; `version` is uint32[n] (bumped by 2 per successful
     update, paper-style even==unlocked parity).
     """
-    n, k = data.shape
-    p = ops.p
-    kind, slot = ops.kind, ops.slot
-
-    active = kind != IDLE
-    # Inactive lanes get an out-of-range slot so they can never collide.
-    slot = jnp.where(active, slot, n)
-
-    order = jnp.argsort(slot, stable=True)  # (slot, lane) lexicographic
-    inv_order = jnp.argsort(order, stable=True)
-
-    s_slot = slot[order]
-    s_kind = kind[order]
-    s_expected = ops.expected[order]
-    s_desired = ops.desired[order]
-
-    idx = jnp.arange(p, dtype=jnp.int32)
-    seg_start = jnp.concatenate([jnp.ones((1,), bool), s_slot[1:] != s_slot[:-1]])
-    # Index of the first element of each lane's segment.
-    start_idx = _segmented_scan_max(jnp.where(seg_start, idx, -1), seg_start)
-
-    is_upd = (s_kind == STORE) | (s_kind == CAS)
-    # Exclusive count of updates before each position, segment-scoped.
-    cum_upd = jnp.cumsum(is_upd.astype(jnp.int32))
-    excl_upd = cum_upd - is_upd.astype(jnp.int32)
-    upd_rank = excl_upd - excl_upd[start_idx]
-    n_rounds = jnp.where(jnp.any(is_upd), jnp.max(jnp.where(is_upd, upd_rank, -1)) + 1, 0)
-
-    init_vals = data[jnp.minimum(s_slot, n - 1)]  # pre-batch values per lane
-
-    # --- serialization rounds over updates ---------------------------------
-    res_after = jnp.zeros((p, k), data.dtype)   # value AFTER each update lane
-    witness = jnp.zeros((p, k), data.dtype)     # value BEFORE each update lane
-    succ = jnp.zeros((p,), bool)
-
-    def round_body(state):
-        t, data_, version_, res_after_, witness_, succ_ = state
-        live = is_upd & (upd_rank == t)
-        cur = data_[jnp.minimum(s_slot, n - 1)]
-        match = jnp.all(cur == s_expected, axis=1)
-        ok = live & ((s_kind == STORE) | match)
-        newv = jnp.where(ok[:, None], s_desired, cur)
-        # masked scatter: inactive rows target index n (dropped)
-        w_idx = jnp.where(ok, s_slot, n)
-        data_ = data_.at[w_idx].set(s_desired, mode="drop")
-        version_ = version_.at[w_idx].add(jnp.uint32(2), mode="drop")
-        res_after_ = jnp.where(live[:, None], newv, res_after_)
-        witness_ = jnp.where(live[:, None], cur, witness_)
-        succ_ = jnp.where(live, ok, succ_)
-        return (t + 1, data_, version_, res_after_, witness_, succ_)
-
-    def round_cond(state):
-        return state[0] < n_rounds
-
-    _, data, version, res_after, witness, succ = lax.while_loop(
-        round_cond, round_body, (jnp.int32(0), data, version, res_after, witness, succ)
-    )
-
-    # --- resolve loads -------------------------------------------------------
-    # Last update position strictly before each lane, within its segment.
-    upd_pos = jnp.where(is_upd, idx, -1)
-    last_upd_incl = _segmented_scan_max(upd_pos, seg_start)
-    # For a load lane (not an update itself) the inclusive scan already
-    # excludes it; for update lanes we don't need this value.
-    prev_upd = last_upd_incl
-    has_prev = prev_upd >= 0
-    load_vals = jnp.where(
-        has_prev[:, None],
-        res_after[jnp.maximum(prev_upd, 0)],
-        init_vals,
-    )
-
-    is_load = s_kind == LOAD
-    s_value = jnp.where(is_load[:, None], load_vals, witness)
-    s_success = jnp.where(is_load, True, succ)
-    s_success = jnp.where(s_kind == IDLE, False, s_success)
-
-    value = s_value[inv_order]
-    success = s_success[inv_order]
-
-    # --- stats ---------------------------------------------------------------
-    seg_has_upd = _segmented_scan_max(
-        jnp.where(is_upd, jnp.int32(1), jnp.int32(0)), seg_start
-    )
-    # per-lane flag: does this lane's segment contain ANY update?  Use the
-    # segment-final value gathered via start of next segment trick: a segment's
-    # max is found at its last element; propagate backwards by flipping.
-    seg_end = jnp.concatenate([seg_start[1:], jnp.ones((1,), bool)])
-    # reverse segmented scan to broadcast the segment max to all members
-    seg_any_upd_rev = _segmented_scan_max(
-        jnp.flip(jnp.where(is_upd, jnp.int32(1), jnp.int32(0))), jnp.flip(seg_end)
-    )
-    seg_any_upd = jnp.flip(seg_any_upd_rev) > 0
-
-    raced_load = is_load & seg_any_upd
-    del seg_has_upd
-    stats = ApplyStats(
-        rounds=n_rounds,
-        n_updates=jnp.sum(is_upd.astype(jnp.int32)),
-        n_loads=jnp.sum(is_load.astype(jnp.int32)),
-        n_cas_fail=jnp.sum(((s_kind == CAS) & ~succ).astype(jnp.int32)),
-        n_raced_loads=jnp.sum(raced_load.astype(jnp.int32)),
-        n_dirty_cells=_count_dirty_cells(succ, s_slot, seg_start, seg_end, n),
-    )
-    return data, version, ApplyResult(value, success), stats
-
-
-def _count_dirty_cells(succ, s_slot, seg_start, seg_end, n):
-    """Distinct cells with >=1 successful update in this batch."""
-    seg_any_succ_rev = _segmented_scan_max(
-        jnp.flip(succ.astype(jnp.int32)), jnp.flip(seg_end)
-    )
-    seg_any_succ = jnp.flip(seg_any_succ_rev) > 0
-    return jnp.sum((seg_start & seg_any_succ & (s_slot < n)).astype(jnp.int32))
+    p = ops.kind.shape[0]
+    k = ops.desired.shape[1]
+    new_data, new_version, _, result, stats = engine.linearize(
+        data, version, engine.init_ctx(p, k), ops)
+    return new_data, new_version, result, stats
 
 
 # ---------------------------------------------------------------------------

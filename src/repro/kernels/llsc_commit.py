@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.registry import get_strategy
+from repro.core.specs import AtomicSpec
+
 
 def _kernel(slot_ref, data_ref, meta_ref, live_ref, ver_ref, des_ref,
             out_data_ref, out_meta_ref, succ_ref, wit_ref):
@@ -86,3 +89,45 @@ def llsc_commit_round(data: jax.Array, meta: jax.Array, slot: jax.Array,
         interpret=interpret,
     )(slot, data, meta, live.reshape(p, 1).astype(jnp.int32),
       link_ver.reshape(p, 1).astype(meta.dtype), desired)
+
+
+# ---------------------------------------------------------------------------
+# Spec-routed entry point (v2 API): table in, table out.
+# ---------------------------------------------------------------------------
+
+def commit_round(spec: AtomicSpec, state, ctx, slots, desired, *,
+                 interpret: bool = False):
+    """Run one fused SC commit round against a `TableState`, routed by spec.
+
+    Extracts the (values, versions) view from the table, validates + commits
+    each lane's link through the Pallas kernel, then reconciles the layout
+    via the strategy registry — so any registered strategy gets the fused
+    kernel without new plumbing.  Caller contract (one-SC-per-cell fast
+    path, DESIGN.md §4): live lanes target DISTINCT cells; dead lanes carry
+    slot == spec.n.
+
+    Returns (state', ctx', success bool[p], witness word[p, k]).
+    """
+    impl = get_strategy(spec.strategy)
+    n, k = spec.n, spec.k
+    slots = jnp.asarray(slots, jnp.int32)
+    p = slots.shape[0]
+    data = jnp.concatenate([impl.engine_view(state),
+                            jnp.zeros((1, k), state.version.dtype)])
+    meta = jnp.concatenate([state.version[:, None],
+                            jnp.zeros((n, 1), jnp.uint32)], axis=1)
+    meta = jnp.concatenate([meta, jnp.zeros((2,), jnp.uint32)[None]])
+    live = (slots < n).astype(jnp.int32)
+    # A lane whose link does not name its slot must fail: poison its link
+    # version with an odd value (cell versions are always even).
+    link_ok = ctx.linked & (ctx.slot == slots)
+    link_ver = jnp.where(link_ok, ctx.version, jnp.uint32(1))
+    new_data, new_meta, succ, witness = llsc_commit_round(
+        data, meta, slots, live, link_ver, jnp.asarray(desired, data.dtype),
+        interpret=interpret)
+    succ = succ[:, 0].astype(bool)
+    n_updates = jnp.sum(succ.astype(jnp.int32))
+    new_state = impl.commit(state, new_data[:n], new_meta[:n, 0],
+                            n_updates, p)
+    new_ctx = ctx._replace(linked=ctx.linked & (slots >= n))  # SC consumes
+    return new_state, new_ctx, succ, witness

@@ -13,11 +13,9 @@ concern).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.cachehash_probe import cachehash_probe as _cachehash_probe
 from repro.kernels.cas_apply import cas_apply_round as _cas_apply_round

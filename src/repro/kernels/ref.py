@@ -8,7 +8,6 @@ paper's INDIRECT strategy (two dependent gathers) for the benchmarks.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.cas_apply import CAS, STORE

@@ -18,7 +18,6 @@ Sharding semantics (see repro.dist.sharding):
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
 

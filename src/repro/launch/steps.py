@@ -3,13 +3,9 @@ launcher, the smoke tests and the multi-pod dry-run."""
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro import dist
 from repro.models.common import ModelConfig
 from repro.models.transformer import forward, init_params, lm_loss
 from repro.optim import AdamWConfig, adamw_init, adamw_update

@@ -16,8 +16,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import dist
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint

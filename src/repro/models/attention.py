@@ -13,7 +13,6 @@ and activation memory stays O(T · d) regardless of sequence length.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,12 +18,10 @@ are no-ops outside a mesh context — models stay mesh-agnostic.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro import dist

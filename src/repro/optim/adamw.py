@@ -6,7 +6,6 @@ very large models fit the per-chip HBM budget (see configs + EXPERIMENTS.md)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

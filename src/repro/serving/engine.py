@@ -16,6 +16,15 @@ physical-page free list inside `paged_kv` is a third — every claim an LL/SC
 on a big-atomic counter cell, so admission, slot recycling and page
 allocation never take a lock against the decoding readers.
 
+Since the v2 redesign the decode hot path is ONE compiled program
+(`fused=True`, the default): page-table lookup (CacheHash finds on the
+big-atomic buckets), KV gather, the batched forward, and the new token's
+KV append all trace into a single `jax.jit` step over the pure
+`PagedState` pytree — 1 host->device dispatch per decode step instead of
+the v1 path's 4 (`dispatch_count` tracks this; bench_atomics records the
+delta).  Admission/prefill stays host-side (it owns the big-atomic rings
+and the Python request registry).
+
 Scope: archs whose layers are all full attention (dense / moe / vlm
 backbones).  SWA / SSM / hybrid archs serve through the dense slot-state path
 (`make_serve_step`) since their state is O(1) or ring-buffered per sequence —
@@ -25,12 +34,12 @@ paging would page nothing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.specs import DEFAULT_STRATEGY
 from repro.models.common import ModelConfig
 from repro.models.transformer import forward
 from repro.serving import paged_kv as pk
@@ -58,9 +67,10 @@ class _Slot:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
-                 n_pages: int = 256, page_size: int = 16,
-                 max_pages_per_seq: int = 32, strategy: str = "cached_me",
-                 max_queue: int = 256, seed: int = 0):
+                 n_pages: int | None = None, page_size: int | None = None,
+                 max_pages_per_seq: int = 32, strategy: str | None = None,
+                 max_queue: int = 256, seed: int = 0, fused: bool = True,
+                 spec: pk.PagedSpec | None = None):
         assert all(k == "attn" for k in cfg.layer_kinds) and \
             cfg.causal and cfg.window == 0, \
             "paged engine serves causal full-attention archs; use " \
@@ -69,19 +79,34 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_pages = max_pages_per_seq
-        self.paged = pk.init_paged(cfg, n_pages, page_size, max_batch,
-                                   strategy)
+        if spec is None:
+            spec = pk.make_spec(cfg, n_pages if n_pages is not None else 256,
+                                page_size if page_size is not None else 16,
+                                max_batch, strategy or DEFAULT_STRATEGY)
+        else:
+            if (n_pages, page_size, strategy) != (None, None, None):
+                raise ValueError("pass either spec or the n_pages/page_size/"
+                                 "strategy kwargs, not both")
+            if spec.max_seqs < max_batch:
+                raise ValueError(f"spec.max_seqs ({spec.max_seqs}) < "
+                                 f"max_batch ({max_batch})")
+        self.paged = pk.init(cfg, spec)
         self.slots = [_Slot() for _ in range(max_batch)]
         # Lock-free intake: rids wait in an MPMC big-atomic queue; decode
         # slots cycle through a second one (claim = dequeue, retire = enq).
-        self.admit_q = BigQueue(max(max_queue, 2), k=2, strategy=strategy)
-        self.slot_q = BigQueue(max(max_batch, 2), k=2, strategy=strategy,
+        self.admit_q = BigQueue(max(max_queue, 2), k=2,
+                                strategy=spec.table.strategy)
+        self.slot_q = BigQueue(max(max_batch, 2), k=2,
+                               strategy=spec.table.strategy,
                                initial_items=np.arange(max_batch,
                                                        dtype=np.uint32))
         self.requests: dict[int, Request] = {}
         self._next_seq = 0
         self._key = jax.random.PRNGKey(seed)
+        self.fused = fused
+        self.dispatch_count = 0        # decode-path host->device dispatches
         self._decode_fn = jax.jit(self._decode_batch)
+        self._fused_fn = jax.jit(self._fused_step) if fused else None
 
     # -- public API ---------------------------------------------------------
 
@@ -193,7 +218,6 @@ class ServingEngine:
         cfg = self.cfg
         period = len(cfg.block_pattern)
         n_full = cfg.n_layers // period
-        L = k_dense.shape[2]
         cache = {}
         if n_full:
             cache["stack"] = ({"k": k_dense[:n_full], "v": v_dense[:n_full]},)
@@ -216,6 +240,22 @@ class ServingEngine:
                 nv.append(new_cache["tail"][j]["v"][b_idx, pos][None])
         return logits, jnp.concatenate(nk, 0), jnp.concatenate(nv, 0)
 
+    def _fused_step(self, params, pstate, tokens, pos, seq_ids):
+        """The whole decode data path as ONE traced program: big-atomic
+        page-table lookup -> KV gather -> batched forward -> KV append.
+        `pstate` (PagedState) is a pure pytree, so the admission + decode
+        state flows through a single compiled step."""
+        spec = self.paged.spec
+        P = spec.page_size
+        pstate, phys, k_dense, v_dense, _ = pk.lookup_and_gather(
+            spec, pstate, seq_ids, self.max_pages)
+        logits, nk, nv = self._decode_batch(params, tokens, pos,
+                                            k_dense, v_dense)
+        b = tokens.shape[0]
+        phys_page = phys[jnp.arange(b), pos // P]
+        pstate = pk.append_token_fn(spec, pstate, phys_page, pos % P, nk, nv)
+        return pstate, logits
+
     def _decode(self, live):
         P = self.paged.page_size
         seq_ids = [self.slots[i].seq_id for i in live]
@@ -225,18 +265,28 @@ class ServingEngine:
         if need:
             self.paged, _ = pk.alloc_pages(
                 self.paged, [n[0] for n in need], [n[1] for n in need])
-        self.paged, phys = pk.lookup_pages(self.paged, seq_ids,
-                                           self.max_pages)
-        k_dense, v_dense, _ = pk.gather_kv(self.paged, phys)
         tokens = np.asarray(
             [self.requests[self.slots[i].rid].out_tokens[-1] for i in live],
             np.int32)[:, None]
-        logits, nk, nv = self._decode_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(pos),
-            k_dense, v_dense)
-        self.paged = pk.append_token(
-            self.paged, jnp.asarray(phys[np.arange(len(live)), pos // P]),
-            jnp.asarray(pos % P), nk, nv)
+        if self._fused_fn is not None:
+            pstate, logits = self._fused_fn(
+                self.params, self.paged.state, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(seq_ids, jnp.uint32))
+            self.paged.state = pstate
+            self.dispatch_count += 1
+        else:
+            # v1 path (kept for the fused-vs-unfused benchmark): 4 separate
+            # host->device dispatches per decode step.
+            self.paged, phys = pk.lookup_pages(self.paged, seq_ids,
+                                               self.max_pages)
+            k_dense, v_dense, _ = pk.gather_kv(self.paged, phys)
+            logits, nk, nv = self._decode_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(pos),
+                k_dense, v_dense)
+            self.paged = pk.append_token(
+                self.paged, jnp.asarray(phys[np.arange(len(live)), pos // P]),
+                jnp.asarray(pos % P), nk, nv)
+            self.dispatch_count += 4
         toks = self._sample(logits[:, 0])
         for j, i in enumerate(live):
             slot = self.slots[i]

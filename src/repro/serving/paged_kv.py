@@ -9,6 +9,14 @@ lookup.  Page allocation / release are CacheHash insert / delete, i.e.
 CAS-installs on the bucket big atomics, giving lock-free page-table updates
 that never block concurrent lookups (decode of other sequences).
 
+v2 split (DESIGN.md §5): the static shape lives in a frozen `PagedSpec`
+(hash spec + free-ring spec + page geometry) and the device state in
+`PagedState`, a PURE pytree (page-table `HashState` + page pools) — so the
+whole decode data path (`lookup_and_gather` + `append_token_fn`) traces
+inside one `jax.jit` program (the serving engine's fused step).  `PagedKV`
+is the host-side owner tying spec + state to the big-atomic free ring
+(`BigQueue`, a host retry driver) and the dense recurrent slot states.
+
 Physical pages live in one pool per layer-kind:
     attn pages: [n_layers, n_pages, page_size, kvh, hd]  (k and v pools)
     recurrent state (ssm / rglru): dense per-slot arrays (fixed size, no
@@ -20,6 +28,7 @@ max_pages — the gather that decode attention consumes.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -27,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cachehash as ch
+from repro.core import engine
+from repro.core.specs import DEFAULT_STRATEGY, HashSpec, QueueSpec
 from repro.models.common import ModelConfig
 from repro.sync.queue import BigQueue
 
@@ -34,19 +45,46 @@ SEQ_SHIFT = 20                     # key = seq_id << 20 | page_no
 PAGE_MASK = (1 << SEQ_SHIFT) - 1
 
 
-class PagedKV(NamedTuple):
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Static geometry of the paged cache (the fused step's only static)."""
+
+    n_pages: int
+    page_size: int
+    max_seqs: int
+    table: HashSpec
+    ring: QueueSpec
+
+
+class PagedState(NamedTuple):
+    """Pure pytree: page table + physical pools; flows through `jax.jit`."""
+
     table: ch.HashState            # page table (big-atomic CacheHash)
-    strategy: str                  # big-atomic strategy of table + free ring
     k_pages: jax.Array             # [L_attn, n_pages, P, kvh, hd]
     v_pages: jax.Array
-    states: dict                   # recurrent per-slot states (ssm/rglru)
-    free: BigQueue                 # physical pages wait in a big-atomic
-    #                                MPMC ring (alloc = dequeue, DESIGN.md §4)
-    #                                NOTE: mutated in place — unlike the
-    #                                array fields, `free` is shared across
-    #                                `_replace` copies, so a PagedKV is not a
-    #                                snapshot; the engine is its sole owner.
-    page_size: int
+
+
+@dataclasses.dataclass
+class PagedKV:
+    """Host-side owner: spec + pytree state + big-atomic free ring.
+
+    `free` (the physical-page MPMC ring) and `states` (dense recurrent
+    slots) are host-managed; the engine is the sole owner, and the mutating
+    module functions below return `self` for the functional call style the
+    v1 API established."""
+
+    spec: PagedSpec
+    state: PagedState
+    states: dict
+    free: BigQueue
+
+    @property
+    def page_size(self) -> int:
+        return self.spec.page_size
+
+    @property
+    def strategy(self) -> str:
+        return self.spec.table.strategy
 
 
 def page_key(seq_id, page_no):
@@ -54,42 +92,109 @@ def page_key(seq_id, page_no):
         jnp.asarray(page_no, jnp.uint32)
 
 
-def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
-               max_seqs: int, strategy: str = "cached_me") -> PagedKV:
-    kinds = cfg.layer_kinds
-    l_attn = sum(k == "attn" for k in kinds)
-    dt = cfg.cdtype()
-    kv = (l_attn, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+def make_spec(cfg: ModelConfig, n_pages: int, page_size: int, max_seqs: int,
+              strategy: str = DEFAULT_STRATEGY) -> PagedSpec:
     nb = 1
     while nb < 2 * n_pages:
         nb *= 2
-    table = ch.init(nb, vw=1, strategy=strategy, p_max=max(max_seqs, 64))
+    return PagedSpec(
+        n_pages=n_pages, page_size=page_size, max_seqs=max_seqs,
+        table=HashSpec(nb, vw=1, strategy=strategy,
+                       p_max=max(max_seqs, 64)),
+        ring=QueueSpec(max(n_pages, 2), k=2, strategy=strategy,
+                       p_max=max(max_seqs, 64)))
+
+
+def init(cfg: ModelConfig, spec: PagedSpec) -> PagedKV:
+    kinds = cfg.layer_kinds
+    l_attn = sum(k == "attn" for k in kinds)
+    dt = cfg.cdtype()
+    kv = (l_attn, spec.n_pages, spec.page_size, cfg.n_kv_heads, cfg.hd)
+    table = ch.init_hash(spec.table)
     states = {}
     from repro.models import rglru as rglru_mod
     from repro.models import ssm as ssm_mod
     for j, kind in enumerate(kinds):
         if kind == "ssm":
-            states[f"layer{j}"] = ssm_mod.init_ssm_cache(max_seqs, cfg, dt)
+            states[f"layer{j}"] = ssm_mod.init_ssm_cache(spec.max_seqs, cfg, dt)
         elif kind == "rglru":
-            states[f"layer{j}"] = rglru_mod.init_rglru_cache(max_seqs, cfg, dt)
+            states[f"layer{j}"] = rglru_mod.init_rglru_cache(spec.max_seqs,
+                                                             cfg, dt)
     # Descending order preserves the old LIFO head's allocation sequence.
-    free = BigQueue(max(n_pages, 2), k=2, strategy=strategy,
-                    p_max=max(max_seqs, 64),
-                    initial_items=np.arange(n_pages - 1, -1, -1,
+    free = BigQueue(spec=spec.ring,
+                    initial_items=np.arange(spec.n_pages - 1, -1, -1,
                                             dtype=np.uint32))
-    return PagedKV(
-        table=table,
-        strategy=str(strategy),
-        k_pages=jnp.zeros(kv, dt),
-        v_pages=jnp.zeros(kv, dt),
-        states=states,
-        free=free,
-        page_size=page_size,
-    )
+    state = PagedState(table=table, k_pages=jnp.zeros(kv, dt),
+                       v_pages=jnp.zeros(kv, dt))
+    return PagedKV(spec=spec, state=state, states=states, free=free)
+
+
+def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
+               max_seqs: int, strategy: str = None) -> PagedKV:
+    """DEPRECATED shim: use `init(cfg, make_spec(...))`."""
+    return init(cfg, make_spec(cfg, n_pages, page_size, max_seqs,
+                               strategy or DEFAULT_STRATEGY))
 
 
 # ---------------------------------------------------------------------------
-# Page-table ops (all go through the big-atomic CacheHash)
+# Pure (traceable) page-table ops — the fused decode step composes these.
+# ---------------------------------------------------------------------------
+
+def lookup_and_gather(spec: PagedSpec, pstate: PagedState, seq_ids,
+                      n_pages_per_seq: int):
+    """Batched page-table lookup + KV gather, fully traceable: one CacheHash
+    find per (seq, page) — inlined-bucket fast path — then the page-granular
+    gather decode attention feeds on.  Returns
+    (pstate', phys[b, n_pages_per_seq], k, v, valid)."""
+    seq_ids = jnp.asarray(seq_ids, jnp.uint32)
+    b = seq_ids.shape[0]
+    pages = jnp.arange(n_pages_per_seq, dtype=jnp.uint32)
+    keys = page_key(seq_ids[:, None], pages[None, :]).reshape(-1)
+    ops = ch.make_hash_ops(
+        jnp.full((keys.shape[0],), engine.FIND, jnp.int32), keys, vw=1)
+    table, res, _ = ch.apply_hash(spec.table, pstate.table, ops)
+    phys = jnp.where(res.found, res.value[:, 0].astype(jnp.int32), -1)
+    phys = phys.reshape(b, n_pages_per_seq)
+    pstate = pstate._replace(table=table)
+    k, v, valid = gather_fn(spec, pstate, phys)
+    return pstate, phys, k, v, valid
+
+
+def gather_fn(spec: PagedSpec, pstate: PagedState, phys: jax.Array):
+    """phys: int32[b, max_pages] (-1 pad) -> K/V [L, b, max_pages*P, kvh, hd]
+    plus a validity mask [b, max_pages*P].  One gather per decode step — on
+    TPU this is the page-granular DMA stream paged attention feeds on."""
+    b, mp = phys.shape
+    P = spec.page_size
+    safe = jnp.maximum(phys, 0)
+    k = pstate.k_pages[:, safe]            # [L, b, mp, P, kvh, hd]
+    v = pstate.v_pages[:, safe]
+    L = k.shape[0]
+    k = k.reshape(L, b, mp * P, *k.shape[4:])
+    v = v.reshape(L, b, mp * P, *v.shape[4:])
+    valid = jnp.repeat(phys >= 0, P, axis=1)
+    return k, v, valid
+
+
+def append_token_fn(spec: PagedSpec, pstate: PagedState, phys_page, offset,
+                    k_tok, v_tok) -> PagedState:
+    """Write one new token's K/V for a batch of sequences (traceable).
+    phys_page: int32[b]; offset: int32[b] in [0, P); k/v_tok:
+    [L_attn, b, kvh, hd]."""
+    L = k_tok.shape[0]
+    b = k_tok.shape[1]
+    li = jnp.arange(L)[:, None].repeat(b, 1).reshape(-1)
+    pi = jnp.broadcast_to(phys_page[None], (L, b)).reshape(-1)
+    oi = jnp.broadcast_to(offset[None], (L, b)).reshape(-1)
+    k_pages = pstate.k_pages.at[li, pi, oi].set(
+        k_tok.reshape(-1, *k_tok.shape[2:]))
+    v_pages = pstate.v_pages.at[li, pi, oi].set(
+        v_tok.reshape(-1, *v_tok.shape[2:]))
+    return pstate._replace(k_pages=k_pages, v_pages=v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Host-side page lifecycle (admission / retirement, big-atomic free ring)
 # ---------------------------------------------------------------------------
 
 def alloc_pages(paged: PagedKV, seq_ids, page_nos) -> tuple[PagedKV, jax.Array]:
@@ -105,11 +210,11 @@ def alloc_pages(paged: PagedKV, seq_ids, page_nos) -> tuple[PagedKV, jax.Array]:
     phys = vals[:, 0].astype(np.int32)
     keys = page_key(jnp.asarray(seq_ids, jnp.uint32),
                     jnp.asarray(page_nos, jnp.uint32))
-    ops = ch.OpBatch(jnp.full((q,), ch.INSERT, jnp.int32), keys,
-                     jnp.asarray(phys[:, None], jnp.uint32))
-    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy=paged.strategy,
-                                      inline=True, vw=1)
-    return paged._replace(table=table), jnp.asarray(phys)
+    ops = ch.make_hash_ops(jnp.full((q,), engine.INSERT, jnp.int32), keys,
+                           jnp.asarray(phys[:, None], jnp.uint32), vw=1)
+    table, res, _ = ch.apply_hash(paged.spec.table, paged.state.table, ops)
+    paged.state = paged.state._replace(table=table)
+    return paged, jnp.asarray(phys)
 
 
 def lookup_pages(paged: PagedKV, seq_ids, n_pages_per_seq: int):
@@ -120,39 +225,39 @@ def lookup_pages(paged: PagedKV, seq_ids, n_pages_per_seq: int):
     b = seq_ids.shape[0]
     pages = jnp.arange(n_pages_per_seq, dtype=jnp.uint32)
     keys = page_key(seq_ids[:, None], pages[None, :]).reshape(-1)
-    ops = ch.OpBatch(jnp.full((keys.shape[0],), ch.FIND, jnp.int32), keys,
-                     jnp.zeros((keys.shape[0], 1), jnp.uint32))
-    table, res, _ = ch.apply_hash_ops(paged.table, ops, strategy=paged.strategy,
-                                      inline=True, vw=1)
+    ops = ch.make_hash_ops(
+        jnp.full((keys.shape[0],), engine.FIND, jnp.int32), keys, vw=1)
+    table, res, _ = ch.apply_hash(paged.spec.table, paged.state.table, ops)
     phys = jnp.where(res.found, res.value[:, 0].astype(jnp.int32), -1)
-    return paged._replace(table=table), phys.reshape(b, n_pages_per_seq)
+    paged.state = paged.state._replace(table=table)
+    return paged, phys.reshape(b, n_pages_per_seq)
 
 
 def free_pages(paged: PagedKV, seq_id: int, n_pages_used: int) -> PagedKV:
     """Release a finished sequence's pages: CacheHash delete (path-copying
-    CAS) + host free-list push."""
+    CAS) + big-atomic free-ring push."""
     if n_pages_used == 0:
         return paged
     pages = np.arange(n_pages_used, dtype=np.uint32)
     keys = page_key(jnp.full((n_pages_used,), seq_id, jnp.uint32),
                     jnp.asarray(pages))
-    find_ops = ch.OpBatch(jnp.full((n_pages_used,), ch.FIND, jnp.int32),
-                          keys, jnp.zeros((n_pages_used, 1), jnp.uint32))
-    table, res, _ = ch.apply_hash_ops(paged.table, find_ops,
-                                      strategy=paged.strategy, inline=True, vw=1)
+    find_ops = ch.make_hash_ops(
+        jnp.full((n_pages_used,), engine.FIND, jnp.int32), keys, vw=1)
+    table, res, _ = ch.apply_hash(paged.spec.table, paged.state.table,
+                                  find_ops)
     phys = np.asarray(res.value[:, 0], np.int32)[np.asarray(res.found)]
-    del_ops = ch.OpBatch(jnp.full((n_pages_used,), ch.DELETE, jnp.int32),
-                         keys, jnp.zeros((n_pages_used, 1), jnp.uint32))
-    table, _, _ = ch.apply_hash_ops(table, del_ops, strategy=paged.strategy,
-                                    inline=True, vw=1)
+    del_ops = ch.make_hash_ops(
+        jnp.full((n_pages_used,), engine.DELETE, jnp.int32), keys, vw=1)
+    table, _, _ = ch.apply_hash(paged.spec.table, table, del_ops)
     if len(phys):
         ok = paged.free.enqueue_batch(phys.astype(np.uint32))
         assert ok.all()                   # ring is sized to hold every page
-    return paged._replace(table=table)
+    paged.state = paged.state._replace(table=table)
+    return paged
 
 
 # ---------------------------------------------------------------------------
-# Physical page I/O
+# Physical page I/O (host call style; the fused step uses the *_fn forms)
 # ---------------------------------------------------------------------------
 
 def write_prompt(paged: PagedKV, phys_pages, layer_k, layer_v) -> PagedKV:
@@ -161,7 +266,7 @@ def write_prompt(paged: PagedKV, phys_pages, layer_k, layer_v) -> PagedKV:
     P = paged.page_size
     L, T = layer_k.shape[0], layer_k.shape[1]
     n_full = T // P
-    k_pages, v_pages = paged.k_pages, paged.v_pages
+    k_pages, v_pages = paged.state.k_pages, paged.state.v_pages
     if n_full:
         kk = layer_k[:, :n_full * P].reshape(L, n_full, P, *layer_k.shape[2:])
         vv = layer_v[:, :n_full * P].reshape(L, n_full, P, *layer_v.shape[2:])
@@ -173,36 +278,17 @@ def write_prompt(paged: PagedKV, phys_pages, layer_k, layer_v) -> PagedKV:
             layer_k[:, n_full * P:])
         v_pages = v_pages.at[:, phys_pages[n_full], :rem].set(
             layer_v[:, n_full * P:])
-    return paged._replace(k_pages=k_pages, v_pages=v_pages)
+    paged.state = paged.state._replace(k_pages=k_pages, v_pages=v_pages)
+    return paged
 
 
 def append_token(paged: PagedKV, phys_page, offset, k_tok, v_tok) -> PagedKV:
-    """Write one new token's K/V for a batch of sequences.
-    phys_page: int32[b]; offset: int32[b] in [0, P); k/v_tok:
-    [L_attn, b, kvh, hd]."""
-    L = k_tok.shape[0]
-    b = k_tok.shape[1]
-    li = jnp.arange(L)[:, None].repeat(b, 1).reshape(-1)
-    pi = jnp.broadcast_to(phys_page[None], (L, b)).reshape(-1)
-    oi = jnp.broadcast_to(offset[None], (L, b)).reshape(-1)
-    k_pages = paged.k_pages.at[li, pi, oi].set(
-        k_tok.reshape(-1, *k_tok.shape[2:]))
-    v_pages = paged.v_pages.at[li, pi, oi].set(
-        v_tok.reshape(-1, *v_tok.shape[2:]))
-    return paged._replace(k_pages=k_pages, v_pages=v_pages)
+    """Write one new token's K/V for a batch of sequences (host call)."""
+    paged.state = append_token_fn(paged.spec, paged.state, phys_page, offset,
+                                  k_tok, v_tok)
+    return paged
 
 
 def gather_kv(paged: PagedKV, phys: jax.Array):
-    """phys: int32[b, max_pages] (-1 pad) -> K/V [L, b, max_pages*P, kvh, hd]
-    plus a validity mask [b, max_pages*P].  One gather per decode step — on
-    TPU this is the page-granular DMA stream paged attention feeds on."""
-    b, mp = phys.shape
-    P = paged.page_size
-    safe = jnp.maximum(phys, 0)
-    k = paged.k_pages[:, safe]            # [L, b, mp, P, kvh, hd]
-    v = paged.v_pages[:, safe]
-    L = k.shape[0]
-    k = k.reshape(L, b, mp * P, *k.shape[4:])
-    v = v.reshape(L, b, mp * P, *v.shape[4:])
-    valid = jnp.repeat(phys >= 0, P, axis=1)
-    return k, v, valid
+    """Host-call form of `gather_fn` (v1 signature)."""
+    return gather_fn(paged.spec, paged.state, phys)

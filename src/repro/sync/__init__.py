@@ -2,14 +2,17 @@
 
 Layered exactly as Blelloch & Wei ("LL/SC and Atomic Copy") prescribe:
 
-  llsc        k-word load-linked / store-conditional / validate, with
-              per-lane link contexts over a `bigatomic.TableState`
+  llsc        v1 compatibility shim for k-word LL / SC / validate; since the
+              v2 redesign these are first-class kinds of the unified engine
+              (`repro.atomics.apply`), mixable with load/store/CAS lanes
   atomic_copy linearizable big-atomic -> big-atomic copy built on LL/SC
+              (one mixed LL+LOAD batch, then an SC batch, per wave)
   queue       bounded MPMC ring queue (Vyukov-style tickets) whose head,
               tail and slot cells are big atomics driven through LL/SC,
               with Dice-style bounded-backoff contention management
 
-See DESIGN.md §4 for the batch-step concurrency model.
+See DESIGN.md §4 for the batch-step concurrency model and §5 for the
+v2 spec/pytree/registry API.
 """
 
 from repro.sync.llsc import (  # noqa: F401

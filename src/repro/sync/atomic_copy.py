@@ -8,17 +8,18 @@ copies may chain (lane j's source is lane i's destination) and may collide
 
 Implementation: lanes are scheduled into *waves* such that no lane shares a
 source-after-write or destination with an earlier unfinished lane.  A wave
-runs the LL/SC protocol verbatim:
+is TWO unified-engine calls (the v2 mixed-batch API earns its keep here —
+v1 needed three):
 
-  1. LL every destination           (links dst at its current version)
-  2. read every source through the honest `read_protocol`
-  3. SC every destination with the source bytes
+  1. one mixed batch: LL lanes link every destination while LOAD lanes read
+     every source, linearized together in one call;
+  2. SC every destination with the loaded source bytes.
 
 Within a wave nothing intervenes between a lane's source read and its SC —
 the SC is the linearization point and always succeeds, so the wave loop
 terminates in at most q waves.  Wave scheduling is host-side (numpy) because
 the conflict graph is data-dependent; each wave's table work is the jitted
-`apply_sync` path, so every strategy's layout maintenance is exercised.
+unified `apply`, so every strategy's layout maintenance is exercised.
 """
 
 from __future__ import annotations
@@ -26,8 +27,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bigatomic as ba
-from repro.sync import llsc
+from repro.core import engine
+from repro.core.specs import AtomicSpec
 
 
 def copy_batch_reference(data: np.ndarray, version: np.ndarray,
@@ -58,7 +59,7 @@ def _waves(src: np.ndarray, dst: np.ndarray) -> list[np.ndarray]:
         if q else []
 
 
-def copy_batch(state: ba.TableState, src, dst, *, strategy: str, k: int):
+def copy_batch(spec: AtomicSpec, state, src, dst):
     """Atomically copy cell src[i] -> dst[i] for each lane, in lane order.
 
     Returns (state', n_waves).  Linearizable: matches
@@ -66,17 +67,25 @@ def copy_batch(state: ba.TableState, src, dst, *, strategy: str, k: int):
     """
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
+    k = spec.k
     n_waves = 0
     for lanes in _waves(src, dst):
-        w_src = jnp.asarray(src[lanes])
-        w_dst = jnp.asarray(dst[lanes])
-        ctx = llsc.init_ctx(len(lanes), k)
-        # 1. link destinations
-        ctx, _ = llsc.ll(state, ctx, w_dst, strategy=strategy, k=k)
-        # 2. honest source read (the strategy's own load protocol)
-        vals, _ok = ba.read_protocol(state, w_src, strategy=strategy)
-        # 3. commit; fresh links with nothing in between => always succeeds
-        state, ctx, _succ = llsc.sc(state, ctx, w_dst, vals,
-                                    strategy=strategy, k=k)
+        m = len(lanes)
+        # 1. One mixed batch: lanes 0..m-1 LL the destinations, lanes
+        #    m..2m-1 LOAD the sources — a single linearization.
+        kind = np.concatenate([np.full(m, engine.LL, np.int32),
+                               np.full(m, engine.LOAD, np.int32)])
+        slots = np.concatenate([dst[lanes], src[lanes]])
+        ctx = engine.init_ctx(2 * m, k)
+        state, ctx, res, _, _ = engine.apply(
+            spec, state, engine.make_ops(kind, slots, k=k), ctx)
+        src_vals = res.value[m:]
+        # 2. Commit; fresh links with nothing in between => always succeeds.
+        kind = np.concatenate([np.full(m, engine.SC, np.int32),
+                               np.full(m, engine.IDLE, np.int32)])
+        desired = jnp.concatenate([src_vals, jnp.zeros_like(src_vals)])
+        state, ctx, _res, _, _ = engine.apply(
+            spec, state, engine.make_ops(kind, slots, desired=desired, k=k),
+            ctx)
         n_waves += 1
     return state, n_waves

@@ -1,4 +1,4 @@
-"""k-word Load-Linked / Store-Conditional over big-atomic tables.
+"""k-word Load-Linked / Store-Conditional — v1 shim over `repro.atomics`.
 
 LL/SC is the paper's headline application of big atomics: a k-word LL
 records the cell's *version* alongside its value, and the matching SC
@@ -7,28 +7,24 @@ comparison is on the version — not the value — SC is immune to ABA (a cell
 restored to its linked bytes after intervening commits still fails) and to
 lapped linkers (a lane that held its link across many other commits).
 
-Batch-step model (mirrors `semantics.apply_batch`): one call linearizes a
-batch of p lane-ops (LL / SC / VL / IDLE) in lane order against the table.
-Lane i's link state lives in `LinkCtx[i]` and persists across batches —
-cross-thread interleavings of the pointer-machine protocol become
-cross-batch interleavings here, driven explicitly by the tests.
+Since the v2 redesign (DESIGN.md §5) LL/SC is not a separate subsystem: the
+unified engine linearizes LL / SC / VALIDATE lanes in the SAME batch as
+LOAD / STORE / CAS, and the one-SC-per-cell-per-batch fact (DESIGN.md §4)
+is its runtime fast path — a batch with no store/CAS lanes resolves in ONE
+round, which is also what the fused Pallas kernel
+(`kernels/llsc_commit.py`) exploits.  New code should call
 
-The key structural fact, and why the fused Pallas kernel
-(`kernels/llsc_commit.py`) needs no serialization loop: **at most one SC per
-cell can succeed per batch.**  Every SC in the batch carries a link version
-<= the cell's pre-batch version, so the first eligible SC in lane order
-commits (bumping the version by 2) and every later SC on that cell is
-already stale.  Unlike `apply_batch`'s L-round CAS chains, an SC batch
-always linearizes in ONE round.
+    repro.atomics.apply(spec, state, ops, ctx)
 
-Every strategy (SEQLOCK / INDIRECT / CACHED_WF / CACHED_ME) gets identical
-semantics; layout maintenance is delegated to `bigatomic.commit_layout`,
-exactly as `bigatomic.apply_ops` does for store/CAS batches.
+with sync kinds from `repro.atomics` (LL / SC / VALIDATE).  This module
+keeps the v1 surface — `SyncOpBatch` (its own kind numbering), `apply_sync`,
+the `ll`/`sc`/`validate` convenience wrappers and the sequential oracle —
+as deprecation shims: `apply_sync` translates the legacy batch and defers
+to the unified engine.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -36,19 +32,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bigatomic as ba
+from repro.core import engine
+from repro.core.engine import LinkCtx, init_ctx  # noqa: F401  (v1 re-exports)
 from repro.core import semantics as sem
-from repro.core.semantics import _segmented_scan_max
 
-# Sync op kinds (distinct namespace from semantics.LOAD/STORE/CAS).
+# Legacy sync op kinds (v1 numbering, distinct from the unified namespace;
+# `_TO_UNIFIED` maps them onto engine.LL / engine.SC / engine.VALIDATE).
 LL = 0     # load-linked: read value, link (slot, version)
 SC = 1     # store-conditional: commit desired iff link still valid
 VL = 2     # validate: is my link still valid?  (never writes)
 IDLE = 3   # padding lane
 
+_TO_UNIFIED = np.asarray(
+    [engine.LL, engine.SC, engine.VALIDATE, engine.IDLE], np.int32)
+
 
 class SyncOpBatch(NamedTuple):
-    """Batch of p sync ops.  kind: int32[p]; slot: int32[p];
-    desired: word[p, k] (SC payload; ignored otherwise)."""
+    """Legacy batch of p sync ops.  kind: int32[p] (v1 numbering);
+    slot: int32[p]; desired: word[p, k] (SC payload; ignored otherwise)."""
 
     kind: jax.Array
     slot: jax.Array
@@ -59,36 +60,7 @@ class SyncOpBatch(NamedTuple):
         return self.kind.shape[0]
 
 
-class LinkCtx(NamedTuple):
-    """Per-lane link state, carried across batches.
-
-    slot:    int32[p]   linked cell (-1 = never linked)
-    version: uint32[p]  version observed at the LL
-    value:   word[p,k]  value observed at the LL
-    linked:  bool[p]    link is live (consumed by any SC attempt)
-    """
-
-    slot: jax.Array
-    version: jax.Array
-    value: jax.Array
-    linked: jax.Array
-
-
-class SyncResult(NamedTuple):
-    """value: word[p,k] witnessed at the op's linearization point;
-    success: bool[p] (LL: always True; SC/VL: link validity)."""
-
-    value: jax.Array
-    success: jax.Array
-
-
-def init_ctx(p: int, k: int) -> LinkCtx:
-    return LinkCtx(
-        slot=jnp.full((p,), -1, jnp.int32),
-        version=jnp.zeros((p,), jnp.uint32),
-        value=jnp.zeros((p, k), sem.WORD_DTYPE),
-        linked=jnp.zeros((p,), bool),
-    )
+SyncResult = engine.ApplyResult
 
 
 def make_sync_batch(kind, slot, desired=None, *, k: int) -> SyncOpBatch:
@@ -98,6 +70,12 @@ def make_sync_batch(kind, slot, desired=None, *, k: int) -> SyncOpBatch:
     if desired is None:
         desired = jnp.zeros((p, k), sem.WORD_DTYPE)
     return SyncOpBatch(kind, slot, jnp.asarray(desired, sem.WORD_DTYPE))
+
+
+def to_unified(ops: SyncOpBatch, *, k: int) -> engine.OpBatch:
+    """Translate a legacy sync batch into the unified op schema."""
+    kind = jnp.asarray(_TO_UNIFIED)[jnp.clip(ops.kind, 0, 3)]
+    return engine.make_ops(kind, ops.slot, desired=ops.desired, k=k)
 
 
 # ---------------------------------------------------------------------------
@@ -148,120 +126,17 @@ def apply_sync_reference(data: np.ndarray, version: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Vectorized linearization (jnp) — bit-identical to the oracle.
+# DEPRECATED shims over the unified engine.
 # ---------------------------------------------------------------------------
 
-def sync_batch(data: jax.Array, version: jax.Array, ctx: LinkCtx,
-               ops: SyncOpBatch):
-    """Table-level vectorized LL/SC batch.  Returns
-    (data', version', ctx', SyncResult, ApplyStats)."""
-    n, k = data.shape
-    p = ops.p
-    kind = ops.kind
-
-    active = kind != IDLE
-    slot = jnp.where(active, ops.slot, n)
-
-    order = jnp.argsort(slot, stable=True)       # (slot, lane) lexicographic
-    inv = jnp.argsort(order, stable=True)
-
-    s_slot = slot[order]
-    s_kind = kind[order]
-    s_desired = ops.desired[order]
-    s_cslot = ctx.slot[order]
-    s_cver = ctx.version[order]
-    s_clnk = ctx.linked[order]
-
-    idx = jnp.arange(p, dtype=jnp.int32)
-    seg_start = jnp.concatenate(
-        [jnp.ones((1,), bool), s_slot[1:] != s_slot[:-1]])
-
-    safe_slot = jnp.minimum(s_slot, n - 1)
-    ver0 = version[safe_slot]                    # pre-batch version per lane
-    pre_val = data[safe_slot]                    # pre-batch value per lane
-
-    # An SC is eligible iff its lane's link names this cell at its pre-batch
-    # version.  The FIRST eligible SC in each segment wins; versions only
-    # move forward inside the batch, so everyone behind the winner is stale.
-    eligible = (s_kind == SC) & s_clnk & (s_cslot == s_slot) & \
-        (s_cver == ver0) & (s_slot < n)
-    elig_incl = _segmented_scan_max(eligible.astype(jnp.int32), seg_start)
-    elig_before = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), elig_incl[:-1]])
-    elig_before = jnp.where(seg_start, 0, elig_before) > 0
-    win = eligible & ~elig_before
-
-    # Winner position (inclusive prefix): lanes after the winner observe the
-    # committed value/version; lanes before it observe the pre-batch state.
-    wpos_incl = _segmented_scan_max(jnp.where(win, idx, -1), seg_start)
-    post = wpos_incl >= 0                        # a commit at-or-before me
-    post_excl = post & ~win                      # strictly before me (win is
-    #                                              unique, so at == mine)
-    cur_val = jnp.where(post_excl[:, None],
-                        s_desired[jnp.maximum(wpos_incl, 0)], pre_val)
-    cur_ver = ver0 + jnp.where(post_excl, jnp.uint32(2), jnp.uint32(0))
-
-    is_ll = (s_kind == LL) & (s_slot < n)
-    is_vl = (s_kind == VL) & (s_slot < n)
-    is_sc = (s_kind == SC) & (s_slot < n)
-
-    s_value = jnp.where((is_ll | is_vl | is_sc)[:, None], cur_val,
-                        jnp.zeros_like(cur_val))
-    vl_ok = s_clnk & (s_cslot == s_slot) & (s_cver == cur_ver)
-    s_success = jnp.where(is_ll, True,
-                          jnp.where(is_vl, vl_ok,
-                                    jnp.where(is_sc, win, False)))
-
-    # --- commit winners --------------------------------------------------
-    w_idx = jnp.where(win, s_slot, n)
-    new_data = data.at[w_idx].set(s_desired, mode="drop")
-    new_version = version.at[w_idx].add(jnp.uint32(2), mode="drop")
-
-    # --- link context updates --------------------------------------------
-    n_slot = jnp.where(is_ll, s_slot, s_cslot)
-    n_ver = jnp.where(is_ll, cur_ver, s_cver)
-    n_val = jnp.where(is_ll[:, None], cur_val, ctx.value[order])
-    n_lnk = jnp.where(is_ll, True, jnp.where(is_sc, False, s_clnk))
-
-    new_ctx = LinkCtx(n_slot[inv], n_ver[inv], n_val[inv], n_lnk[inv])
-    result = SyncResult(s_value[inv], s_success[inv])
-
-    # --- stats (feed the same traffic model as apply_ops) ----------------
-    seg_end = jnp.concatenate([seg_start[1:], jnp.ones((1,), bool)])
-    seg_any_win_rev = _segmented_scan_max(
-        jnp.flip(win.astype(jnp.int32)), jnp.flip(seg_end))
-    seg_any_win = jnp.flip(seg_any_win_rev) > 0
-    stats = sem.ApplyStats(
-        rounds=jnp.where(jnp.any(is_sc), 1, 0).astype(jnp.int32),
-        n_updates=jnp.sum(win.astype(jnp.int32)),
-        n_loads=jnp.sum(is_ll.astype(jnp.int32)),
-        n_cas_fail=jnp.sum((is_sc & ~win).astype(jnp.int32)),
-        n_raced_loads=jnp.sum((is_ll & seg_any_win).astype(jnp.int32)),
-        n_dirty_cells=jnp.sum(win.astype(jnp.int32)),  # <=1 winner per cell
-    )
-    return new_data, new_version, new_ctx, result, stats
-
-
-@functools.partial(jax.jit, static_argnames=("strategy", "k"))
 def apply_sync(state: ba.TableState, ctx: LinkCtx, ops: SyncOpBatch, *,
                strategy: str, k: int):
-    """Linearize a sync batch against a big-atomic table; maintain the
-    strategy's layout.  Returns (state', ctx', SyncResult, stats, Traffic).
+    """DEPRECATED shim: use `repro.atomics.apply(spec, state, ops, ctx)`
+    with unified kinds.  Returns (state', ctx', SyncResult, stats, Traffic).
     """
-    strategy = ba.Strategy(strategy)
-    vals = ba.logical(state, strategy) \
-        if strategy != ba.Strategy.INDIRECT else state.data
-    new_data, new_version, new_ctx, result, stats = sync_batch(
-        vals, state.version, ctx, ops)
-    new_state = ba.commit_layout(state, new_data, new_version,
-                                 stats.n_updates, strategy, ops.p)
-    traffic = ba._traffic_model(strategy, stats, k, ops.p)
-    return new_state, new_ctx, result, stats, traffic
+    spec = ba._spec(state, strategy, k)
+    return engine.apply(spec, state, to_unified(ops, k=k), ctx)
 
-
-# ---------------------------------------------------------------------------
-# Convenience single-kind wrappers
-# ---------------------------------------------------------------------------
 
 def ll(state, ctx, slots, *, strategy: str, k: int):
     """Link every lane i to slots[i].  Returns (ctx', values)."""

@@ -12,19 +12,23 @@ k-word store — payload and tag can never tear apart, which is exactly what
 big atomics buy over a word-at-a-time ring.  A dequeue that claimed ticket h
 consumes the slot and recycles it with seq = h + C.
 
-Claiming is an LL/SC on the counter cell: LL reads the ticket and links the
-cell, SC commits ticket+1 iff no other lane committed in between.  Per
-batch-round at most one enqueuer and one dequeuer win (`llsc.apply_sync`
-resolves same-cell SC races in lane order); losers retry under the
-contention-management policy of Dice, Hendler & Mirsky (arXiv:1305.5800) —
-bounded constant or capped-exponential backoff measured in ROUNDS, the
-batch-step analogue of their wasted-CAS spin loops.  The benchmarks compare
-the policies; `none` makes commit order deterministic (lane order), which
-the linearizability tests exploit.
+Claiming is an LL/SC on the counter cell through the unified engine
+(`repro.atomics.apply` with a static `QueueSpec.table_spec()`): LL reads the
+ticket and links the cell, SC commits ticket+1 iff no other lane committed
+in between — a pure-sync batch, so the engine resolves it on its one-round
+fast path.  Per batch-round at most one enqueuer and one dequeuer win;
+losers retry under the contention-management policy of Dice, Hendler &
+Mirsky (arXiv:1305.5800) — bounded constant or capped-exponential backoff
+measured in ROUNDS, the batch-step analogue of their wasted-CAS spin loops.
+The benchmarks compare the policies; `none` makes commit order deterministic
+(lane order), which the linearizability tests exploit.
 
 Non-blocking semantics: an enqueue on a stably-full queue and a dequeue on a
 stably-empty queue return failure ("stably" = no pending opposite-kind lane
 in the same call could change the verdict; such lanes defer instead).
+
+The ring state is the table's `TableState` pytree (`.state`); `BigQueue` is
+the host-side retry driver around it.
 """
 
 from __future__ import annotations
@@ -34,11 +38,11 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bigatomic as ba
-from repro.core import semantics as sem
-from repro.sync import llsc
+from repro.core import engine
+from repro.core.specs import (DEFAULT_STRATEGY, QUEUE_HEAD, QUEUE_SLOT0,
+                              QUEUE_TAIL, QueueSpec)
 
-HEAD, TAIL, SLOT0 = 0, 1, 2
+HEAD, TAIL, SLOT0 = QUEUE_HEAD, QUEUE_TAIL, QUEUE_SLOT0
 
 # run_batch op kinds
 ENQ, DEQ, QIDLE = 0, 1, 2
@@ -68,44 +72,57 @@ class BackoffPolicy(NamedTuple):
 class BigQueue:
     """Bounded MPMC queue; every cell a big atomic, every claim an LL/SC."""
 
-    def __init__(self, capacity: int, *, k: int = 2,
-                 strategy: str = "cached_me",
+    def __init__(self, capacity: int | None = None, *, k: int = 2,
+                 strategy: str | None = None,
                  policy: BackoffPolicy = BackoffPolicy("none"),
                  p_max: int = 64, max_rounds: int | None = None,
-                 initial_items=None):
-        if capacity < 2:
-            raise ValueError("capacity must be >= 2 (seq tags are ambiguous "
-                             "for a 1-slot ring)")
-        if k < 2:
-            raise ValueError("k must be >= 2 (seq word + >=1 payload word)")
-        self.capacity = capacity
-        self.k = k
-        self.strategy = ba.Strategy(strategy).value
+                 initial_items=None, spec: QueueSpec | None = None):
+        if spec is None:
+            if capacity is None:
+                raise ValueError("pass either capacity or spec")
+            spec = QueueSpec(capacity, k=k,
+                             strategy=strategy or DEFAULT_STRATEGY,
+                             p_max=p_max)
+        self.spec = spec
+        self._tspec = spec.table_spec()
         self.policy = policy
-        self.max_rounds = max_rounds or 16 * (capacity + p_max + 8)
-        n = SLOT0 + capacity
+        self.max_rounds = max_rounds or 16 * (spec.capacity + spec.p_max + 8)
+        C, k, n = spec.capacity, spec.k, self._tspec.n
         initial = np.zeros((n, k), np.uint32)
-        initial[SLOT0:, 0] = np.arange(capacity, dtype=np.uint32)
+        initial[SLOT0:, 0] = np.arange(C, dtype=np.uint32)
         if initial_items is not None:
             # Pre-image of m enqueues (tickets 0..m-1), written directly
             # into the initial layout: O(1) instead of m contended rounds.
             items = self._payload(initial_items)
             m = len(items)
-            if m > capacity:
-                raise ValueError(f"{m} initial items > capacity {capacity}")
+            if m > C:
+                raise ValueError(f"{m} initial items > capacity {C}")
             initial[SLOT0:SLOT0 + m, 0] = \
                 np.arange(1, m + 1, dtype=np.uint32)
             initial[SLOT0:SLOT0 + m, 1:] = items
             initial[TAIL, 0] = m
-        self.state = ba.init(n, k, self.strategy, p_max, initial)
+        self.state = engine.init(self._tspec, initial)
         self.commit_log: list[tuple[str, int, int]] = []  # (kind, lane, ticket)
+
+    # -- v1 attribute surface ------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.spec.capacity
+
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    @property
+    def strategy(self) -> str:
+        return self.spec.strategy
 
     # -- introspection -------------------------------------------------------
 
     def _counters(self) -> tuple[int, int]:
-        vals, _ = ba.read_protocol(
-            self.state, jnp.asarray([HEAD, TAIL], jnp.int32),
-            strategy=self.strategy)
+        vals, _ = engine.read(self._tspec, self.state,
+                              jnp.asarray([HEAD, TAIL], jnp.int32))
         vals = np.asarray(vals)
         return int(vals[0, 0]), int(vals[1, 0])
 
@@ -149,6 +166,7 @@ class BigQueue:
         kinds = np.asarray(kinds, np.int32)
         p = len(kinds)
         C, k = self.capacity, self.k
+        tspec = self._tspec
         values = self._payload(values) if values is not None else \
             np.zeros((p, k - 1), np.uint32)
 
@@ -158,7 +176,7 @@ class BigQueue:
         attempts = np.zeros(p, np.int64)
         delay = np.zeros(p, np.int64)
         counter_cell = np.where(kinds == ENQ, TAIL, HEAD).astype(np.int32)
-        ctx = llsc.init_ctx(p, k)
+        ctx = engine.init_ctx(p, k)
         rounds = 0
 
         while pending.any():
@@ -173,19 +191,18 @@ class BigQueue:
                 continue
 
             # 1. LL the counter cell (tail for ENQ lanes, head for DEQ).
-            ops1 = llsc.make_sync_batch(
-                np.where(active, llsc.LL, llsc.IDLE), counter_cell, k=k)
-            self.state, ctx, res1, _, _ = llsc.apply_sync(
-                self.state, ctx, ops1, strategy=self.strategy, k=k)
+            ops1 = engine.make_ops(
+                np.where(active, engine.LL, engine.IDLE), counter_cell, k=k)
+            self.state, ctx, res1, _, _ = engine.apply(
+                tspec, self.state, ops1, ctx)
             tick = np.asarray(res1.value[:, 0], np.uint32)
 
             # 2. Honest reads: my ring slot + the opposite counter.
             slot_cell = (SLOT0 + (tick % np.uint32(C))).astype(np.int32)
             other_cell = np.where(kinds == ENQ, HEAD, TAIL).astype(np.int32)
-            rvals, _ = ba.read_protocol(
-                self.state,
-                jnp.asarray(np.concatenate([slot_cell, other_cell])),
-                strategy=self.strategy)
+            rvals, _ = engine.read(
+                tspec, self.state,
+                jnp.asarray(np.concatenate([slot_cell, other_cell])))
             rvals = np.asarray(rvals)
             seq = rvals[:p, 0].astype(np.uint32)
             other = rvals[p:, 0].astype(np.uint32)
@@ -209,14 +226,16 @@ class BigQueue:
                 delay = np.maximum(delay - 1, 0)
                 continue
 
-            # 3. SC the counter: claim ticket `tick` by committing tick+1.
+            # 3. SC the counter (claim ticket `tick` by committing tick+1);
+            #    the slot publish rides the same round as a follow-up STORE
+            #    once the winners are known.
             des = np.zeros((p, k), np.uint32)
             des[:, 0] = tick + np.uint32(1)
-            ops2 = llsc.make_sync_batch(
-                np.where(attempt, llsc.SC, llsc.IDLE), counter_cell, des,
-                k=k)
-            self.state, ctx, res2, _, _ = llsc.apply_sync(
-                self.state, ctx, ops2, strategy=self.strategy, k=k)
+            ops2 = engine.make_ops(
+                np.where(attempt, engine.SC, engine.IDLE), counter_cell,
+                desired=des, k=k)
+            self.state, ctx, res2, _, _ = engine.apply(
+                tspec, self.state, ops2, ctx)
             won = np.asarray(res2.success) & attempt
 
             # 4. Winners publish their slot in one atomic k-word store:
@@ -225,13 +244,10 @@ class BigQueue:
             st_des[:, 0] = np.where(kinds == ENQ, tick + np.uint32(1),
                                     tick + np.uint32(C))
             st_des[:, 1:] = np.where((kinds == ENQ)[:, None], values, 0)
-            ops3 = sem.OpBatch(
-                jnp.asarray(np.where(won, sem.STORE, sem.IDLE), jnp.int32),
-                jnp.asarray(slot_cell),
-                jnp.zeros((p, k), sem.WORD_DTYPE),
-                jnp.asarray(st_des))
-            self.state, _, _, _ = ba.apply_ops(
-                self.state, ops3, strategy=self.strategy, k=k)
+            ops3 = engine.make_ops(
+                np.where(won, engine.STORE, engine.IDLE), slot_cell,
+                desired=st_des, k=k)
+            self.state, _, _, _, _ = engine.apply(tspec, self.state, ops3)
 
             # 5. Bookkeeping: payload capture, commit log, backoff.
             for lane in np.nonzero(won & (kinds == ENQ))[0]:

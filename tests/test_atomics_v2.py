@@ -1,0 +1,416 @@
+"""v2 API acceptance tests: pytree-native states, one op schema with mixed
+LOAD/STORE/CAS/LL/SC/VALIDATE batches against the sequential oracle, the
+strategy registry's plug-in contract, and the checked op-construction /
+return_ok satellites (see ISSUE 2 / DESIGN.md §5)."""
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import atomics
+from repro.core import cachehash as ch
+from repro.sync import llsc
+from repro.sync.queue import BigQueue
+
+LOCKFREE = ["seqlock", "indirect", "cached_wf", "cached_me"]
+
+
+def _np_ctx(ctx):
+    return atomics.LinkCtx(*[np.asarray(x) for x in ctx])
+
+
+def _mixed_batch(rng, ref_ctx, *, p, n, k, current):
+    """All seven table kinds in one batch; SC/VALIDATE lanes mostly target
+    their link, half the CAS comparands match the live value."""
+    kind = rng.integers(0, 7, p).astype(np.int32)
+    slot = rng.integers(0, n, p).astype(np.int32)
+    for i in range(p):
+        if kind[i] in (atomics.SC, atomics.VALIDATE) \
+                and ref_ctx.linked[i] and rng.random() < 0.7:
+            slot[i] = ref_ctx.slot[i]
+    expected = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    use_cur = rng.random(p) < 0.5
+    expected = np.where(use_cur[:, None], current[slot], expected)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    return atomics.make_ops(kind, slot, expected, desired, k=k)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: mixed-kind batches match the sequential oracle on every
+# lock-free strategy, including cross-batch link state.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_mixed_kind_batches_match_oracle(strategy):
+    # deterministic per-strategy seed (hash() is salt-randomized per process)
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()))
+    for trial in range(3):
+        n = int(rng.integers(2, 14))
+        k = int(rng.integers(1, 5))
+        p = int(rng.integers(1, 28))
+        spec = atomics.AtomicSpec(n, k, strategy, p_max=64)
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        state = atomics.init(spec, init)
+        ctx = atomics.init_ctx(p, k)
+        ref_ctx = _np_ctx(ctx)
+        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        for step in range(5):
+            ops = _mixed_batch(rng, ref_ctx, p=p, n=n, k=k, current=ref_data)
+            ref_data, ref_ver, ref_ctx, ref_res = \
+                atomics.apply_ops_reference(ref_data, ref_ver, ref_ctx, ops)
+            state, ctx, res, stats, traffic = atomics.apply(
+                spec, state, ops, ctx)
+            msg = f"{strategy} trial {trial} step {step}"
+            np.testing.assert_array_equal(
+                np.asarray(atomics.logical(spec, state)), ref_data,
+                err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(state.version), ref_ver,
+                                          err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(res.value),
+                                          ref_res.value, err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(res.success),
+                                          ref_res.success, err_msg=msg)
+            for name, a, b in zip(ctx._fields, ctx, ref_ctx):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{msg} ctx.{name}")
+        vals, ok = atomics.read(spec, state, np.arange(n))
+        assert bool(np.asarray(ok).all())
+        np.testing.assert_array_equal(np.asarray(vals), ref_data)
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_cross_batch_aba_adversary(strategy):
+    """A store A->B->A through the value path between LL and SC: the bytes
+    match the link, a CAS would succeed, SC must refuse (version moved)."""
+    n, k = 4, 3
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=16)
+    init = np.arange(n * k, dtype=np.uint32).reshape(n, k)
+    state = atomics.init(spec, init)
+    ctx = atomics.init_ctx(1, k)
+    state, ctx, res, _, _ = atomics.apply(
+        spec, state, atomics.sync_ops([atomics.LL], [2], k=k), ctx)
+    original = np.asarray(res.value[0])
+    for payload in ((original + 1).astype(np.uint32), original):
+        state, ctx, _, _, _ = atomics.apply(
+            spec, state, atomics.stores([2], payload[None], k=k), ctx)
+    np.testing.assert_array_equal(
+        np.asarray(atomics.logical(spec, state))[2], original)
+    # mixed batch: VALIDATE and SC in one call — both must fail
+    ops = atomics.make_ops([atomics.VALIDATE, atomics.SC], [2, 2],
+                           desired=np.stack([original, original]), k=k)
+    ctx2 = atomics.LinkCtx(*[jnp.concatenate([x, x]) for x in ctx])
+    state, ctx2, res, _, _ = atomics.apply(spec, state, ops, ctx2)
+    assert not bool(np.asarray(res.success).any())
+    np.testing.assert_array_equal(
+        np.asarray(atomics.logical(spec, state))[2], original)
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_cross_batch_lapped_linker_with_mixed_traffic(strategy):
+    """Lane 0 sleeps on its link while later batches mix stores, CAS and
+    other lanes' SCs on the same cell; its eventual SC must fail."""
+    n, k, p = 4, 2, 6
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=64)
+    state = atomics.init(spec)
+    ctx = atomics.init_ctx(p, k)
+    state, ctx, _, _, _ = atomics.apply(
+        spec, state, atomics.sync_ops(np.full(p, atomics.LL),
+                                      np.zeros(p, np.int32), k=k), ctx)
+    rng = np.random.default_rng(3)
+    for lane in range(1, p):
+        # mixed batch: lane re-links, then commits; a STORE lane races it
+        kind = np.full(p, atomics.IDLE, np.int32)
+        kind[lane] = atomics.LL
+        kind[(lane + 1) % p if (lane + 1) % p != 0 else 1] = atomics.LOAD
+        ops = atomics.make_ops(kind, np.zeros(p, np.int32), k=k)
+        state, ctx, _, _, _ = atomics.apply(spec, state, ops, ctx)
+        kind = np.full(p, atomics.IDLE, np.int32)
+        kind[lane] = atomics.SC
+        desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+        ops = atomics.make_ops(kind, np.zeros(p, np.int32),
+                               desired=desired, k=k)
+        state, ctx, res, _, _ = atomics.apply(spec, state, ops, ctx)
+        assert bool(np.asarray(res.success)[lane])
+    # lane 0's link predates every commit above
+    ops = atomics.make_ops([atomics.SC], [0],
+                           desired=np.zeros((1, k), np.uint32), k=k)
+    ctx0 = atomics.LinkCtx(*[x[:1] for x in ctx])
+    state, _, res, _, _ = atomics.apply(spec, state, ops, ctx0)
+    assert not bool(np.asarray(res.success)[0])
+
+
+def test_valcas_and_sc_interleave_same_cell():
+    """CAS chains and SCs interleaved on one cell in one batch: the general
+    engine path must thread versions through the rounds correctly."""
+    n, k = 1, 2
+    spec = atomics.AtomicSpec(n, k, "cached_me", p_max=16)
+    state = atomics.init(spec)
+    ctx = atomics.init_ctx(4, k)
+    state, ctx, _, _, _ = atomics.apply(
+        spec, state, atomics.sync_ops(np.full(4, atomics.LL),
+                                      np.zeros(4, np.int32), k=k), ctx)
+    # lane 0: STORE (bumps version) | lane 1: SC (stale now -> fail)
+    # lane 2: CAS expecting lane 0's value (succeeds) | lane 3: LOAD
+    kind = np.asarray([atomics.STORE, atomics.SC, atomics.CAS, atomics.LOAD],
+                      np.int32)
+    expected = np.zeros((4, k), np.uint32)
+    expected[2] = 7
+    desired = np.asarray([[7] * k, [9] * k, [11] * k, [0] * k], np.uint32)
+    ops = atomics.make_ops(kind, np.zeros(4, np.int32), expected, desired,
+                           k=k)
+    ref = atomics.apply_ops_reference(
+        np.asarray(atomics.logical(spec, state)), np.asarray(state.version),
+        _np_ctx(ctx), ops)
+    state, ctx, res, stats, _ = atomics.apply(spec, state, ops, ctx)
+    np.testing.assert_array_equal(np.asarray(res.success), ref[3].success)
+    succ = np.asarray(res.success)
+    assert succ[0] and not succ[1] and succ[2] and succ[3]
+    np.testing.assert_array_equal(
+        np.asarray(atomics.logical(spec, state))[0], [11] * k)
+    assert int(stats.rounds) == 3          # STORE, SC, CAS serialize
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: states are pytrees — jit round-trip and lax.scan preserve
+# semantics (oracle equality).
+# ---------------------------------------------------------------------------
+
+def test_table_state_jit_and_scan_round_trip():
+    rng = np.random.default_rng(0)
+    n, k, p = 8, 3, 12
+    spec = atomics.AtomicSpec(n, k, "cached_wf", p_max=32)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    state = atomics.init(spec, init)
+    # identity jit round-trip preserves structure and leaves
+    state_rt = jax.jit(lambda s: s)(state)
+    assert jax.tree_util.tree_structure(state_rt) == \
+        jax.tree_util.tree_structure(state)
+    for a, b in zip(jax.tree_util.tree_leaves(state_rt),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    ops = [atomics.OpBatch(*[jnp.asarray(f) for f in
+                             _mixed_batch(rng, _np_ctx(atomics.init_ctx(p, k)),
+                                          p=p, n=n, k=k, current=init)])
+           for _ in range(3)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ops)
+
+    def step(carry, op):
+        st, cx = carry
+        st, cx, res, _, _ = atomics.apply(spec, st, op, cx)
+        return (st, cx), res.success
+
+    (st_scan, _), _ = jax.lax.scan(step, (state_rt, atomics.init_ctx(p, k)),
+                                   stacked)
+    # oracle over the same 3 batches
+    ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+    ref_ctx = _np_ctx(atomics.init_ctx(p, k))
+    for op in ops:
+        ref_data, ref_ver, ref_ctx, _ = atomics.apply_ops_reference(
+            ref_data, ref_ver, ref_ctx, op)
+    np.testing.assert_array_equal(
+        np.asarray(atomics.logical(spec, st_scan)), ref_data)
+    np.testing.assert_array_equal(np.asarray(st_scan.version), ref_ver)
+
+
+def test_hash_state_and_linkctx_are_pytrees():
+    spec = atomics.HashSpec(8, vw=1, strategy="cached_me", p_max=32)
+    hstate = ch.init_hash(spec)
+    hstate_rt = jax.jit(lambda s: s)(hstate)
+    ops = ch.make_hash_ops(
+        np.full(4, atomics.INSERT, np.int32), np.arange(4, dtype=np.uint32),
+        np.ones((4, 1), np.uint32), vw=1)
+    h2, res, _ = ch.apply_hash(spec, hstate_rt, ops)
+    assert bool(np.asarray(res.found).all())
+    items = ch.items(h2, inline=spec.inline, vw=spec.vw)
+    assert set(items) == {0, 1, 2, 3}
+
+    ctx = atomics.init_ctx(4, 2)
+    ctx_rt = jax.jit(lambda c: c)(ctx)
+    assert jax.tree_util.tree_structure(ctx_rt) == \
+        jax.tree_util.tree_structure(ctx)
+
+    # the queue's ring state is a TableState pytree too
+    q = BigQueue(spec=atomics.QueueSpec(4, k=2, strategy="cached_me"))
+    q.state = jax.jit(lambda s: s)(q.state)
+    assert q.enqueue_batch(np.asarray([5], np.uint32)).all()
+    out, ok = q.dequeue_batch(1)
+    assert ok.all() and int(out[0, 0]) == 5
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: a new strategy registers from a test file, without touching
+# core, and passes the oracle suite.
+# ---------------------------------------------------------------------------
+
+def test_register_strategy_plain_clone_runs_oracle_suite():
+    class PlainClone(atomics.StrategyImpl):
+        name = "plain_clone_v2test"
+
+    atomics.register_strategy(PlainClone(), overwrite=True)
+    try:
+        rng = np.random.default_rng(11)
+        n, k, p = 10, 3, 16
+        spec = atomics.AtomicSpec(n, k, "plain_clone_v2test", p_max=32)
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        state = atomics.init(spec, init)
+        ctx = atomics.init_ctx(p, k)
+        ref_ctx = _np_ctx(ctx)
+        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        for _ in range(4):
+            ops = _mixed_batch(rng, ref_ctx, p=p, n=n, k=k, current=ref_data)
+            ref_data, ref_ver, ref_ctx, ref_res = \
+                atomics.apply_ops_reference(ref_data, ref_ver, ref_ctx, ops)
+            state, ctx, res, _, _ = atomics.apply(spec, state, ops, ctx)
+            np.testing.assert_array_equal(
+                np.asarray(atomics.logical(spec, state)), ref_data)
+            np.testing.assert_array_equal(np.asarray(res.success),
+                                          ref_res.success)
+        # the registry rejects silent double-registration
+        with pytest.raises(ValueError, match="already registered"):
+            atomics.register_strategy(PlainClone())
+        assert "plain_clone_v2test" in atomics.registered_strategies()
+    finally:
+        atomics.unregister_strategy("plain_clone_v2test")
+
+
+def test_registered_strategy_with_non_shadow_layout():
+    """The engine must linearize against `engine_view` (default: logical),
+    not the raw data field — a layout that stores data obfuscated and
+    derives logical values in `logical()` still gets correct semantics."""
+    class Obfuscated(atomics.StrategyImpl):
+        name = "obfuscated_v2test"
+
+        def init(self, n, k, p_max, data):
+            base = super().init(n, k, p_max, data)
+            return base._replace(data=base.data + jnp.uint32(1))
+
+        def logical(self, state):
+            return state.data - jnp.uint32(1)
+
+        def commit(self, state, new_data, new_version, n_updates, p):
+            return state._replace(data=new_data + jnp.uint32(1),
+                                  version=new_version)
+
+        def read(self, state, slots):
+            return (self.logical(state)[slots],
+                    jnp.ones((slots.shape[0],), bool))
+
+    atomics.register_strategy(Obfuscated(), overwrite=True)
+    try:
+        rng = np.random.default_rng(17)
+        n, k, p = 6, 2, 12
+        spec = atomics.AtomicSpec(n, k, "obfuscated_v2test", p_max=16)
+        init = rng.integers(0, 2 ** 31, (n, k), dtype=np.uint32)
+        state = atomics.init(spec, init)
+        ctx = atomics.init_ctx(p, k)
+        ref_ctx = _np_ctx(ctx)
+        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        for _ in range(3):
+            ops = _mixed_batch(rng, ref_ctx, p=p, n=n, k=k, current=ref_data)
+            ref_data, ref_ver, ref_ctx, ref_res = \
+                atomics.apply_ops_reference(ref_data, ref_ver, ref_ctx, ops)
+            state, ctx, res, _, _ = atomics.apply(spec, state, ops, ctx)
+            np.testing.assert_array_equal(
+                np.asarray(atomics.logical(spec, state)), ref_data)
+            np.testing.assert_array_equal(np.asarray(res.value),
+                                          ref_res.value)
+            np.testing.assert_array_equal(np.asarray(res.success),
+                                          ref_res.success)
+    finally:
+        atomics.unregister_strategy("obfuscated_v2test")
+
+
+# ---------------------------------------------------------------------------
+# Satellites: checked op construction; load(..., return_ok=True).
+# ---------------------------------------------------------------------------
+
+def test_apply_enforces_kind_namespaces():
+    """Hash kinds never reach the table engine (the oracle raises on them)
+    and table kinds never reach the hash engine."""
+    spec = atomics.AtomicSpec(4, 2, "cached_me", p_max=8)
+    state = atomics.init(spec)
+    with pytest.raises(ValueError, match="not table ops"):
+        atomics.apply(spec, state,
+                      atomics.make_ops([atomics.FIND], [0], k=2))
+    hspec = atomics.HashSpec(4, vw=1, strategy="cached_me", p_max=8)
+    hstate = ch.init_hash(hspec)
+    with pytest.raises(ValueError, match="not hash ops"):
+        ch.apply_hash(hspec, hstate,
+                      atomics.make_ops([atomics.STORE], [0], k=1))
+
+
+def test_make_ops_validates_and_coerces():
+    with pytest.raises(ValueError, match="unknown op kinds"):
+        atomics.make_ops([42], [0], k=2)
+    with pytest.raises(ValueError, match="desired shape"):
+        atomics.make_ops([atomics.STORE], [0],
+                         desired=np.zeros((1, 3), np.uint32), k=2)
+    with pytest.raises(ValueError, match="slot shape"):
+        atomics.make_ops([atomics.LOAD, atomics.LOAD], [0], k=2)
+    ops = atomics.make_ops([atomics.CAS], [0],
+                           expected=np.ones((1, 2), np.int64),
+                           desired=np.ones((1, 2), np.float64), k=2)
+    assert ops.expected.dtype == jnp.uint32      # coerced
+    assert ops.desired.dtype == jnp.uint32
+
+
+def test_table_cas_routes_through_checked_constructor():
+    from repro.core.bigatomic import BigAtomicTable
+    tab = BigAtomicTable(4, 2, "cached_me", p_max=8)
+    with pytest.raises(ValueError, match="desired shape"):
+        tab.cas([0], np.zeros((1, 2), np.uint32), np.zeros((1, 3), np.uint32))
+    res, _, _ = tab.cas([0], np.zeros((1, 2), np.uint32),
+                        np.ones((1, 2), np.uint32))
+    assert bool(np.asarray(res.success)[0])
+
+
+def test_load_return_ok_surfaces_blocked_readers():
+    from repro.core.bigatomic import BigAtomicTable, begin_update
+    tab = BigAtomicTable(4, 4, "seqlock", p_max=8)
+    vals, ok = tab.load([0, 1], return_ok=True)
+    assert bool(np.asarray(ok).all())
+    tab.state = begin_update(tab.state, 1, np.arange(4, dtype=np.uint32),
+                             strategy="seqlock")
+    vals, ok = tab.load([0, 1], return_ok=True)
+    ok = np.asarray(ok)
+    assert bool(ok[0]) and not bool(ok[1])       # torn cell surfaces
+    # default form still returns bare values (v1 compatibility)
+    assert tab.load([0]).shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: apply_sync survives and agrees with the unified path.
+# ---------------------------------------------------------------------------
+
+def test_apply_sync_shim_matches_unified_apply():
+    n, k, p = 6, 2, 8
+    spec = atomics.AtomicSpec(n, k, "indirect", p_max=32)
+    rng = np.random.default_rng(9)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    slots = rng.integers(0, n, p).astype(np.int32)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+
+    state_a = atomics.init(spec, init)
+    ctx_a = atomics.init_ctx(p, k)
+    state_a, ctx_a, _, _, _ = atomics.apply(
+        spec, state_a, atomics.sync_ops(np.full(p, atomics.LL), slots, k=k),
+        ctx_a)
+    state_a, ctx_a, res_a, _, _ = atomics.apply(
+        spec, state_a,
+        atomics.sync_ops(np.full(p, atomics.SC), slots, desired, k=k), ctx_a)
+
+    state_b = atomics.init(spec, init)
+    ctx_b = llsc.init_ctx(p, k)
+    ctx_b, _ = llsc.ll(state_b, ctx_b, slots, strategy="indirect", k=k)
+    state_b, ctx_b, succ_b = llsc.sc(state_b, ctx_b, slots, desired,
+                                     strategy="indirect", k=k)
+    np.testing.assert_array_equal(np.asarray(res_a.success),
+                                  np.asarray(succ_b))
+    np.testing.assert_array_equal(
+        np.asarray(atomics.logical(spec, state_a)),
+        np.asarray(atomics.logical(spec, state_b)))

@@ -9,6 +9,7 @@ dependency) so they run identically under the real package or the shim.
 import numpy as np
 import pytest
 
+from repro import atomics
 from repro.core import bigatomic as ba
 from repro.core import semantics as sem
 from repro.sync import atomic_copy as ac
@@ -158,8 +159,9 @@ def test_one_sc_per_cell_per_batch():
 def test_atomic_copy_overlap_matches_oracle(strategy):
     rng = np.random.default_rng(7)
     n, k = 10, 4
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=64)
     init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
-    state = ba.init(n, k, strategy, p_max=64, initial=init)
+    state = atomics.init(spec, init)
     ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
     for trial in range(6):
         q = int(rng.integers(1, 10))
@@ -167,8 +169,7 @@ def test_atomic_copy_overlap_matches_oracle(strategy):
         dst = rng.integers(0, n, q)
         ref_data, ref_ver = ac.copy_batch_reference(ref_data, ref_ver,
                                                     src, dst)
-        state, _waves = ac.copy_batch(state, src, dst, strategy=strategy,
-                                      k=k)
+        state, _waves = ac.copy_batch(spec, state, src, dst)
         np.testing.assert_array_equal(
             np.asarray(ba.logical(state, strategy)), ref_data,
             err_msg=f"{strategy} trial {trial}")
@@ -179,9 +180,10 @@ def test_atomic_copy_chain_same_batch():
     """copy(a->b) and copy(b->c) in one batch: c gets a's value (lane order),
     proving the copies don't tear or reorder."""
     n, k = 4, 2
+    spec = atomics.AtomicSpec(n, k, "seqlock", p_max=16)
     init = np.asarray([[1, 1], [2, 2], [3, 3], [4, 4]], np.uint32)
-    state = ba.init(n, k, "seqlock", p_max=16, initial=init)
-    state, _ = ac.copy_batch(state, [0, 1], [1, 2], strategy="seqlock", k=k)
+    state = atomics.init(spec, init)
+    state, _ = ac.copy_batch(spec, state, [0, 1], [1, 2])
     got = np.asarray(ba.logical(state, "seqlock"))
     np.testing.assert_array_equal(got[1], [1, 1])
     np.testing.assert_array_equal(got[2], [1, 1])   # chained through b
