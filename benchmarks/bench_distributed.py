@@ -1,9 +1,13 @@
-"""Beyond-paper: the mesh-sharded big-atomic table (core.distributed).
+"""Mesh-sharded big atomics v2 (core.distributed, DESIGN.md §6).
 
-Runs in a subprocess with 8 placeholder devices, measures throughput of the
-route -> apply -> return pipeline vs a single-shard table, and reports the
-modeled collective bytes per batch (the roofline term that the §Perf
-hillclimb drives down).
+Strategy × shard-count × contention × op-mix sweep of the
+route -> apply -> return collective round, run in a subprocess with 8
+placeholder devices.  Each row records throughput, the observed overflow
+count, and the modeled per-device collective bytes
+(`distributed.collective_words`) — the roofline cell the §Perf hillclimb
+drives down (shrinking `route_capacity` cuts the wire bytes EXACTLY
+proportionally; the `opt` variant shows dedup+interleave+cap/4 doing so
+without overflow on the read-heavy mix).
 """
 
 from __future__ import annotations
@@ -20,60 +24,101 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json, time
     import jax, numpy as np
+    from repro import atomics
     from repro.core import distributed as dsb
-    from repro.core import semantics as sem
+    from repro.core import engine
 
     n, k = 1 << {log_n}, 4
     p_local = {p_local}
+    strategies = {strategies}
+    shard_counts = {shards}
+    reps = {reps}
+
+    def batch(rng, p, upd, zipf, sync_frac):
+        if zipf > 0.0:
+            slots = (rng.zipf(zipf, size=p) - 1) % n
+        else:
+            slots = rng.integers(0, n, size=p)
+        slots = slots.astype(np.int32)
+        r = rng.random(p)
+        kind = np.where(r < upd * 0.5, engine.STORE,
+                        np.where(r < upd, engine.CAS,
+                                 engine.LOAD)).astype(np.int32)
+        if sync_frac > 0.0:
+            s = rng.random(p) < sync_frac
+            kind = np.where(s & (kind == engine.LOAD), engine.LL, kind)
+            kind = np.where(s & (kind == engine.STORE), engine.SC, kind)
+        expected = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+        desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+        return atomics.make_ops(kind, slots, expected, desired, k=k)
+
+    MIXES = [("read90", 0.1, 0.0), ("upd60", 0.6, 0.0), ("sync50", 0.1, 0.5)]
+    CONTENTION = [("uniform", 0.0), ("zipf1.2", 1.2)]
     rows = []
-    for shards in (1, 2, 4, 8):
-        mesh = jax.make_mesh((shards,), ("shard",)) if shards > 1 else \
-            jax.make_mesh((1,), ("shard",))
-        rng = np.random.default_rng(0)
-        p = shards * p_local
-        ops = sem.random_batch(rng, p=p, n=n, k=k, update_frac=0.2)
-        ops_hot = sem.random_batch(rng, p=p, n=n, k=k, update_frac=0.1,
-                                   zipf=1.2)
-        variants = [("baseline", dict()),
-                    ("opt(dedup+interleave+cap/4)",
+    for strategy in strategies:
+        for shards in shard_counts:
+            mesh = jax.make_mesh((shards, 8 // shards), ("shard", "rest"))
+            variants = [("baseline", dict())]
+            if shards > 1:
+                variants.append(
+                    ("opt(dedup+ilv+cap/4)",
                      dict(dedup_loads=True, interleave=True,
-                          route_capacity=max(p_local // 4, 8)))]
-        for vname, kw in variants:
-            table = dsb.init_sharded(mesh, "shard", n, k)
-            apply_ops = dsb.make_apply(mesh, "shard", n, k, p_local, **kw)
-            out = apply_ops(table, ops); jax.block_until_ready(out)
-            t0 = time.perf_counter()
-            reps = 10
-            for _ in range(reps):
-                table, res, ovf = apply_ops(table, ops)
-            jax.block_until_ready(res)
-            dt = (time.perf_counter() - t0) / reps
-            _, _, ovf_hot = apply_ops(table, ops_hot)
-            cap = kw.get("route_capacity", p_local)
-            coll = 2 * cap * (2 * k + 5) * 4 * (shards - 1) / max(shards, 1) \
-                * shards / max(shards, 1)
-            rows.append(dict(variant=vname, shards=shards, p_global=p,
-                             mops_s=p / dt / 1e6, overflow=int(ovf),
-                             overflow_z1_2=int(ovf_hot),
-                             coll_bytes_dev=coll))
+                          route_capacity=max(p_local // 4, 8))))
+            for vname, kw in variants:
+                dspec = dsb.DistSpec(
+                    atomics.AtomicSpec(n, k, strategy, p_max=1024),
+                    "shard", shards, p_local, **kw)
+                p = dspec.p_global
+                for mix, upd, sync_frac in MIXES:
+                    if vname != "baseline" and mix != "read90":
+                        continue          # the opt levers target read traffic
+                    for cont, zipf in CONTENTION:
+                        rng = np.random.default_rng(0)
+                        st = dsb.init_dist(mesh, dspec)
+                        ctx = dsb.init_dist_ctx(mesh, dspec)
+                        ops = batch(rng, p, upd, zipf, sync_frac)
+                        out = dsb.apply(mesh, dspec, st, ops, ctx)
+                        jax.block_until_ready(out[2])
+                        t0 = time.perf_counter()
+                        for _ in range(reps):
+                            st, ctx, res, ovf = dsb.apply(mesh, dspec, st,
+                                                          ops, ctx)
+                        jax.block_until_ready(res)
+                        dt = (time.perf_counter() - t0) / reps
+                        # wire bytes = buffer bytes x the off-device
+                        # fraction (shards-1)/shards; 0 when unsharded,
+                        # matching the historical column semantics.
+                        wire = 4 * dsb.collective_words(dspec) \
+                            * (shards - 1) // shards
+                        rows.append(dict(
+                            strategy=strategy, variant=vname, shards=shards,
+                            mix=mix, contention=cont, p_global=p,
+                            mops_s=round(p / dt / 1e6, 3),
+                            overflow=int(np.asarray(ovf).sum()),
+                            coll_bytes_dev=wire))
     print("JSON:" + json.dumps(rows))
 """)
 
 
 def main(quick: bool = False):
-    script = SCRIPT.format(log_n=12 if quick else 16,
-                           p_local=256 if quick else 1024)
+    script = SCRIPT.format(
+        log_n=10 if quick else 14,
+        p_local=64 if quick else 256,
+        strategies=["cached_me", "seqlock"] if quick
+        else ["seqlock", "indirect", "cached_wf", "cached_me"],
+        shards=(1, 4) if quick else (1, 2, 4, 8),
+        reps=5 if quick else 10)
     env = dict(os.environ, PYTHONPATH=os.path.join(
         os.path.dirname(__file__), "..", "src"))
     r = subprocess.run([sys.executable, "-c", script], env=env,
-                       capture_output=True, text=True, timeout=900)
+                       capture_output=True, text=True, timeout=3000)
     line = [l for l in r.stdout.splitlines() if l.startswith("JSON:")]
     assert line, r.stdout + r.stderr[-2000:]
     import json
     rows = json.loads(line[0][5:])
-    print_table("Distributed big-atomic table (8 placeholder devices)", rows,
-                ["variant", "shards", "p_global", "mops_s", "overflow",
-                 "overflow_z1_2", "coll_bytes_dev"])
+    print_table("Distributed big atomics v2 (8 placeholder devices)", rows,
+                ["strategy", "variant", "shards", "mix", "contention",
+                 "p_global", "mops_s", "overflow", "coll_bytes_dev"])
     save_results("bench_distributed", rows)
     return rows
 

@@ -50,6 +50,11 @@ from repro.core.specs import (  # noqa: F401
     DEFAULT_STRATEGY, AtomicSpec, HashSpec, QueueSpec,
 )
 from repro.core import strategies as _builtin_strategies  # noqa: F401
+# The mesh-sharded execution layer (DESIGN.md §6): same specs, same
+# registry, one collective round per batch.  `atomics.dist.apply(mesh,
+# DistSpec(spec, axis, n_shards, p_local), state, ops, ctx)`.
+from repro.core import distributed as dist  # noqa: F401
+from repro.core.distributed import DistSpec, DistState  # noqa: F401
 
 
 def memory_bytes(spec: AtomicSpec) -> int:

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import engine
 from repro.core import semantics as sem
+from repro.core.deprecation import warn_once
 from repro.core.layout import (  # noqa: F401  (re-exports: v1 import surface)
     NULL, TableState, Traffic, WORD_BYTES, state_nbytes,
 )
@@ -86,8 +87,11 @@ def _traffic_model(strategy, stats: sem.ApplyStats, k: int, p: int):
 
 def apply_ops(state: TableState, ops: sem.OpBatch, *, strategy: str, k: int):
     """DEPRECATED shim: use `repro.atomics.apply(spec, state, ops)`.
+    Warns `DeprecationWarning` once per process.
 
     Returns (new_state, ApplyResult, ApplyStats, Traffic)."""
+    warn_once("core.bigatomic.apply_ops",
+              "repro.atomics.apply(spec, state, ops)")
     new_state, _, result, stats, traffic = engine.apply(
         _spec(state, strategy, k), state, ops)
     return new_state, result, stats, traffic

@@ -54,6 +54,7 @@ from jax import lax
 from repro.core import bigatomic as ba
 from repro.core import engine
 from repro.core import semantics as sem
+from repro.core.deprecation import warn_once
 from repro.core.engine import _segmented_scan_max
 from repro.core.specs import DEFAULT_STRATEGY, HashSpec
 
@@ -418,7 +419,10 @@ def _apply_hash(spec: HashSpec, state: HashState, ops: engine.OpBatch):
 
 def apply_hash_ops(state: HashState, ops, *, strategy: str,
                    inline: bool, vw: int, max_chain: int = 8):
-    """DEPRECATED shim: use `apply_hash(HashSpec(...), state, ops)`."""
+    """DEPRECATED shim: use `apply_hash(HashSpec(...), state, ops)`.
+    Warns `DeprecationWarning` once per process."""
+    warn_once("core.cachehash.apply_hash_ops",
+              "cachehash.apply_hash(HashSpec(...), state, ops)")
     nb = state.table.version.shape[0]
     spec = HashSpec(nb, vw, ba.strategy_name(strategy), inline=inline,
                     max_chain=max_chain)

@@ -1,31 +1,51 @@
-"""Mesh-sharded big-atomic table (beyond-paper: the paper is single-node).
+"""Mesh-sharded big atomics on the v2 spec/registry engine (DESIGN.md §6).
 
-The table's n cells shard over one mesh axis; each device owns a contiguous
-range of cells plus its own lane-slice of the op batch.  One collective
-round-trip executes a globally linearizable batch:
+The paper's experiments stop at one node; this module is the scale-out
+execution layer for everything the unified engine can express.  A structure's
+n cells shard over one mesh axis; each device owns a contiguous block of
+cells (or the `slot % n_shards` residue class with `interleave=True`) plus
+its own `p_local`-lane slice of the op batch.  One collective round-trip
+executes a globally linearizable batch over the FULL op schema:
 
   1. route   — each device buckets its ops by owner shard and exchanges them
-               with a fixed-capacity `all_to_all` (capacity = p_local per
-               (src, dst) pair; overflow beyond capacity is reported, not
-               silently dropped);
-  2. apply   — every shard runs the LOCAL deterministic linearization
-               (`semantics.apply_batch`) on the ops it owns.  Linearization
-               order is (src_device, lane) — a fixed total order, so the
-               result equals a global sequential application in that order;
-  3. return  — results ride the inverse `all_to_all` back to the issuing
-               lane.
+               with a fixed-capacity `all_to_all` (capacity = `cap` per
+               (src, dst) pair).  LL/SC/VALIDATE lanes ride with their link
+               version and a link-matches-slot bit, so the owner shard can
+               arbitrate links it has never seen (the routed per-owner
+               `LinkCtx`).  Lanes beyond capacity are NOT silently dropped:
+               they surface in the returned per-lane `overflow` mask with
+               `success=False` and leave the table untouched.
+  2. apply   — every shard runs the LOCAL v2 linearization
+               (`engine.linearize` over `StrategyImpl.engine_view`/`commit`,
+               resolved through the strategy registry) on the ops it owns,
+               so all registered layouts — built-in or test-registered —
+               run sharded unchanged.  Linearization order is
+               (owner, src device, lane) — a fixed total order, so the
+               result equals a global sequential application in that order
+               (`linearization_order` emits it for the oracle harness).
+  3. return  — results (and, for LL lanes, the linked version) ride the
+               inverse `all_to_all` back to the issuing lane, which merges
+               them into its persistent per-lane `LinkCtx`.
 
-Collective cost per batch: 2 all_to_alls of p_local * (2k+4) words each —
-this is the '(most representative of the paper)' roofline cell and hillclimb
-target; see benchmarks/bench_distributed.py.
+`apply_hash` runs the same round for a `HashSpec` CacheHash: ops route by
+key owner (`bucket // nb_local`, the top bits of the bucket hash) and every
+shard applies its slice with `cachehash.apply_hash` over its own node pool.
 
-Device-local code runs under `shard_map`, so the same `semantics` engine is
-reused unchanged — the distribution layer is ~150 lines on top of it.
+Collective cost per batch and device: 2 all_to_alls moving
+`n_shards * cap * (3k + 6)` words (table) / `n_shards * cap * (2vw + 4)`
+words (hash) — the roofline cell `benchmarks/bench_distributed.py` sweeps;
+`collective_words` is the exact model.
+
+The v1 surface (`ShardedTable` / `init_sharded` / `make_apply` /
+`reference_apply`, load/store/CAS only, PLAIN layout) survives as
+deprecation shims over this engine.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+import functools
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,203 +54,641 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import semantics as sem
+from repro.core import cachehash as ch
+from repro.core import engine
+from repro.core import registry
+from repro.core.deprecation import warn_once
+from repro.core.layout import TableState, WORD_DTYPE
+from repro.core.specs import AtomicSpec, HashSpec
 
+
+@dataclasses.dataclass(frozen=True)
+class DistSpec:
+    """Static shape of a sharded structure: an inner spec + mesh geometry.
+
+    inner:          the structure being sharded (`AtomicSpec` or `HashSpec`);
+                    its strategy resolves through the registry per shard.
+    axis:           mesh axis name the cells and lanes shard over.
+    n_shards:       devices along `axis` (cells split n / n_shards each).
+    p_local:        op lanes issued per device; p_global = n_shards * p_local.
+    route_capacity: per-(src, dst) slots in the all_to_all buffers (default
+                    p_local, which can never overflow ops a device issues).
+                    The collective bytes are EXACTLY proportional to this.
+    dedup_loads:    loads of one cell from one source device whose cell sees
+                    only loads from that source route ONCE; duplicates are
+                    filled locally from the representative (safe: the order
+                    is source-major, such loads are adjacent).
+    interleave:     owner = slot % n_shards instead of contiguous blocks
+                    (tables only; spreads contiguous-slot hotspots).
+    """
+
+    inner: Any                       # AtomicSpec | HashSpec
+    axis: str = "shard"
+    n_shards: int = 1
+    p_local: int = 64
+    route_capacity: int | None = None
+    dedup_loads: bool = False
+    interleave: bool = False
+
+    def __post_init__(self):
+        if self.n_shards <= 0 or self.p_local <= 0:
+            raise ValueError(f"mesh geometry must be positive: {self}")
+        if isinstance(self.inner, HashSpec):
+            if self.interleave:
+                raise ValueError("interleave applies to tables only (hash "
+                                 "buckets route by hash top bits)")
+            if self.dedup_loads:
+                raise ValueError("dedup_loads applies to tables only (hash "
+                                 "FINDs are not dedup'd)")
+            if self.inner.nb % self.n_shards:
+                raise ValueError(f"nb={self.inner.nb} not divisible by "
+                                 f"n_shards={self.n_shards}")
+        elif isinstance(self.inner, AtomicSpec):
+            if self.inner.n % self.n_shards:
+                raise ValueError(f"n={self.inner.n} not divisible by "
+                                 f"n_shards={self.n_shards}")
+        else:
+            raise TypeError(f"inner must be AtomicSpec or HashSpec: "
+                            f"{type(self.inner)}")
+        if self.route_capacity is not None and self.route_capacity <= 0:
+            raise ValueError("route_capacity must be positive")
+
+    # -- derived geometry ----------------------------------------------------
+
+    @property
+    def is_hash(self) -> bool:
+        return isinstance(self.inner, HashSpec)
+
+    @property
+    def n_global(self) -> int:
+        return self.inner.nb if self.is_hash else self.inner.n
+
+    @property
+    def n_local(self) -> int:
+        return self.n_global // self.n_shards
+
+    @property
+    def p_global(self) -> int:
+        return self.n_shards * self.p_local
+
+    @property
+    def cap(self) -> int:
+        return self.route_capacity or self.p_local
+
+    def local_spec(self):
+        """The per-shard spec the local engine runs (same strategy name, so
+        the registry resolves the same `StrategyImpl` on every shard)."""
+        if self.is_hash:
+            return dataclasses.replace(self.inner, nb=self.n_local)
+        return dataclasses.replace(self.inner, n=self.n_local)
+
+
+class DistState(NamedTuple):
+    """Pure pytree: the per-shard local states stacked on a leading
+    [n_shards] axis (every leaf), sharded `P(axis)` over the mesh.  The
+    local states are whatever the strategy's `init` builds (`TableState`)
+    or `cachehash.init_hash` builds (`HashState`) — the distribution layer
+    never looks inside them."""
+
+    local: Any
+
+
+def _unstack(state):
+    """Inside shard_map: leading [1] shard axis -> the local pytree."""
+    return jax.tree_util.tree_map(lambda x: x[0], state)
+
+
+def _restack(state):
+    return jax.tree_util.tree_map(lambda x: x[None], state)
+
+
+def _mesh_shards(mesh: Mesh, axis: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+def init_dist(mesh: Mesh, dspec: DistSpec, initial: np.ndarray | None = None
+              ) -> DistState:
+    """Build the sharded initial state: one local state per shard, stacked
+    and placed `P(axis)` on the mesh.  `initial` (tables only) is the
+    word[n, k] array of initial GLOBAL logical values."""
+    s = dspec.n_shards
+    if _mesh_shards(mesh, dspec.axis) != s:
+        raise ValueError(f"mesh axis {dspec.axis!r} has "
+                         f"{_mesh_shards(mesh, dspec.axis)} devices, spec "
+                         f"says {s}")
+    lsp = dspec.local_spec()
+    if dspec.is_hash:
+        if initial is not None:
+            raise ValueError("hash tables initialize empty; insert instead")
+        locals_ = [ch.init_hash(lsp) for _ in range(s)]
+    else:
+        if initial is None:
+            shards = [None] * s
+        else:
+            initial = np.asarray(initial)
+            if initial.shape != (dspec.n_global, lsp.k):
+                raise ValueError(f"initial shape {initial.shape} != "
+                                 f"({dspec.n_global}, {lsp.k})")
+            shards = [initial[i::s] if dspec.interleave
+                      else initial[i * dspec.n_local:(i + 1) * dspec.n_local]
+                      for i in range(s)]
+        locals_ = [engine.init(lsp, sh) for sh in shards]
+    local = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *locals_)
+    return DistState(jax.device_put(local, NamedSharding(mesh, P(dspec.axis))))
+
+
+def init_dist_ctx(mesh: Mesh, dspec: DistSpec) -> engine.LinkCtx:
+    """A fresh p_global-lane LinkCtx, sharded by source lane."""
+    ctx = engine.init_ctx(dspec.p_global, dspec.inner.k)
+    return jax.device_put(ctx, NamedSharding(mesh, P(dspec.axis)))
+
+
+# ---------------------------------------------------------------------------
+# The route -> apply -> return round (tables: full LOAD/STORE/CAS/LL/SC/
+# VALIDATE schema with a routed per-owner LinkCtx).
+# ---------------------------------------------------------------------------
+
+def _owner_and_local(dspec: DistSpec, slot):
+    """Owner shard + local cell index of each (table) global slot."""
+    s = dspec.n_shards
+    if dspec.interleave:
+        return slot % s, slot // s
+    return jnp.clip(slot // dspec.n_local, 0, s - 1), slot % dspec.n_local
+
+
+def _dst_ranks(owner, cap: int, s: int, p: int):
+    """Rank of each lane within its (src, dst) bucket + the fits mask."""
+    order = jnp.argsort(owner, stable=True)
+    inv = jnp.argsort(order, stable=True)
+    s_owner = owner[order]
+    idx = jnp.arange(p, dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool),
+                                 s_owner[1:] != s_owner[:-1]])
+    start = engine._segmented_scan_max(jnp.where(seg_start, idx, -1),
+                                       seg_start)
+    rank = (idx - start)[inv]
+    fits = (rank < cap) & (owner < s)
+    return rank, fits
+
+
+def _packer(dst, size: int):
+    """Masked scatter into flat [size] send buffers (`dst == size` drops)."""
+    def pack(x, fill):
+        buf = jnp.full((size,) + x.shape[1:], fill, x.dtype)
+        return buf.at[dst].set(x, mode="drop")
+    return pack
+
+
+def _a2a(axis: str, s: int, cap: int):
+    def go(x):
+        return lax.all_to_all(x.reshape((s, cap) + x.shape[1:]), axis,
+                              split_axis=0, concat_axis=0, tiled=False)
+    return go
+
+
+def _dedup(kind, slot, n: int, p: int):
+    """Source-side load dedup: in each same-slot group whose active lanes
+    are ALL loads, every load after the first becomes IDLE and inherits the
+    first lane's routed answer.  Returns (kind', rep[p])."""
+    lane = jnp.arange(p, dtype=jnp.int32)
+    active = kind != engine.IDLE
+    key = jnp.where(active, slot, n)              # idle lanes group apart
+    d_order = jnp.argsort(key, stable=True)
+    d_inv = jnp.argsort(d_order, stable=True)
+    ds = key[d_order]
+    dk = kind[d_order]
+    d_start = jnp.concatenate([jnp.ones((1,), bool), ds[1:] != ds[:-1]])
+    seg_end = jnp.concatenate([d_start[1:], jnp.ones((1,), bool)])
+    start_idx = engine._segmented_scan_max(jnp.where(d_start, lane, -1),
+                                           d_start)
+    nonload = (dk != engine.LOAD) & (ds < n)
+    # Suffix-any per segment, gathered at the segment START = full-segment
+    # any (the suffix scan alone would miss non-loads BEFORE a lane).
+    any_nonload = engine._seg_broadcast_any(nonload, seg_end)[start_idx]
+    dup = (dk == engine.LOAD) & (ds < n) & ~any_nonload & ~d_start
+    rep = jnp.where(dup, d_order[start_idx], d_order)[d_inv]
+    return jnp.where(rep != lane, engine.IDLE, kind), rep
+
+
+@functools.lru_cache(maxsize=256)
+def _build_table_apply(mesh: Mesh, dspec: DistSpec):
+    s, cap, axis = dspec.n_shards, dspec.cap, dspec.axis
+    lsp: AtomicSpec = dspec.local_spec()
+    p_local, k = dspec.p_local, lsp.k
+
+    def local_fn(state, ctx, kind, slot, expected, desired):
+        st = _unstack(state)
+        impl = registry.get_strategy(lsp.strategy)
+        lane = jnp.arange(p_local, dtype=jnp.int32)
+        active0 = kind != engine.IDLE
+
+        rep = lane
+        if dspec.dedup_loads:
+            kind, rep = _dedup(kind, slot, dspec.n_global, p_local)
+        active = kind != engine.IDLE
+
+        owner, lslot = _owner_and_local(dspec, slot)
+        owner = jnp.where(active, owner, s)
+        rank, fits = _dst_ranks(owner, cap, s, p_local)
+
+        # -- route out: ops + the link info the owner needs to arbitrate ----
+        link_ok = ctx.linked & (ctx.slot == slot)     # global-slot compare
+        dst = jnp.where(fits, owner * cap + rank, s * cap)
+        pack = _packer(dst, s * cap)
+        snd_kind = pack(jnp.where(fits, kind, engine.IDLE), engine.IDLE)
+        snd_slot = pack(lslot, 0)
+        snd_exp = pack(expected, 0)
+        snd_des = pack(desired, 0)
+        snd_lver = pack(ctx.version, 0)
+        snd_lok = pack(link_ok, False)
+        go = _a2a(axis, s, cap)
+        r_kind = go(snd_kind).reshape(s * cap)
+        r_slot = go(snd_slot).reshape(s * cap)
+        r_exp = go(snd_exp).reshape(s * cap, k)
+        r_des = go(snd_des).reshape(s * cap, k)
+        r_lver = go(snd_lver).reshape(s * cap)
+        r_lok = go(snd_lok).reshape(s * cap)
+
+        # -- apply: the v2 engine, strategy dispatched through the registry,
+        #    against a routed per-owner LinkCtx ------------------------------
+        octx = engine.LinkCtx(
+            slot=jnp.where(r_lok, r_slot, -1), version=r_lver,
+            value=jnp.zeros((s * cap, k), WORD_DTYPE), linked=r_lok)
+        rops = engine.OpBatch(r_kind, r_slot, r_exp, r_des)
+        new_data, new_ver, new_octx, res, stats = engine.linearize(
+            impl.engine_view(st), st.version, octx, rops)
+        st = impl.commit(st, new_data, new_ver, stats.n_updates, s * cap)
+
+        # -- route back: values, success, and the LL-linked version ---------
+        b_val = go(res.value).reshape(s, cap, k)
+        b_suc = go(res.success).reshape(s, cap)
+        b_ver = go(new_octx.version).reshape(s, cap)
+        safe_owner = jnp.clip(owner, 0, s - 1)
+        safe_pos = jnp.maximum(jnp.where(fits, rank, -1), 0)
+        value = jnp.where(fits[:, None], b_val[safe_owner, safe_pos], 0)
+        success = jnp.where(fits, b_suc[safe_owner, safe_pos], False)
+        ret_ver = b_ver[safe_owner, safe_pos]
+        value = value[rep]
+        success = success[rep]
+        overflow = active0 & ~fits[rep]
+
+        # -- merge the routed answers into the persistent source ctx --------
+        is_ll = fits & (kind == engine.LL)
+        is_sc = fits & (kind == engine.SC)     # dropped SCs keep their link
+        nctx = engine.LinkCtx(
+            slot=jnp.where(is_ll, slot, ctx.slot),
+            version=jnp.where(is_ll, ret_ver, ctx.version),
+            value=jnp.where(is_ll[:, None], value, ctx.value),
+            linked=jnp.where(is_ll, True,
+                             jnp.where(is_sc, False, ctx.linked)))
+        return _restack(st), nctx, value, success, overflow
+
+    spec = P(axis)
+    mapped = shard_map(local_fn, mesh=mesh, in_specs=(spec,) * 6,
+                       out_specs=(spec,) * 5, check_rep=False)
+    return jax.jit(mapped)
+
+
+def _pad_ops(ops: engine.OpBatch, p: int) -> engine.OpBatch:
+    """IDLE-pad the lane axis up to p (callers may issue fewer lanes)."""
+    q = ops.kind.shape[0]
+    if q == p:
+        return ops
+    pad, k = p - q, ops.desired.shape[1]
+    return engine.OpBatch(
+        jnp.concatenate([jnp.asarray(ops.kind, jnp.int32),
+                         jnp.full((pad,), engine.IDLE, jnp.int32)]),
+        jnp.concatenate([jnp.asarray(ops.slot, jnp.int32),
+                         jnp.zeros((pad,), jnp.int32)]),
+        jnp.concatenate([jnp.asarray(ops.expected, WORD_DTYPE),
+                         jnp.zeros((pad, k), WORD_DTYPE)]),
+        jnp.concatenate([jnp.asarray(ops.desired, WORD_DTYPE),
+                         jnp.zeros((pad, k), WORD_DTYPE)]))
+
+
+def _pad_ctx(ctx: engine.LinkCtx, p: int, k: int) -> engine.LinkCtx:
+    q = ctx.slot.shape[0]
+    if q == p:
+        return ctx
+    blank = engine.init_ctx(p - q, k)
+    return engine.LinkCtx(*[jnp.concatenate([a, b])
+                            for a, b in zip(ctx, blank)])
+
+
+def _check_width(q: int, dspec: DistSpec) -> None:
+    if q > dspec.p_global:
+        raise ValueError(f"batch width {q} > p_global {dspec.p_global}")
+
+
+def apply(mesh: Mesh, dspec: DistSpec, dstate: DistState, ops: engine.OpBatch,
+          ctx: engine.LinkCtx | None = None):
+    """Linearize a mixed table batch across the mesh in ONE collective round.
+
+    `ops` has up to p_global lanes laid out source-major (lane i issues from
+    shard i // p_local; missing trailing lanes are IDLE-padded and their
+    results trimmed away); `ctx` carries per-lane LL/SC links across
+    batches.
+
+    Returns (dstate', ctx', ApplyResult, overflow) where `overflow` is the
+    per-lane bool mask of ops rejected by route capacity — reported, never
+    silently dropped; rejected lanes have success=False and no table effect.
+    """
+    if dspec.is_hash:
+        raise TypeError("hash DistSpec: use distributed.apply_hash")
+    engine.check_kinds(ops.kind, engine.TABLE_KINDS, "table")
+    q, k = ops.kind.shape[0], dspec.inner.k
+    _check_width(q, dspec)
+    ops = _pad_ops(ops, dspec.p_global)
+    ctx = engine.init_ctx(dspec.p_global, k) if ctx is None \
+        else _pad_ctx(ctx, dspec.p_global, k)
+    fn = _build_table_apply(mesh, dspec)
+    local, nctx, value, success, overflow = fn(
+        dstate.local, ctx, ops.kind, ops.slot, ops.expected, ops.desired)
+    if q != dspec.p_global:
+        nctx = engine.LinkCtx(*[x[:q] for x in nctx])
+        value, success, overflow = value[:q], success[:q], overflow[:q]
+    return (DistState(local), nctx, engine.ApplyResult(value, success),
+            overflow)
+
+
+# ---------------------------------------------------------------------------
+# Sharded CacheHash: FIND/INSERT/DELETE route by key owner.
+# ---------------------------------------------------------------------------
+
+def _hash_owner(dspec: DistSpec, key_bits):
+    """Owner shard of each key: top bits of the bucket hash (the local
+    apply re-derives the local bucket from the SAME hash's low bits)."""
+    hs: HashSpec = dspec.inner
+    gb = (ch.hash_u32(key_bits.astype(jnp.uint32))
+          & jnp.uint32(hs.nb - 1)).astype(jnp.int32)
+    return gb // dspec.n_local
+
+
+@functools.lru_cache(maxsize=256)
+def _build_hash_apply(mesh: Mesh, dspec: DistSpec):
+    s, cap, axis = dspec.n_shards, dspec.cap, dspec.axis
+    lsp: HashSpec = dspec.local_spec()
+    p_local, vw = dspec.p_local, lsp.vw
+
+    def local_fn(state, kind, key, value):
+        st = _unstack(state)
+        active = kind != engine.IDLE
+        owner = jnp.where(active, _hash_owner(dspec, key), s)
+        rank, fits = _dst_ranks(owner, cap, s, p_local)
+
+        dst = jnp.where(fits, owner * cap + rank, s * cap)
+        pack = _packer(dst, s * cap)
+        snd_kind = pack(jnp.where(fits, kind, engine.IDLE), engine.IDLE)
+        snd_key = pack(key, 0)
+        snd_val = pack(value, 0)
+        go = _a2a(axis, s, cap)
+        r_kind = go(snd_kind).reshape(s * cap)
+        r_key = go(snd_key).reshape(s * cap)
+        r_val = go(snd_val).reshape(s * cap, vw)
+
+        rops = ch.make_hash_ops(r_kind, r_key.astype(jnp.uint32), r_val,
+                                vw=vw)
+        st, res, _stats = ch.apply_hash(lsp, st, rops)
+
+        b_found = go(res.found).reshape(s, cap)
+        b_val = go(res.value).reshape(s, cap, vw)
+        b_over = go(res.overflow).reshape(s, cap)
+        safe_owner = jnp.clip(owner, 0, s - 1)
+        safe_pos = jnp.maximum(jnp.where(fits, rank, -1), 0)
+        found = jnp.where(fits, b_found[safe_owner, safe_pos], False)
+        val = jnp.where(fits[:, None], b_val[safe_owner, safe_pos], 0)
+        walk_over = jnp.where(fits, b_over[safe_owner, safe_pos], False)
+        overflow = active & ~fits
+        return _restack(st), found, val, walk_over, overflow
+
+    spec = P(axis)
+    mapped = shard_map(local_fn, mesh=mesh, in_specs=(spec,) * 4,
+                       out_specs=(spec,) * 5, check_rep=False)
+    return jax.jit(mapped)
+
+
+def apply_hash(mesh: Mesh, dspec: DistSpec, dstate: DistState,
+               ops: engine.OpBatch):
+    """Key-owner-routed sharded CacheHash batch (unified hash schema).
+
+    Returns (dstate', HashResult, overflow) — same overflow contract as
+    `apply`: capacity-rejected lanes are reported with found=False, never
+    silently dropped, and never touch any shard's table.
+    """
+    if not dspec.is_hash:
+        raise TypeError("table DistSpec: use distributed.apply")
+    engine.check_kinds(ops.kind, engine.HASH_KINDS, "hash")
+    q = ops.kind.shape[0]
+    _check_width(q, dspec)
+    ops = _pad_ops(ops, dspec.p_global)
+    fn = _build_hash_apply(mesh, dspec)
+    local, found, value, walk_over, overflow = fn(
+        dstate.local, ops.kind, ops.slot, ops.desired)
+    if q != dspec.p_global:
+        found, value = found[:q], value[:q]
+        walk_over, overflow = walk_over[:q], overflow[:q]
+    return DistState(local), ch.HashResult(found, value, walk_over), overflow
+
+
+# ---------------------------------------------------------------------------
+# Host-side inspection (tests / debugging).
+# ---------------------------------------------------------------------------
+
+def logical(dspec: DistSpec, dstate: DistState) -> jax.Array:
+    """Global logical values [n, k], de-sharded (tables only)."""
+    impl = registry.get_strategy(dspec.inner.strategy)
+    vals = jax.vmap(impl.logical)(dstate.local)      # [s, n_local, k]
+    if dspec.interleave:
+        return jnp.swapaxes(vals, 0, 1).reshape(dspec.n_global, -1)
+    return vals.reshape(dspec.n_global, -1)
+
+
+def versions(dspec: DistSpec, dstate: DistState) -> jax.Array:
+    """Global cell versions [n] (tables only)."""
+    ver = dstate.local.version                       # [s, n_local]
+    if dspec.interleave:
+        return jnp.swapaxes(ver, 0, 1).reshape(-1)
+    return ver.reshape(-1)
+
+
+def hash_items(dspec: DistSpec, dstate: DistState) -> dict:
+    """All (key, value) pairs across every shard's CacheHash."""
+    hs: HashSpec = dspec.inner
+    out: dict = {}
+    for i in range(dspec.n_shards):
+        shard = jax.tree_util.tree_map(lambda x: np.asarray(x)[i],
+                                       dstate.local)
+        out.update(ch.items(shard, inline=hs.inline, vw=hs.vw))
+    return out
+
+
+def collective_words(dspec: DistSpec) -> int:
+    """Exact words each device moves through the two all_to_alls per batch
+    (the roofline term the §Perf hillclimb drives down)."""
+    per_lane = (2 * dspec.inner.vw + 4) if dspec.is_hash \
+        else (3 * dspec.inner.k + 6)
+    return dspec.n_shards * dspec.cap * per_lane
+
+
+# ---------------------------------------------------------------------------
+# The claimed linearization (host-side, for the oracle harness).
+# ---------------------------------------------------------------------------
+
+def _hash_u32_np(key):
+    """Host-side bucket hash: evaluate THE jax implementation so device
+    routing and the claimed order can never diverge."""
+    return np.asarray(ch.hash_u32(jnp.asarray(key, jnp.uint32)))
+
+
+def linearization_order(dspec: DistSpec, ops: engine.OpBatch):
+    """The total order `apply`/`apply_hash` claims for a batch.
+
+    Returns (order, overflow): `order` lists the executed lane ids in the
+    claimed global sequence (owner-major, then source device, then in-bucket
+    rank = lane order; dedup'd loads ride directly after their
+    representative), `overflow` is the bool[p_global] mask of
+    capacity-rejected lanes.  Feed both to `tests/oracle.py`.
+    """
+    kind = np.asarray(ops.kind)
+    slot = np.asarray(ops.slot)
+    p, s, pl, cap = dspec.p_global, dspec.n_shards, dspec.p_local, dspec.cap
+    q = kind.shape[0]
+    _check_width(q, dspec)
+    if q < p:                                  # mirror apply's IDLE padding
+        kind = np.concatenate([kind, np.full(p - q, engine.IDLE, np.int32)])
+        slot = np.concatenate([slot, np.zeros(p - q, np.int32)])
+    if dspec.is_hash:
+        gb = (_hash_u32_np(slot) & np.uint32(dspec.inner.nb - 1)) \
+            .astype(np.int64)
+        owner_of = gb // dspec.n_local
+    elif dspec.interleave:
+        owner_of = slot % s
+    else:
+        owner_of = np.clip(slot // dspec.n_local, 0, s - 1)
+
+    active = kind != engine.IDLE
+    rep = np.arange(p)
+    dups: dict[int, list[int]] = {}
+    if dspec.dedup_loads and not dspec.is_hash:
+        for src in range(s):
+            groups: dict[int, list[int]] = {}
+            for i in range(src * pl, (src + 1) * pl):
+                if active[i]:
+                    groups.setdefault(int(slot[i]), []).append(i)
+            for lanes in groups.values():
+                if all(kind[i] == engine.LOAD for i in lanes) \
+                        and len(lanes) > 1:
+                    first = lanes[0]
+                    dups[first] = lanes[1:]
+                    for i in lanes[1:]:
+                        rep[i] = first
+
+    overflow = np.zeros(p, bool)
+    order: list[int] = []
+    for o in range(s):
+        for src in range(s):
+            cnt = 0
+            for i in range(src * pl, (src + 1) * pl):
+                if not active[i] or rep[i] != i or owner_of[i] != o:
+                    continue
+                if cnt < cap:
+                    order.append(i)
+                    order.extend(dups.get(i, []))
+                    cnt += 1
+                else:
+                    overflow[i] = True
+                    for j in dups.get(i, []):
+                        overflow[j] = True
+    return np.asarray(order, np.int64), overflow[:q]
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATED v1 surface: raw (data, version) PLAIN table, load/store/CAS.
+# ---------------------------------------------------------------------------
 
 class ShardedTable(NamedTuple):
+    """DEPRECATED raw sharded table; new code holds a `DistSpec`+`DistState`."""
+
     data: jax.Array        # word[n, k], sharded over axis 0
     version: jax.Array     # uint32[n], sharded over axis 0
 
 
 def init_sharded(mesh: Mesh, axis: str, n: int, k: int,
                  initial: np.ndarray | None = None) -> ShardedTable:
-    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    """DEPRECATED shim: use `init_dist(mesh, DistSpec(AtomicSpec(...)))`."""
+    warn_once("core.distributed.init_sharded",
+              "distributed.init_dist(mesh, DistSpec(...))")
+    n_shards = _mesh_shards(mesh, axis)
     assert n % n_shards == 0, (n, n_shards)
-    data = jnp.zeros((n, k), sem.WORD_DTYPE) if initial is None \
-        else jnp.asarray(initial, sem.WORD_DTYPE)
+    data = jnp.zeros((n, k), WORD_DTYPE) if initial is None \
+        else jnp.asarray(initial, WORD_DTYPE)
     ver = jnp.zeros((n,), jnp.uint32)
-    sh = NamedSharding(mesh, P(axis))
-    return ShardedTable(jax.device_put(data, NamedSharding(mesh, P(axis, None))),
-                        jax.device_put(ver, sh))
+    return ShardedTable(
+        jax.device_put(data, NamedSharding(mesh, P(axis, None))),
+        jax.device_put(ver, NamedSharding(mesh, P(axis))))
+
+
+def _plain_local(table: ShardedTable, s: int, n_local: int, k: int
+                 ) -> TableState:
+    """Stacked PLAIN-layout local states viewing a raw ShardedTable."""
+    z = lambda dt, shape: jnp.zeros(shape, dt)
+    return TableState(
+        data=table.data.reshape(s, n_local, k),
+        version=table.version.reshape(s, n_local),
+        bptr=z(jnp.int32, (s, 0)), mark=z(bool, (s, 0)),
+        lock=z(jnp.uint32, (s, 0)), pool=z(WORD_DTYPE, (s, 0, k)),
+        free_ring=z(jnp.int32, (s, 0)),
+        ring_head=z(jnp.uint32, (s,)), alloc_gen=z(jnp.uint32, (s,)))
 
 
 def make_apply(mesh: Mesh, axis: str, n: int, k: int, p_local: int,
                *, route_capacity: int | None = None,
                dedup_loads: bool = False, interleave: bool = False):
-    """Build the jitted distributed apply for a fixed op-batch geometry.
+    """DEPRECATED shim: use `distributed.apply(mesh, DistSpec(...), ...)`.
 
-    Returned fn: (table, ops) -> (table', result, overflow_count) where
-    `ops` is an OpBatch of p_global = p_local * n_shards lanes, sharded on
-    lane axis.  Lanes whose slot routes beyond a (src,dst) pair's capacity
-    are rejected (kind treated as IDLE) and counted in overflow_count —
-    at uniform load the capacity is ~n_shards x the mean, so overflow means
-    severe skew (raise capacity or rebalance).
-
-    §Perf levers (hillclimb C, EXPERIMENTS.md):
-      route_capacity — per-(src,dst) slots in the all_to_all buffers.  The
-          collective bytes are EXACTLY proportional to this (fixed-shape
-          exchange), so shrinking it below p_local cuts the wire cost;
-      dedup_loads — loads of the same cell from the same source device with
-          no same-source update to that cell route ONCE; duplicates are
-          filled in locally from the representative's answer.  Safe because
-          the linearization order is source-major: such loads are adjacent
-          in the global order and must return identical values.  Under
-          Zipfian skew this collapses the routed load count by ~the mean
-          duplicate multiplicity, letting route_capacity shrink without
-          overflow."""
-    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
-    cells_per = n // n_shards
-    cap = route_capacity or p_local
-
-    def local(data, ver, kind, slot, expected, desired):
-        # data: [cells_per, k]; ops: this device's [p_local] lanes
-        my = lax.axis_index(axis)
-
-        rep = jnp.arange(p_local, dtype=jnp.int32)   # dedup representative
-        if dedup_loads:
-            d_order = jnp.argsort(slot, stable=True)
-            d_inv = jnp.argsort(d_order, stable=True)
-            d_slot = slot[d_order]
-            d_kind = kind[d_order]
-            idxs = jnp.arange(p_local, dtype=jnp.int32)
-            d_start = jnp.concatenate([jnp.ones((1,), bool),
-                                       d_slot[1:] != d_slot[:-1]])
-            start_idx = sem._segmented_scan_max(
-                jnp.where(d_start, idxs, -1), d_start)
-            is_upd_l = (d_kind == sem.STORE) | (d_kind == sem.CAS)
-            # does this segment contain any update? (fwd+bwd broadcast)
-            seg_end = jnp.concatenate([d_start[1:], jnp.ones((1,), bool)])
-            any_upd = jnp.flip(sem._segmented_scan_max(
-                jnp.flip(is_upd_l.astype(jnp.int32)), jnp.flip(seg_end))) > 0
-            dup = (d_kind == sem.LOAD) & ~any_upd & ~d_start
-            rep_sorted = jnp.where(dup, d_order[start_idx], d_order)
-            rep = rep_sorted[d_inv]
-            kind = jnp.where(rep != jnp.arange(p_local), sem.IDLE, kind)
-
-        if interleave:
-            owner = slot % n_shards
-            local_slot = slot // n_shards
-        else:
-            owner = jnp.clip(slot // cells_per, 0, n_shards - 1)
-            local_slot = slot % cells_per
-        owner = jnp.where(kind != sem.IDLE, owner, n_shards)  # idle -> drop
-
-        # --- route out: bucket by owner, capacity p_local per destination --
-        # rank of each lane within its destination bucket
-        order = jnp.argsort(owner, stable=True)
-        inv = jnp.argsort(order, stable=True)
-        s_owner = owner[order]
-        idx = jnp.arange(p_local, dtype=jnp.int32)
-        seg_start = jnp.concatenate([jnp.ones((1,), bool),
-                                     s_owner[1:] != s_owner[:-1]])
-        start = sem._segmented_scan_max(jnp.where(seg_start, idx, -1),
-                                        seg_start)
-        rank_sorted = idx - start
-        rank = rank_sorted[inv]
-        fits = (rank < cap) & (owner < n_shards)
-        overflow = jnp.sum((~fits & (kind != sem.IDLE)).astype(jnp.int32))
-
-        # pack into [n_shards, cap] send buffers (IDLE padding)
-        dst = jnp.where(fits, owner * cap + rank, n_shards * cap)
-        pack = lambda x, fill: jnp.full(
-            (n_shards * cap,) + x.shape[1:], fill, x.dtype
-        ).at[dst].set(x, mode="drop")
-        snd_kind = pack(jnp.where(fits, kind, sem.IDLE), sem.IDLE)
-        snd_slot = pack(local_slot, 0)
-        snd_exp = pack(expected, 0)
-        snd_des = pack(desired, 0)
-        # remember where each of my lanes went (dst shard, position)
-        src_pos = jnp.where(fits, rank, -1)
-
-        a2a = lambda x: lax.all_to_all(
-            x.reshape((n_shards, cap) + x.shape[1:]), axis,
-            split_axis=0, concat_axis=0, tiled=False)
-        r_kind = a2a(snd_kind).reshape(n_shards * cap)
-        r_slot = a2a(snd_slot).reshape(n_shards * cap)
-        r_exp = a2a(snd_exp).reshape((n_shards * cap, k))
-        r_des = a2a(snd_des).reshape((n_shards * cap, k))
-
-        # --- apply locally: linearization order = (src shard, lane rank) ---
-        ops = sem.OpBatch(r_kind, r_slot, r_exp, r_des)
-        data, ver, res, _ = sem.apply_batch(data, ver, ops)
-
-        # --- route back ------------------------------------------------------
-        back = lambda x: lax.all_to_all(
-            x.reshape((n_shards, cap) + x.shape[1:]), axis,
-            split_axis=0, concat_axis=0, tiled=False)
-        b_val = back(res.value).reshape((n_shards, cap) + (k,))
-        b_suc = back(res.success).reshape((n_shards, cap))
-        # my lane i's answer sits at [owner[i], src_pos[i]]
-        safe_owner = jnp.clip(owner, 0, n_shards - 1)
-        safe_pos = jnp.maximum(src_pos, 0)
-        value = b_val[safe_owner, safe_pos]
-        success = jnp.where(fits, b_suc[safe_owner, safe_pos], False)
-        if dedup_loads:
-            # duplicates copy their representative's answer locally
-            value = value[rep]
-            success = success[rep]
-        return data, ver, value, success, overflow[None]
-
-    spec_tab = P(axis, None)
-    spec_ver = P(axis)
-    spec_lane = P(axis)
-    spec_lane2 = P(axis, None)
-    fn = shard_map(
-        local, mesh=mesh,
-        in_specs=(spec_tab, spec_ver, spec_lane, spec_lane, spec_lane2,
-                  spec_lane2),
-        out_specs=(spec_tab, spec_ver, spec_lane2, spec_lane, spec_lane),
-        check_rep=False)
+    Returned fn keeps the v1 contract: (table, ops) ->
+    (table', result, overflow_count)."""
+    warn_once("core.distributed.make_apply",
+              "distributed.apply(mesh, DistSpec(...), state, ops)")
+    s = _mesh_shards(mesh, axis)
+    dspec = DistSpec(AtomicSpec(n, k, "plain"), axis, s, p_local,
+                     route_capacity=route_capacity, dedup_loads=dedup_loads,
+                     interleave=interleave)
+    fn = _build_table_apply(mesh, dspec)
 
     @jax.jit
-    def apply_ops(table: ShardedTable, ops: sem.OpBatch):
-        data, ver, value, success, overflow = fn(
-            table.data, table.version, ops.kind, ops.slot, ops.expected,
-            ops.desired)
-        return (ShardedTable(data, ver), sem.ApplyResult(value, success),
-                jnp.sum(overflow))
+    def apply_ops(table: ShardedTable, ops: engine.OpBatch):
+        local = _plain_local(table, s, n // s, k)
+        ctx = engine.init_ctx(dspec.p_global, k)
+        local, _, value, success, overflow = fn(
+            local, ctx, ops.kind, ops.slot, ops.expected, ops.desired)
+        return (ShardedTable(local.data.reshape(n, k),
+                             local.version.reshape(n)),
+                engine.ApplyResult(value, success),
+                jnp.sum(overflow.astype(jnp.int32)))
 
     return apply_ops
 
 
-def reference_apply(data, version, ops: sem.OpBatch, *, n_shards: int,
+def reference_apply(data, version, ops: engine.OpBatch, *, n_shards: int,
                     p_local: int, interleave: bool = False):
-    """Sequential oracle in the distributed linearization order
-    (src shard-major, then destination-bucket rank order == lane order
-    within each src)."""
+    """DEPRECATED sequential oracle (v1 signature); new tests use
+    `tests/oracle.py` + `linearization_order`."""
+    from repro.core import semantics as sem
+    dspec = DistSpec(AtomicSpec(data.shape[0], data.shape[1], "plain"),
+                     "shard", n_shards, p_local, interleave=interleave)
+    seq, overflow = linearization_order(dspec, ops)
     kind = np.asarray(ops.kind)
-    slot = np.asarray(ops.slot)
-    n = data.shape[0]
-    cells_per = n // n_shards
-    # order ops as each owner shard sees them: for owner o, for src s, the
-    # lanes of src s with owner o in lane order (capacity p_local per pair)
-    per_src = np.split(np.arange(kind.shape[0]), n_shards)
-    owner_of = (lambda x: x % n_shards) if interleave \
-        else (lambda x: x // cells_per)
-    seq = []
-    dropped = []
-    for o in range(n_shards):
-        for s in range(n_shards):
-            cnt = 0
-            for i in per_src[s]:
-                if kind[i] == sem.IDLE:
-                    continue
-                if owner_of(slot[i]) == o:
-                    if cnt < p_local:
-                        seq.append(i)
-                        cnt += 1
-                    else:
-                        dropped.append(i)
-    reordered = sem.OpBatch(
-        jnp.asarray(kind[seq]), jnp.asarray(slot[seq]),
+    reordered = engine.OpBatch(
+        jnp.asarray(kind[seq]), jnp.asarray(np.asarray(ops.slot)[seq]),
         jnp.asarray(np.asarray(ops.expected)[seq]),
         jnp.asarray(np.asarray(ops.desired)[seq]))
     d2, v2, res = sem.apply_batch_reference(data, version, reordered)
-    # scatter results back to lane order
     p = kind.shape[0]
     k = data.shape[1]
     value = np.zeros((p, k), data.dtype)
     success = np.zeros((p,), bool)
     value[seq] = np.asarray(res.value)
     success[seq] = np.asarray(res.success)
-    return d2, v2, sem.ApplyResult(value, success), dropped
+    return d2, v2, engine.ApplyResult(value, success), \
+        np.nonzero(overflow)[0].tolist()

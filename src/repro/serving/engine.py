@@ -25,6 +25,12 @@ the v1 path's 4 (`dispatch_count` tracks this; bench_atomics records the
 delta).  Admission/prefill stays host-side (it owns the big-atomic rings
 and the Python request registry).
 
+Scale-out (`mesh=` + DESIGN.md §6): the page table becomes a mesh-sharded
+CacheHash and BOTH big-atomic rings (admission, decode-slot claim/retire)
+run on sharded tables through `core.distributed` — page-table finds route
+by key owner inside the SAME fused step, so each decode step stays one
+compiled program, executed per shard (`dispatch_count` still counts 1).
+
 Scope: archs whose layers are all full attention (dense / moe / vlm
 backbones).  SWA / SSM / hybrid archs serve through the dense slot-state path
 (`make_serve_step`) since their state is O(1) or ring-buffered per sequence —
@@ -70,7 +76,8 @@ class ServingEngine:
                  n_pages: int | None = None, page_size: int | None = None,
                  max_pages_per_seq: int = 32, strategy: str | None = None,
                  max_queue: int = 256, seed: int = 0, fused: bool = True,
-                 spec: pk.PagedSpec | None = None):
+                 spec: pk.PagedSpec | None = None, mesh=None,
+                 shard_axis: str = "shard"):
         assert all(k == "attn" for k in cfg.layer_kinds) and \
             cfg.causal and cfg.window == 0, \
             "paged engine serves causal full-attention archs; use " \
@@ -79,10 +86,15 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_pages = max_pages_per_seq
+        n_shards = 1
+        if mesh is not None:
+            n_shards = dict(zip(mesh.axis_names,
+                                mesh.devices.shape))[shard_axis]
         if spec is None:
             spec = pk.make_spec(cfg, n_pages if n_pages is not None else 256,
                                 page_size if page_size is not None else 16,
-                                max_batch, strategy or DEFAULT_STRATEGY)
+                                max_batch, strategy or DEFAULT_STRATEGY,
+                                n_shards=n_shards, axis=shard_axis)
         else:
             if (n_pages, page_size, strategy) != (None, None, None):
                 raise ValueError("pass either spec or the n_pages/page_size/"
@@ -90,16 +102,26 @@ class ServingEngine:
             if spec.max_seqs < max_batch:
                 raise ValueError(f"spec.max_seqs ({spec.max_seqs}) < "
                                  f"max_batch ({max_batch})")
-        self.paged = pk.init(cfg, spec)
+            if spec.n_shards != n_shards:
+                raise ValueError(f"spec.n_shards ({spec.n_shards}) != mesh "
+                                 f"axis size ({n_shards})")
+        self.mesh = mesh
+        self.paged = pk.init(cfg, spec, mesh=mesh)
         self.slots = [_Slot() for _ in range(max_batch)]
         # Lock-free intake: rids wait in an MPMC big-atomic queue; decode
         # slots cycle through a second one (claim = dequeue, retire = enq).
+        # With a mesh, both rings — like the page table — run on the
+        # sharded big-atomic table (LL/SC claims routed by cell owner).
         self.admit_q = BigQueue(max(max_queue, 2), k=2,
-                                strategy=spec.table.strategy)
+                                strategy=spec.table.strategy,
+                                mesh=mesh, shard_axis=shard_axis,
+                                n_shards=n_shards)
         self.slot_q = BigQueue(max(max_batch, 2), k=2,
                                strategy=spec.table.strategy,
                                initial_items=np.arange(max_batch,
-                                                       dtype=np.uint32))
+                                                       dtype=np.uint32),
+                               mesh=mesh, shard_axis=shard_axis,
+                               n_shards=n_shards)
         self.requests: dict[int, Request] = {}
         self._next_seq = 0
         self._key = jax.random.PRNGKey(seed)
@@ -248,7 +270,7 @@ class ServingEngine:
         spec = self.paged.spec
         P = spec.page_size
         pstate, phys, k_dense, v_dense, _ = pk.lookup_and_gather(
-            spec, pstate, seq_ids, self.max_pages)
+            spec, pstate, seq_ids, self.max_pages, mesh=self.mesh)
         logits, nk, nv = self._decode_batch(params, tokens, pos,
                                             k_dense, v_dense)
         b = tokens.shape[0]

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cachehash as ch
+from repro.core import distributed as dsb
 from repro.core import engine
 from repro.core.specs import DEFAULT_STRATEGY, HashSpec, QueueSpec
 from repro.models.common import ModelConfig
@@ -47,19 +48,28 @@ PAGE_MASK = (1 << SEQ_SHIFT) - 1
 
 @dataclasses.dataclass(frozen=True)
 class PagedSpec:
-    """Static geometry of the paged cache (the fused step's only static)."""
+    """Static geometry of the paged cache (the fused step's only static).
+
+    With `n_shards > 1` the page table is a mesh-sharded CacheHash
+    (`core.distributed`): every page-table batch — decode lookups inside the
+    fused step, admission inserts, retirement deletes — routes by key owner
+    over `axis` and each shard applies its slice with its own node pool.
+    """
 
     n_pages: int
     page_size: int
     max_seqs: int
     table: HashSpec
     ring: QueueSpec
+    n_shards: int = 1
+    axis: str = "shard"
 
 
 class PagedState(NamedTuple):
     """Pure pytree: page table + physical pools; flows through `jax.jit`."""
 
-    table: ch.HashState            # page table (big-atomic CacheHash)
+    table: object                  # page table: ch.HashState, or a sharded
+    #                                dsb.DistState when spec.n_shards > 1
     k_pages: jax.Array             # [L_attn, n_pages, P, kvh, hd]
     v_pages: jax.Array
 
@@ -77,6 +87,7 @@ class PagedKV:
     state: PagedState
     states: dict
     free: BigQueue
+    mesh: object = None            # jax Mesh when spec.n_shards > 1
 
     @property
     def page_size(self) -> int:
@@ -93,24 +104,34 @@ def page_key(seq_id, page_no):
 
 
 def make_spec(cfg: ModelConfig, n_pages: int, page_size: int, max_seqs: int,
-              strategy: str = DEFAULT_STRATEGY) -> PagedSpec:
+              strategy: str = DEFAULT_STRATEGY, *, n_shards: int = 1,
+              axis: str = "shard") -> PagedSpec:
+    if n_shards & (n_shards - 1):
+        raise ValueError(f"n_shards must be a power of two (the page table "
+                         f"is a power-of-two CacheHash): {n_shards}")
     nb = 1
-    while nb < 2 * n_pages:
+    while nb < max(2 * n_pages, n_shards):
         nb *= 2
     return PagedSpec(
         n_pages=n_pages, page_size=page_size, max_seqs=max_seqs,
         table=HashSpec(nb, vw=1, strategy=strategy,
                        p_max=max(max_seqs, 64)),
         ring=QueueSpec(max(n_pages, 2), k=2, strategy=strategy,
-                       p_max=max(max_seqs, 64)))
+                       p_max=max(max_seqs, 64)),
+        n_shards=n_shards, axis=axis)
 
 
-def init(cfg: ModelConfig, spec: PagedSpec) -> PagedKV:
+def init(cfg: ModelConfig, spec: PagedSpec, mesh=None) -> PagedKV:
     kinds = cfg.layer_kinds
     l_attn = sum(k == "attn" for k in kinds)
     dt = cfg.cdtype()
     kv = (l_attn, spec.n_pages, spec.page_size, cfg.n_kv_heads, cfg.hd)
-    table = ch.init_hash(spec.table)
+    if spec.n_shards > 1:
+        if mesh is None:
+            raise ValueError("spec.n_shards > 1 requires a mesh")
+        table = dsb.init_dist(mesh, _table_dspec(spec, spec.n_shards))
+    else:
+        table = ch.init_hash(spec.table)
     states = {}
     from repro.models import rglru as rglru_mod
     from repro.models import ssm as ssm_mod
@@ -123,10 +144,12 @@ def init(cfg: ModelConfig, spec: PagedSpec) -> PagedKV:
     # Descending order preserves the old LIFO head's allocation sequence.
     free = BigQueue(spec=spec.ring,
                     initial_items=np.arange(spec.n_pages - 1, -1, -1,
-                                            dtype=np.uint32))
+                                            dtype=np.uint32),
+                    mesh=mesh, shard_axis=spec.axis, n_shards=spec.n_shards)
     state = PagedState(table=table, k_pages=jnp.zeros(kv, dt),
                        v_pages=jnp.zeros(kv, dt))
-    return PagedKV(spec=spec, state=state, states=states, free=free)
+    return PagedKV(spec=spec, state=state, states=states, free=free,
+                   mesh=mesh)
 
 
 def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
@@ -140,19 +163,47 @@ def init_paged(cfg: ModelConfig, n_pages: int, page_size: int,
 # Pure (traceable) page-table ops — the fused decode step composes these.
 # ---------------------------------------------------------------------------
 
+def _table_dspec(spec: PagedSpec, q: int) -> dsb.DistSpec:
+    """DistSpec for a q-lane page-table batch (q a multiple of n_shards).
+    The default route capacity (p_local) can never overflow: a source owns
+    only p_local lanes, so no (src, dst) pair exceeds it."""
+    return dsb.DistSpec(spec.table, spec.axis, spec.n_shards,
+                        q // spec.n_shards)
+
+
+def _hash_apply(spec: PagedSpec, table, kind, keys, values=None, mesh=None):
+    """One page-table batch on the local or mesh-sharded CacheHash.
+    Returns (table', HashResult)."""
+    kind = jnp.asarray(kind, jnp.int32)
+    keys = jnp.asarray(keys, jnp.uint32)
+    q = keys.shape[0]
+    if values is None:
+        values = jnp.zeros((q, 1), jnp.uint32)
+    ops = ch.make_hash_ops(kind, keys, values, vw=1)
+    if spec.n_shards == 1:
+        table, res, _ = ch.apply_hash(spec.table, table, ops)
+        return table, res
+    # dist.apply_hash IDLE-pads the lane axis up to p_global and trims the
+    # results back; we only round the spec width to a shard multiple.
+    q_pad = -(-q // spec.n_shards) * spec.n_shards
+    table, res, _overflow = dsb.apply_hash(mesh, _table_dspec(spec, q_pad),
+                                           table, ops)
+    return table, res
+
+
 def lookup_and_gather(spec: PagedSpec, pstate: PagedState, seq_ids,
-                      n_pages_per_seq: int):
+                      n_pages_per_seq: int, mesh=None):
     """Batched page-table lookup + KV gather, fully traceable: one CacheHash
-    find per (seq, page) — inlined-bucket fast path — then the page-granular
-    gather decode attention feeds on.  Returns
-    (pstate', phys[b, n_pages_per_seq], k, v, valid)."""
+    find per (seq, page) — inlined-bucket fast path, key-owner-routed when
+    the table is sharded — then the page-granular gather decode attention
+    feeds on.  Returns (pstate', phys[b, n_pages_per_seq], k, v, valid)."""
     seq_ids = jnp.asarray(seq_ids, jnp.uint32)
     b = seq_ids.shape[0]
     pages = jnp.arange(n_pages_per_seq, dtype=jnp.uint32)
     keys = page_key(seq_ids[:, None], pages[None, :]).reshape(-1)
-    ops = ch.make_hash_ops(
-        jnp.full((keys.shape[0],), engine.FIND, jnp.int32), keys, vw=1)
-    table, res, _ = ch.apply_hash(spec.table, pstate.table, ops)
+    table, res = _hash_apply(
+        spec, pstate.table,
+        jnp.full((keys.shape[0],), engine.FIND, jnp.int32), keys, mesh=mesh)
     phys = jnp.where(res.found, res.value[:, 0].astype(jnp.int32), -1)
     phys = phys.reshape(b, n_pages_per_seq)
     pstate = pstate._replace(table=table)
@@ -210,9 +261,10 @@ def alloc_pages(paged: PagedKV, seq_ids, page_nos) -> tuple[PagedKV, jax.Array]:
     phys = vals[:, 0].astype(np.int32)
     keys = page_key(jnp.asarray(seq_ids, jnp.uint32),
                     jnp.asarray(page_nos, jnp.uint32))
-    ops = ch.make_hash_ops(jnp.full((q,), engine.INSERT, jnp.int32), keys,
-                           jnp.asarray(phys[:, None], jnp.uint32), vw=1)
-    table, res, _ = ch.apply_hash(paged.spec.table, paged.state.table, ops)
+    table, res = _hash_apply(
+        paged.spec, paged.state.table,
+        jnp.full((q,), engine.INSERT, jnp.int32), keys,
+        jnp.asarray(phys[:, None], jnp.uint32), mesh=paged.mesh)
     paged.state = paged.state._replace(table=table)
     return paged, jnp.asarray(phys)
 
@@ -225,9 +277,10 @@ def lookup_pages(paged: PagedKV, seq_ids, n_pages_per_seq: int):
     b = seq_ids.shape[0]
     pages = jnp.arange(n_pages_per_seq, dtype=jnp.uint32)
     keys = page_key(seq_ids[:, None], pages[None, :]).reshape(-1)
-    ops = ch.make_hash_ops(
-        jnp.full((keys.shape[0],), engine.FIND, jnp.int32), keys, vw=1)
-    table, res, _ = ch.apply_hash(paged.spec.table, paged.state.table, ops)
+    table, res = _hash_apply(
+        paged.spec, paged.state.table,
+        jnp.full((keys.shape[0],), engine.FIND, jnp.int32), keys,
+        mesh=paged.mesh)
     phys = jnp.where(res.found, res.value[:, 0].astype(jnp.int32), -1)
     paged.state = paged.state._replace(table=table)
     return paged, phys.reshape(b, n_pages_per_seq)
@@ -241,14 +294,15 @@ def free_pages(paged: PagedKV, seq_id: int, n_pages_used: int) -> PagedKV:
     pages = np.arange(n_pages_used, dtype=np.uint32)
     keys = page_key(jnp.full((n_pages_used,), seq_id, jnp.uint32),
                     jnp.asarray(pages))
-    find_ops = ch.make_hash_ops(
-        jnp.full((n_pages_used,), engine.FIND, jnp.int32), keys, vw=1)
-    table, res, _ = ch.apply_hash(paged.spec.table, paged.state.table,
-                                  find_ops)
+    table, res = _hash_apply(
+        paged.spec, paged.state.table,
+        jnp.full((n_pages_used,), engine.FIND, jnp.int32), keys,
+        mesh=paged.mesh)
     phys = np.asarray(res.value[:, 0], np.int32)[np.asarray(res.found)]
-    del_ops = ch.make_hash_ops(
-        jnp.full((n_pages_used,), engine.DELETE, jnp.int32), keys, vw=1)
-    table, _, _ = ch.apply_hash(paged.spec.table, table, del_ops)
+    table, _ = _hash_apply(
+        paged.spec, table,
+        jnp.full((n_pages_used,), engine.DELETE, jnp.int32), keys,
+        mesh=paged.mesh)
     if len(phys):
         ok = paged.free.enqueue_batch(phys.astype(np.uint32))
         assert ok.all()                   # ring is sized to hold every page

@@ -4,7 +4,10 @@ Layered exactly as Blelloch & Wei ("LL/SC and Atomic Copy") prescribe:
 
   llsc        v1 compatibility shim for k-word LL / SC / validate; since the
               v2 redesign these are first-class kinds of the unified engine
-              (`repro.atomics.apply`), mixable with load/store/CAS lanes
+              (`repro.atomics.apply`), mixable with load/store/CAS lanes.
+              Everything here routes through `atomics.apply` directly; only
+              the deprecated `apply_sync` shim (re-exported for v1 callers)
+              warns, once, when called
   atomic_copy linearizable big-atomic -> big-atomic copy built on LL/SC
               (one mixed LL+LOAD batch, then an SC batch, per wave)
   queue       bounded MPMC ring queue (Vyukov-style tickets) whose head,

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import bigatomic as ba
 from repro.core import engine
+from repro.core.deprecation import warn_once
 from repro.core.engine import LinkCtx, init_ctx  # noqa: F401  (v1 re-exports)
 from repro.core import semantics as sem
 
@@ -129,20 +130,31 @@ def apply_sync_reference(data: np.ndarray, version: np.ndarray,
 # DEPRECATED shims over the unified engine.
 # ---------------------------------------------------------------------------
 
+def _apply_unified(state, ctx, ops: SyncOpBatch, *, strategy: str, k: int):
+    """The non-deprecated core: translate the legacy batch, run the unified
+    engine.  Everything in repro.sync routes through here (never through the
+    warning `apply_sync` shim) so tier-1 runs warning-free."""
+    spec = ba._spec(state, strategy, k)
+    return engine.apply(spec, state, to_unified(ops, k=k), ctx)
+
+
 def apply_sync(state: ba.TableState, ctx: LinkCtx, ops: SyncOpBatch, *,
                strategy: str, k: int):
     """DEPRECATED shim: use `repro.atomics.apply(spec, state, ops, ctx)`
     with unified kinds.  Returns (state', ctx', SyncResult, stats, Traffic).
+    Warns `DeprecationWarning` once per process.
     """
-    spec = ba._spec(state, strategy, k)
-    return engine.apply(spec, state, to_unified(ops, k=k), ctx)
+    warn_once("sync.llsc.apply_sync",
+              "repro.atomics.apply(spec, state, ops, ctx)")
+    return _apply_unified(state, ctx, ops, strategy=strategy, k=k)
 
 
 def ll(state, ctx, slots, *, strategy: str, k: int):
     """Link every lane i to slots[i].  Returns (ctx', values)."""
     slots = jnp.asarray(slots, jnp.int32)
     ops = make_sync_batch(jnp.full(slots.shape, LL, jnp.int32), slots, k=k)
-    _, ctx, res, _, _ = apply_sync(state, ctx, ops, strategy=strategy, k=k)
+    _, ctx, res, _, _ = _apply_unified(state, ctx, ops, strategy=strategy,
+                                       k=k)
     return ctx, res.value
 
 
@@ -152,8 +164,8 @@ def sc(state, ctx, slots, desired, *, strategy: str, k: int):
     slots = jnp.asarray(slots, jnp.int32)
     ops = make_sync_batch(jnp.full(slots.shape, SC, jnp.int32), slots,
                           desired, k=k)
-    state, ctx, res, _, _ = apply_sync(state, ctx, ops, strategy=strategy,
-                                       k=k)
+    state, ctx, res, _, _ = _apply_unified(state, ctx, ops,
+                                           strategy=strategy, k=k)
     return state, ctx, res.success
 
 
@@ -161,5 +173,5 @@ def validate(state, ctx, slots, *, strategy: str, k: int):
     """Is each lane's link still valid?  Returns bool[p]."""
     slots = jnp.asarray(slots, jnp.int32)
     ops = make_sync_batch(jnp.full(slots.shape, VL, jnp.int32), slots, k=k)
-    _, _, res, _, _ = apply_sync(state, ctx, ops, strategy=strategy, k=k)
+    _, _, res, _, _ = _apply_unified(state, ctx, ops, strategy=strategy, k=k)
     return res.success

@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import engine
 from repro.core.specs import (DEFAULT_STRATEGY, QUEUE_HEAD, QUEUE_SLOT0,
-                              QUEUE_TAIL, QueueSpec)
+                              QUEUE_TAIL, AtomicSpec, QueueSpec)
 
 HEAD, TAIL, SLOT0 = QUEUE_HEAD, QUEUE_TAIL, QUEUE_SLOT0
 
@@ -70,13 +70,20 @@ class BackoffPolicy(NamedTuple):
 
 
 class BigQueue:
-    """Bounded MPMC queue; every cell a big atomic, every claim an LL/SC."""
+    """Bounded MPMC queue; every cell a big atomic, every claim an LL/SC.
+
+    With `mesh`/`n_shards` the ring's cells shard over the mesh axis and
+    every claim/publish round routes through `core.distributed.apply` — the
+    sharded decode-slot/admission path of the serving engine.  The host
+    retry driver is unchanged; only the table execution layer swaps.
+    """
 
     def __init__(self, capacity: int | None = None, *, k: int = 2,
                  strategy: str | None = None,
                  policy: BackoffPolicy = BackoffPolicy("none"),
                  p_max: int = 64, max_rounds: int | None = None,
-                 initial_items=None, spec: QueueSpec | None = None):
+                 initial_items=None, spec: QueueSpec | None = None,
+                 mesh=None, shard_axis: str = "shard", n_shards: int = 1):
         if spec is None:
             if capacity is None:
                 raise ValueError("pass either capacity or spec")
@@ -101,7 +108,24 @@ class BigQueue:
                 np.arange(1, m + 1, dtype=np.uint32)
             initial[SLOT0:SLOT0 + m, 1:] = items
             initial[TAIL, 0] = m
-        self.state = engine.init(self._tspec, initial)
+        self._mesh = mesh if n_shards > 1 else None
+        self._axis = shard_axis
+        self._n_shards = n_shards if self._mesh is not None else 1
+        if self._mesh is not None:
+            from repro.core import distributed as dsb
+            # Cell count padded up to a multiple of the shard count; the
+            # padding cells exist but no op ever targets them.
+            n_pad = -(-n // n_shards) * n_shards
+            self._dist_inner = AtomicSpec(n_pad, k, spec.strategy,
+                                          spec.p_max)
+            pad = np.zeros((n_pad, k), np.uint32)
+            pad[:n] = initial
+            self._dstate = dsb.init_dist(
+                mesh, dsb.DistSpec(self._dist_inner, shard_axis, n_shards,
+                                   1), pad)
+            self.state = None
+        else:
+            self.state = engine.init(self._tspec, initial)
         self.commit_log: list[tuple[str, int, int]] = []  # (kind, lane, ticket)
 
     # -- v1 attribute surface ------------------------------------------------
@@ -118,12 +142,46 @@ class BigQueue:
     def strategy(self) -> str:
         return self.spec.strategy
 
+    # -- execution layer: single-device engine or the sharded dist round ----
+
+    def _pad_width(self, p: int) -> int:
+        s = self._n_shards
+        return -(-p // s) * s
+
+    def _apply_ops(self, ops, ctx):
+        """One unified batch against the ring table; returns (result, ctx').
+
+        Sharded mode routes through `distributed.apply` (which IDLE-pads
+        the lane axis to a shard multiple and trims results back); the
+        default capacity (p_local) can never overflow because a source
+        device only owns p_local lanes in the first place."""
+        if self._mesh is None:
+            self.state, ctx, res, _, _ = engine.apply(
+                self._tspec, self.state, ops, ctx)
+            return res, ctx
+        from repro.core import distributed as dsb
+        p = self._pad_width(ops.kind.shape[0])
+        dspec = dsb.DistSpec(self._dist_inner, self._axis, self._n_shards,
+                             p // self._n_shards)
+        self._dstate, ctx, res, _ovf = dsb.apply(
+            self._mesh, dspec, self._dstate, ops, ctx)
+        return res, ctx
+
+    def _read_cells(self, cells) -> np.ndarray:
+        """Linearizable read of ring cells: the strategy's honest read
+        protocol locally, a routed LOAD batch when sharded."""
+        cells = np.asarray(cells, np.int32)
+        if self._mesh is None:
+            vals, _ = engine.read(self._tspec, self.state,
+                                  jnp.asarray(cells))
+            return np.asarray(vals)
+        res, _ = self._apply_ops(engine.loads(cells, k=self.k), None)
+        return np.asarray(res.value)
+
     # -- introspection -------------------------------------------------------
 
     def _counters(self) -> tuple[int, int]:
-        vals, _ = engine.read(self._tspec, self.state,
-                              jnp.asarray([HEAD, TAIL], jnp.int32))
-        vals = np.asarray(vals)
+        vals = self._read_cells([HEAD, TAIL])
         return int(vals[0, 0]), int(vals[1, 0])
 
     def __len__(self) -> int:
@@ -166,7 +224,6 @@ class BigQueue:
         kinds = np.asarray(kinds, np.int32)
         p = len(kinds)
         C, k = self.capacity, self.k
-        tspec = self._tspec
         values = self._payload(values) if values is not None else \
             np.zeros((p, k - 1), np.uint32)
 
@@ -193,17 +250,13 @@ class BigQueue:
             # 1. LL the counter cell (tail for ENQ lanes, head for DEQ).
             ops1 = engine.make_ops(
                 np.where(active, engine.LL, engine.IDLE), counter_cell, k=k)
-            self.state, ctx, res1, _, _ = engine.apply(
-                tspec, self.state, ops1, ctx)
+            res1, ctx = self._apply_ops(ops1, ctx)
             tick = np.asarray(res1.value[:, 0], np.uint32)
 
             # 2. Honest reads: my ring slot + the opposite counter.
             slot_cell = (SLOT0 + (tick % np.uint32(C))).astype(np.int32)
             other_cell = np.where(kinds == ENQ, HEAD, TAIL).astype(np.int32)
-            rvals, _ = engine.read(
-                tspec, self.state,
-                jnp.asarray(np.concatenate([slot_cell, other_cell])))
-            rvals = np.asarray(rvals)
+            rvals = self._read_cells(np.concatenate([slot_cell, other_cell]))
             seq = rvals[:p, 0].astype(np.uint32)
             other = rvals[p:, 0].astype(np.uint32)
 
@@ -234,8 +287,7 @@ class BigQueue:
             ops2 = engine.make_ops(
                 np.where(attempt, engine.SC, engine.IDLE), counter_cell,
                 desired=des, k=k)
-            self.state, ctx, res2, _, _ = engine.apply(
-                tspec, self.state, ops2, ctx)
+            res2, ctx = self._apply_ops(ops2, ctx)
             won = np.asarray(res2.success) & attempt
 
             # 4. Winners publish their slot in one atomic k-word store:
@@ -247,7 +299,7 @@ class BigQueue:
             ops3 = engine.make_ops(
                 np.where(won, engine.STORE, engine.IDLE), slot_cell,
                 desired=st_des, k=k)
-            self.state, _, _, _, _ = engine.apply(tspec, self.state, ops3)
+            self._apply_ops(ops3, None)
 
             # 5. Bookkeeping: payload capture, commit log, backoff.
             for lane in np.nonzero(won & (kinds == ENQ))[0]:

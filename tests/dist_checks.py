@@ -1,0 +1,344 @@
+"""Scenario driver for tests/test_distributed.py.
+
+Runs in a subprocess under `XLA_FLAGS=--xla_force_host_platform_device_count=8`
+(set below before jax imports) so the mesh-sharded layer executes on 8 fake
+host devices.  Every scenario checks the live sharded system against the
+SHARED linearizability harness (tests/oracle.py) replaying the claimed order
+from `distributed.linearization_order`.
+
+Usage:  python tests/dist_checks.py <scenario> [strategy]
+Prints `DIST_OK:<scenario>` on success (the pytest wrapper asserts on it).
+"""
+
+import os
+import sys
+import zlib
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for path in (_HERE, os.path.join(_HERE, "..", "src")):
+    if path not in sys.path:
+        sys.path.insert(0, path)
+
+import jax                                                     # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from oracle import HashOracle, TableOracle, hash_batch, mixed_batch  # noqa: E402
+from repro import atomics                                      # noqa: E402
+from repro.core import distributed as dsb                      # noqa: E402
+
+SHARD_COUNTS = (2, 4, 8)
+
+
+def _mesh(shards: int):
+    """All scenarios run on the same 8-device fleet; unused devices
+    replicate over the spare axis."""
+    return jax.make_mesh((shards, 8 // shards), ("shard", "rest"))
+
+
+def _drive_table(dspec, mesh, rng, init, steps, make_ops, msg):
+    """Run `steps` batches through the sharded table, checking state,
+    results, link ctx and the overflow contract against the harness."""
+    st = dsb.init_dist(mesh, dspec, init)
+    ctx = dsb.init_dist_ctx(mesh, dspec)
+    oracle = TableOracle(dspec.n_global, dspec.inner.k, dspec.p_global,
+                         initial=init)
+    for step in range(steps):
+        ops = make_ops(rng, oracle)
+        order, ovf_ref = dsb.linearization_order(dspec, ops)
+        st, ctx, res, ovf = dsb.apply(mesh, dspec, st, ops, ctx)
+        np.testing.assert_array_equal(np.asarray(ovf), ovf_ref,
+                                      err_msg=f"{msg} step {step}: overflow")
+        oracle.step_and_check(
+            ops, result=res, logical=dsb.logical(dspec, st),
+            version=dsb.versions(dspec, st), ctx=ctx, order=order,
+            overflow=ovf_ref, msg=f"{msg} step {step}")
+    return st, ctx, oracle
+
+
+def scenario_mixed(strategy: str):
+    """Randomized mixed LOAD/STORE/CAS/LL/SC/VALIDATE batches vs the shared
+    oracle, over shard counts {2, 4, 8}."""
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()))
+    n, k, pl = 48, 3, 6
+    for shards in SHARD_COUNTS:
+        dspec = dsb.DistSpec(atomics.AtomicSpec(n, k, strategy, p_max=64),
+                             "shard", shards, pl)
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        _drive_table(
+            dspec, _mesh(shards), rng, init, steps=3,
+            make_ops=lambda rng, oracle: mixed_batch(
+                rng, oracle.ctx, p=dspec.p_global, n=n, k=k,
+                current=oracle.data),
+            msg=f"mixed {strategy} shards={shards}")
+
+
+def scenario_levers(strategy: str):
+    """The §Perf routing levers must not change semantics: every
+    dedup_loads × interleave × route_capacity combination replays against
+    the shared oracle (load-heavy hot-slot batches so dedup and capacity
+    overflow actually fire)."""
+    n, k, shards, pl = 32, 2, 4, 8
+    rng = np.random.default_rng(29)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+
+    def hot_batch(rng, oracle):
+        p = shards * pl
+        kind = np.where(rng.random(p) < 0.7, atomics.LOAD,
+                        rng.integers(0, 7, p)).astype(np.int32)
+        slot = rng.integers(0, 6, p).astype(np.int32)      # hot cells
+        desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+        expected = np.where((rng.random(p) < 0.5)[:, None],
+                            oracle.data[slot],
+                            rng.integers(0, 2 ** 32, (p, k),
+                                         dtype=np.uint32)).astype(np.uint32)
+        return atomics.make_ops(kind, slot, expected, desired, k=k)
+
+    for dedup in (False, True):
+        for ilv in (False, True):
+            for cap in (None, 3):
+                dspec = dsb.DistSpec(
+                    atomics.AtomicSpec(n, k, strategy, p_max=64), "shard",
+                    shards, pl, route_capacity=cap, dedup_loads=dedup,
+                    interleave=ilv)
+                _drive_table(dspec, _mesh(shards), rng, init, steps=2,
+                             make_ops=hot_batch,
+                             msg=f"levers dedup={dedup} ilv={ilv} cap={cap}")
+
+
+def scenario_sync_adversary(strategy: str):
+    """Cross-batch LL/SC adversaries THROUGH the routing layer: ABA (bytes
+    restored on a remote shard; SC must refuse) and the lapped linker (a
+    lane sleeping on its link while every other source commits)."""
+    n, k, shards, pl = 16, 2, 4, 4
+    mesh = _mesh(shards)
+    dspec = dsb.DistSpec(atomics.AtomicSpec(n, k, strategy, p_max=64),
+                         "shard", shards, pl)
+    p = dspec.p_global
+    rng = np.random.default_rng(5)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+
+    def batch(assign):
+        """assign: {lane: (kind, slot, desired_row)}"""
+        kind = np.full(p, atomics.IDLE, np.int32)
+        slot = np.zeros(p, np.int32)
+        desired = np.zeros((p, k), np.uint32)
+        for lane, (kd, sl, des) in assign.items():
+            kind[lane], slot[lane] = kd, sl
+            if des is not None:
+                desired[lane] = des
+        return atomics.make_ops(kind, slot, desired=desired, k=k)
+
+    st = dsb.init_dist(mesh, dspec, init)
+    ctx = dsb.init_dist_ctx(mesh, dspec)
+    oracle = TableOracle(n, k, p, initial=init)
+
+    def run(ops, msg):
+        nonlocal st, ctx
+        order, ovf = dsb.linearization_order(dspec, ops)
+        assert not ovf.any()
+        st, ctx, res, _ = dsb.apply(mesh, dspec, st, ops, ctx)
+        ref = oracle.step_and_check(
+            ops, result=res, logical=dsb.logical(dspec, st),
+            version=dsb.versions(dspec, st), ctx=ctx, order=order, msg=msg)
+        return np.asarray(res.success), ref
+
+    # --- ABA: lane 0 (src 0) links cell 9 (owner shard 2); stores from a
+    # DIFFERENT source restore the original bytes; SC + VALIDATE must fail.
+    cell = 9
+    run(batch({0: (atomics.LL, cell, None)}), "aba ll")
+    original = np.array(oracle.ctx.value[0], copy=True)
+    run(batch({5: (atomics.STORE, cell, (original + 1).astype(np.uint32))}),
+        "aba store B")
+    run(batch({5: (atomics.STORE, cell, original)}), "aba store A")
+    np.testing.assert_array_equal(
+        np.asarray(dsb.logical(dspec, st))[cell], original)  # bytes match
+    succ, _ = run(batch({0: (atomics.VALIDATE, cell, None)}), "aba validate")
+    assert not succ[0], "VALIDATE must fail after remote A->B->A"
+    succ, _ = run(batch({0: (atomics.SC, cell, original)}), "aba sc")
+    assert not succ[0], "SC must fail after remote A->B->A"
+
+    # --- Lapped linker: lane 0 links cell 0; every other lane (across all
+    # sources) LLs then SCs it in turn; lane 0's eventual SC must fail.
+    run(batch({0: (atomics.LL, 0, None)}), "lap ll0")
+    for lane in range(1, p):
+        run(batch({lane: (atomics.LL, 0, None)}), f"lap ll{lane}")
+        succ, _ = run(batch({lane: (atomics.SC, 0,
+                                    np.full(k, lane, np.uint32))}),
+                      f"lap sc{lane}")
+        assert succ[lane], f"fresh link SC of lane {lane} must succeed"
+    succ, _ = run(batch({0: (atomics.SC, 0, np.zeros(k, np.uint32))}),
+                  "lap sc0")
+    assert not succ[0], "lapped linker's SC must fail"
+
+
+def scenario_overflow(strategy: str):
+    """The all_to_all capacity contract: lanes beyond route_capacity per
+    (src, dst) pair surface in the overflow mask with success=False and
+    leave every shard's table byte-identical to the oracle that skips them
+    — never silently dropped, never corrupting."""
+    n, k, shards, pl, cap = 32, 2, 4, 8, 3
+    mesh = _mesh(shards)
+    dspec = dsb.DistSpec(atomics.AtomicSpec(n, k, strategy, p_max=64),
+                         "shard", shards, pl, route_capacity=cap)
+    p = dspec.p_global
+    rng = np.random.default_rng(7)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    st = dsb.init_dist(mesh, dspec, init)
+    oracle = TableOracle(n, k, p, initial=init)
+
+    # All 8 lanes of src 0 hit shard 0 (slots 0..7), alternating STORE/LOAD;
+    # srcs 1..3 send two lanes each to shard 0 (within cap) plus local ops.
+    kind = np.full(p, atomics.IDLE, np.int32)
+    slot = np.zeros(p, np.int32)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    for lane in range(pl):
+        kind[lane] = atomics.STORE if lane % 2 == 0 else atomics.LOAD
+        slot[lane] = lane                      # owner shard 0
+    for src in range(1, shards):
+        base = src * pl
+        kind[base] = atomics.STORE
+        slot[base] = src                       # owner shard 0
+        kind[base + 1] = atomics.LOAD
+        slot[base + 1] = src + 8 * src         # spread
+    ops = atomics.make_ops(kind, slot, desired=desired, k=k)
+
+    order, ovf_ref = dsb.linearization_order(dspec, ops)
+    # by construction: src 0's lanes 3..7 exceed cap=3 toward shard 0
+    assert list(np.nonzero(ovf_ref)[0]) == [3, 4, 5, 6, 7]
+    st, ctx, res, ovf = dsb.apply(mesh, dspec, st, ops)
+    np.testing.assert_array_equal(np.asarray(ovf), ovf_ref)
+    assert not np.asarray(res.success)[ovf_ref].any(), \
+        "overflowed lanes must report success=False"
+    # table state matches the oracle that executes ONLY the fitting lanes:
+    # the overflowed STOREs (lanes 4, 6) left no trace anywhere.
+    oracle.step_and_check(ops, result=res, logical=dsb.logical(dspec, st),
+                          version=dsb.versions(dspec, st), order=order,
+                          overflow=ovf_ref, msg="overflow contract")
+
+
+def scenario_plugin(strategy_unused: str):
+    """A strategy registered HERE (never imported by core/distributed.py)
+    runs sharded unchanged — the registry is the only coupling."""
+
+    class PlainCloneDist(atomics.StrategyImpl):
+        name = "dist_plugin_check"
+
+    atomics.register_strategy(PlainCloneDist(), overwrite=True)
+    rng = np.random.default_rng(23)
+    n, k, shards, pl = 24, 2, 4, 4
+    dspec = dsb.DistSpec(atomics.AtomicSpec(n, k, "dist_plugin_check",
+                                            p_max=32), "shard", shards, pl)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    _drive_table(
+        dspec, _mesh(shards), rng, init, steps=3,
+        make_ops=lambda rng, oracle: mixed_batch(
+            rng, oracle.ctx, p=dspec.p_global, n=n, k=k,
+            current=oracle.data),
+        msg="plugin shards=4")
+
+
+def scenario_hash(strategy: str):
+    """Key-owner-routed sharded CacheHash vs the dict-model oracle over
+    shard counts {2, 4, 8}, plus the capacity-overflow contract on a
+    single hot key."""
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()) ^ 0x5A5A)
+    for shards in SHARD_COUNTS:
+        hs = atomics.HashSpec(64, vw=1, strategy=strategy, p_max=64)
+        dspec = dsb.DistSpec(hs, "shard", shards, 6)
+        mesh = _mesh(shards)
+        st = dsb.init_dist(mesh, dspec)
+        oracle = HashOracle(vw=1)
+        for step in range(3):
+            ops = hash_batch(rng, p=dspec.p_global, key_space=40, vw=1)
+            order, ovf_ref = dsb.linearization_order(dspec, ops)
+            st, res, ovf = dsb.apply_hash(mesh, dspec, st, ops)
+            np.testing.assert_array_equal(
+                np.asarray(ovf), ovf_ref,
+                err_msg=f"hash shards={shards} step {step}: overflow")
+            oracle.step_and_check(
+                ops, result=res, items=dsb.hash_items(dspec, st),
+                order=order, overflow=ovf_ref,
+                msg=f"hash {strategy} shards={shards} step {step}")
+
+    # hot-key overflow: every lane of src 0 inserts the SAME key with cap=2
+    shards, pl, cap = 4, 6, 2
+    hs = atomics.HashSpec(64, vw=1, strategy=strategy, p_max=64)
+    dspec = dsb.DistSpec(hs, "shard", shards, pl, route_capacity=cap)
+    mesh = _mesh(shards)
+    st = dsb.init_dist(mesh, dspec)
+    kind = np.full(dspec.p_global, atomics.IDLE, np.int32)
+    kind[:pl] = atomics.INSERT
+    keys = np.full(dspec.p_global, 12345, np.uint32)
+    vals = np.arange(dspec.p_global, dtype=np.uint32)[:, None]
+    from repro.core import cachehash as ch
+    ops = ch.make_hash_ops(kind, keys, vals, vw=1)
+    order, ovf_ref = dsb.linearization_order(dspec, ops)
+    assert ovf_ref.sum() == pl - cap
+    st, res, ovf = dsb.apply_hash(mesh, dspec, st, ops)
+    np.testing.assert_array_equal(np.asarray(ovf), ovf_ref)
+    assert not np.asarray(res.found)[ovf_ref].any()
+    oracle = HashOracle(vw=1)
+    oracle.step_and_check(ops, result=res, items=dsb.hash_items(dspec, st),
+                          order=order, overflow=ovf_ref, msg="hash overflow")
+
+
+def scenario_serving(strategy: str):
+    """The serving engine with a mesh: sharded page table + sharded
+    admission/slot rings must produce tokens identical to the single-device
+    engine (one fused program per decode step, executed per shard)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+    from repro.serving import Request, ServingEngine
+
+    cfg = dataclasses.replace(get_config("deepseek_7b", reduced=True),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 9).astype(np.int32),
+               rng.integers(0, cfg.vocab, 5).astype(np.int32)]
+    n_new = 3
+
+    def serve(mesh):
+        eng = ServingEngine(cfg, params, max_batch=2, n_pages=16,
+                            page_size=4, max_pages_per_seq=4,
+                            strategy=strategy, mesh=mesh)
+        for rid, prompt in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=n_new))
+        out = eng.run_to_completion(max_steps=40)
+        # both slots decode together: n_new - 1 fused steps, 1 dispatch each
+        assert eng.dispatch_count == n_new - 1, eng.dispatch_count
+        return out
+
+    want = serve(None)
+    got = serve(_mesh(2))
+    assert got == want, (got, want)
+    assert all(len(v) == n_new for v in got.values())
+
+
+SCENARIOS = {
+    "mixed": scenario_mixed,
+    "levers": scenario_levers,
+    "sync_adversary": scenario_sync_adversary,
+    "overflow": scenario_overflow,
+    "plugin": scenario_plugin,
+    "hash": scenario_hash,
+    "serving": scenario_serving,
+}
+
+
+def main(argv):
+    scenario = argv[1]
+    strategy = argv[2] if len(argv) > 2 else \
+        atomics.DEFAULT_STRATEGY
+    SCENARIOS[scenario](strategy)
+    print(f"DIST_OK:{scenario}")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

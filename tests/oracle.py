@@ -1,0 +1,193 @@
+"""THE shared linearizability harness (ISSUE 3 satellite).
+
+One sequential-replay oracle for every big-atomic surface: given a spec, a
+stream of op batches and a CLAIMED linearization order per batch, it replays
+the ops one at a time through the repo's defining references
+(`engine.apply_ops_reference` for tables, `cachehash.apply_reference` for
+hash tables) and diffs the live system's results, values, versions and link
+state against the replay.  It replaces the three historical copies of this
+logic (tests/test_llsc.py, tests/test_atomics_v2.py and the inline reorder
+check in core/distributed.py's v1 `reference_apply`).
+
+Claimed orders: single-node `atomics.apply` linearizes in lane order (the
+default); the mesh-sharded layer linearizes in the (owner, src, rank) order
+that `distributed.linearization_order` emits, with capacity-rejected lanes
+excluded.  Lanes absent from the order are DROPPED: they must have no table
+effect and report success=False.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import atomics
+from repro.core import cachehash as ch
+from repro.core import engine
+
+
+def _np_ctx(ctx) -> engine.LinkCtx:
+    return engine.LinkCtx(*[np.array(x, copy=True) for x in ctx])
+
+
+class TableOracle:
+    """Sequential oracle for a k-word big-atomic table + per-lane links."""
+
+    def __init__(self, n: int, k: int, p: int,
+                 initial: np.ndarray | None = None):
+        self.n, self.k, self.p = n, k, p
+        self.data = np.zeros((n, k), np.uint32) if initial is None \
+            else np.array(initial, np.uint32)
+        self.version = np.zeros((n,), np.uint32)
+        self.ctx = engine.LinkCtx(
+            np.full((p,), -1, np.int32), np.zeros((p,), np.uint32),
+            np.zeros((p, k), np.uint32), np.zeros((p,), bool))
+
+    def step(self, ops: engine.OpBatch, order=None) -> engine.ApplyResult:
+        """Replay one batch in the claimed linearization `order` (executed
+        lane ids; default = lane order).  Dropped lanes (absent from the
+        order) leave no trace and report success=False / zero values.
+        Returns the reference ApplyResult in lane order (numpy)."""
+        kind = np.asarray(ops.kind)
+        slot = np.asarray(ops.slot)
+        expected = np.asarray(ops.expected)
+        desired = np.asarray(ops.desired)
+        if kind.shape[0] != self.p:
+            raise ValueError(f"batch width {kind.shape[0]} != p {self.p}")
+        order = np.arange(self.p) if order is None \
+            else np.asarray(order, np.int64)
+        sub = engine.OpBatch(kind[order], slot[order], expected[order],
+                             desired[order])
+        sub_ctx = engine.LinkCtx(*[np.asarray(x)[order] for x in self.ctx])
+        data, ver, nctx, res = engine.apply_ops_reference(
+            self.data, self.version, sub_ctx, sub)
+        self.data, self.version = data, ver
+        merged = _np_ctx(self.ctx)
+        for field, rows in zip(engine.LinkCtx._fields, nctx):
+            getattr(merged, field)[order] = np.asarray(rows)
+        self.ctx = merged
+        value = np.zeros((self.p, self.k), np.uint32)
+        success = np.zeros((self.p,), bool)
+        value[order] = np.asarray(res.value)
+        success[order] = np.asarray(res.success)
+        return engine.ApplyResult(value, success)
+
+    # -- diffing -------------------------------------------------------------
+
+    def check(self, *, result=None, ref=None, logical=None, version=None,
+              ctx=None, overflow=None, msg: str = "") -> None:
+        """Diff the live system against the replayed reference.
+
+        result/ref:  live vs reference ApplyResult (values + success);
+        logical:     live global logical values (must equal replayed data);
+        version:     live global cell versions;
+        ctx:         live per-lane LinkCtx;
+        overflow:    bool[p] mask of capacity-rejected lanes — these must
+                     report success=False (the reported-not-dropped contract).
+        """
+        if logical is not None:
+            np.testing.assert_array_equal(np.asarray(logical), self.data,
+                                          err_msg=f"{msg}: logical data")
+        if version is not None:
+            np.testing.assert_array_equal(np.asarray(version), self.version,
+                                          err_msg=f"{msg}: versions")
+        if result is not None:
+            assert ref is not None, "pass ref= (the value step() returned)"
+            np.testing.assert_array_equal(np.asarray(result.value), ref.value,
+                                          err_msg=f"{msg}: result values")
+            np.testing.assert_array_equal(np.asarray(result.success),
+                                          ref.success,
+                                          err_msg=f"{msg}: result success")
+            if overflow is not None:
+                assert not np.asarray(result.success)[overflow].any(), \
+                    f"{msg}: overflow lanes must report success=False"
+        if ctx is not None:
+            for name, live, want in zip(engine.LinkCtx._fields, ctx,
+                                        self.ctx):
+                np.testing.assert_array_equal(np.asarray(live),
+                                              np.asarray(want),
+                                              err_msg=f"{msg}: ctx.{name}")
+
+    def step_and_check(self, ops, *, result=None, logical=None, version=None,
+                       ctx=None, order=None, overflow=None, msg: str = ""):
+        """step() + check() in one call; returns the reference result."""
+        ref = self.step(ops, order)
+        self.check(result=result, ref=ref, logical=logical, version=version,
+                   ctx=ctx, overflow=overflow, msg=msg)
+        return ref
+
+
+class HashOracle:
+    """Sequential dict-model oracle for CacheHash FIND/INSERT/DELETE."""
+
+    def __init__(self, vw: int = 1):
+        self.vw = vw
+        self.model: dict = {}
+
+    def step(self, ops: engine.OpBatch, order=None) -> ch.HashResult:
+        kind = np.asarray(ops.kind)
+        p = kind.shape[0]
+        order = np.arange(p) if order is None else np.asarray(order, np.int64)
+        sub = engine.OpBatch(
+            kind[order], np.asarray(ops.slot)[order],
+            np.asarray(ops.expected)[order], np.asarray(ops.desired)[order])
+        self.model, res = ch.apply_reference(self.model, sub, self.vw)
+        found = np.zeros((p,), bool)
+        value = np.zeros((p, self.vw), np.uint32)
+        found[order] = np.asarray(res.found)
+        value[order] = np.asarray(res.value)
+        return ch.HashResult(found, value, np.zeros((p,), bool))
+
+    def check(self, *, result=None, ref=None, items=None, overflow=None,
+              msg: str = "") -> None:
+        if result is not None:
+            assert ref is not None
+            np.testing.assert_array_equal(np.asarray(result.found), ref.found,
+                                          err_msg=f"{msg}: found")
+            np.testing.assert_array_equal(np.asarray(result.value), ref.value,
+                                          err_msg=f"{msg}: values")
+            if overflow is not None:
+                assert not np.asarray(result.found)[overflow].any(), \
+                    f"{msg}: overflow lanes must report found=False"
+        if items is not None:
+            want = {k: list(np.ravel(v)) for k, v in self.model.items()}
+            got = {k: list(np.ravel(v)) for k, v in items.items()}
+            assert got == want, f"{msg}: table contents diverge"
+
+    def step_and_check(self, ops, *, result=None, items=None, order=None,
+                       overflow=None, msg: str = ""):
+        ref = self.step(ops, order)
+        self.check(result=result, ref=ref, items=items, overflow=overflow,
+                   msg=msg)
+        return ref
+
+
+# ---------------------------------------------------------------------------
+# Shared randomized batch generators (tests + the distributed suite).
+# ---------------------------------------------------------------------------
+
+def mixed_batch(rng: np.random.Generator, ref_ctx, *, p: int, n: int, k: int,
+                current: np.ndarray) -> engine.OpBatch:
+    """All seven table kinds in one batch; SC/VALIDATE lanes mostly target
+    their live link, half the CAS comparands match the live value."""
+    kind = rng.integers(0, 7, p).astype(np.int32)
+    slot = rng.integers(0, n, p).astype(np.int32)
+    linked = np.asarray(ref_ctx.linked)
+    lslot = np.asarray(ref_ctx.slot)
+    for i in range(p):
+        if kind[i] in (atomics.SC, atomics.VALIDATE) and linked[i] \
+                and rng.random() < 0.7:
+            slot[i] = lslot[i]
+    expected = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    use_cur = rng.random(p) < 0.5
+    expected = np.where(use_cur[:, None], np.asarray(current)[slot], expected)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    return atomics.make_ops(kind, slot, expected, desired, k=k)
+
+
+def hash_batch(rng: np.random.Generator, *, p: int, key_space: int,
+               vw: int = 1) -> engine.OpBatch:
+    """Random FIND/INSERT/DELETE batch over a bounded key space."""
+    kind = rng.integers(atomics.FIND, atomics.DELETE + 1, p).astype(np.int32)
+    keys = rng.integers(0, key_space, p).astype(np.uint32)
+    vals = rng.integers(0, 2 ** 32, (p, vw), dtype=np.uint32)
+    return ch.make_hash_ops(kind, keys, vals, vw=vw)

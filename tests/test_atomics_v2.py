@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from oracle import TableOracle, mixed_batch
 from repro import atomics
 from repro.core import cachehash as ch
 from repro.sync import llsc
@@ -22,25 +23,10 @@ def _np_ctx(ctx):
     return atomics.LinkCtx(*[np.asarray(x) for x in ctx])
 
 
-def _mixed_batch(rng, ref_ctx, *, p, n, k, current):
-    """All seven table kinds in one batch; SC/VALIDATE lanes mostly target
-    their link, half the CAS comparands match the live value."""
-    kind = rng.integers(0, 7, p).astype(np.int32)
-    slot = rng.integers(0, n, p).astype(np.int32)
-    for i in range(p):
-        if kind[i] in (atomics.SC, atomics.VALIDATE) \
-                and ref_ctx.linked[i] and rng.random() < 0.7:
-            slot[i] = ref_ctx.slot[i]
-    expected = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
-    use_cur = rng.random(p) < 0.5
-    expected = np.where(use_cur[:, None], current[slot], expected)
-    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
-    return atomics.make_ops(kind, slot, expected, desired, k=k)
-
-
 # ---------------------------------------------------------------------------
-# Acceptance: mixed-kind batches match the sequential oracle on every
-# lock-free strategy, including cross-batch link state.
+# Acceptance: mixed-kind batches match the shared sequential oracle
+# (tests/oracle.py) on every lock-free strategy, including cross-batch
+# link state.
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("strategy", LOCKFREE)
@@ -55,31 +41,19 @@ def test_mixed_kind_batches_match_oracle(strategy):
         init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
         state = atomics.init(spec, init)
         ctx = atomics.init_ctx(p, k)
-        ref_ctx = _np_ctx(ctx)
-        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        oracle = TableOracle(n, k, p, initial=init)
         for step in range(5):
-            ops = _mixed_batch(rng, ref_ctx, p=p, n=n, k=k, current=ref_data)
-            ref_data, ref_ver, ref_ctx, ref_res = \
-                atomics.apply_ops_reference(ref_data, ref_ver, ref_ctx, ops)
+            ops = mixed_batch(rng, oracle.ctx, p=p, n=n, k=k,
+                              current=oracle.data)
             state, ctx, res, stats, traffic = atomics.apply(
                 spec, state, ops, ctx)
-            msg = f"{strategy} trial {trial} step {step}"
-            np.testing.assert_array_equal(
-                np.asarray(atomics.logical(spec, state)), ref_data,
-                err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(state.version), ref_ver,
-                                          err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(res.value),
-                                          ref_res.value, err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(res.success),
-                                          ref_res.success, err_msg=msg)
-            for name, a, b in zip(ctx._fields, ctx, ref_ctx):
-                np.testing.assert_array_equal(
-                    np.asarray(a), np.asarray(b),
-                    err_msg=f"{msg} ctx.{name}")
+            oracle.step_and_check(
+                ops, result=res, logical=atomics.logical(spec, state),
+                version=state.version, ctx=ctx,
+                msg=f"{strategy} trial {trial} step {step}")
         vals, ok = atomics.read(spec, state, np.arange(n))
         assert bool(np.asarray(ok).all())
-        np.testing.assert_array_equal(np.asarray(vals), ref_data)
+        np.testing.assert_array_equal(np.asarray(vals), oracle.data)
 
 
 @pytest.mark.parametrize("strategy", LOCKFREE)
@@ -162,11 +136,14 @@ def test_valcas_and_sc_interleave_same_cell():
     desired = np.asarray([[7] * k, [9] * k, [11] * k, [0] * k], np.uint32)
     ops = atomics.make_ops(kind, np.zeros(4, np.int32), expected, desired,
                            k=k)
-    ref = atomics.apply_ops_reference(
-        np.asarray(atomics.logical(spec, state)), np.asarray(state.version),
-        _np_ctx(ctx), ops)
+    oracle = TableOracle(n, k, 4,
+                         initial=np.asarray(atomics.logical(spec, state)))
+    oracle.version = np.asarray(state.version).copy()
+    oracle.ctx = _np_ctx(ctx)
     state, ctx, res, stats, _ = atomics.apply(spec, state, ops, ctx)
-    np.testing.assert_array_equal(np.asarray(res.success), ref[3].success)
+    oracle.step_and_check(ops, result=res,
+                          logical=atomics.logical(spec, state),
+                          version=state.version, ctx=ctx)
     succ = np.asarray(res.success)
     assert succ[0] and not succ[1] and succ[2] and succ[3]
     np.testing.assert_array_equal(
@@ -194,8 +171,8 @@ def test_table_state_jit_and_scan_round_trip():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     ops = [atomics.OpBatch(*[jnp.asarray(f) for f in
-                             _mixed_batch(rng, _np_ctx(atomics.init_ctx(p, k)),
-                                          p=p, n=n, k=k, current=init)])
+                             mixed_batch(rng, _np_ctx(atomics.init_ctx(p, k)),
+                                         p=p, n=n, k=k, current=init)])
            for _ in range(3)]
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ops)
 
@@ -206,15 +183,12 @@ def test_table_state_jit_and_scan_round_trip():
 
     (st_scan, _), _ = jax.lax.scan(step, (state_rt, atomics.init_ctx(p, k)),
                                    stacked)
-    # oracle over the same 3 batches
-    ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
-    ref_ctx = _np_ctx(atomics.init_ctx(p, k))
+    # shared oracle over the same 3 batches
+    oracle = TableOracle(n, k, p, initial=init)
     for op in ops:
-        ref_data, ref_ver, ref_ctx, _ = atomics.apply_ops_reference(
-            ref_data, ref_ver, ref_ctx, op)
-    np.testing.assert_array_equal(
-        np.asarray(atomics.logical(spec, st_scan)), ref_data)
-    np.testing.assert_array_equal(np.asarray(st_scan.version), ref_ver)
+        oracle.step(op)
+    oracle.check(logical=atomics.logical(spec, st_scan),
+                 version=st_scan.version)
 
 
 def test_hash_state_and_linkctx_are_pytrees():
@@ -259,17 +233,13 @@ def test_register_strategy_plain_clone_runs_oracle_suite():
         init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
         state = atomics.init(spec, init)
         ctx = atomics.init_ctx(p, k)
-        ref_ctx = _np_ctx(ctx)
-        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        oracle = TableOracle(n, k, p, initial=init)
         for _ in range(4):
-            ops = _mixed_batch(rng, ref_ctx, p=p, n=n, k=k, current=ref_data)
-            ref_data, ref_ver, ref_ctx, ref_res = \
-                atomics.apply_ops_reference(ref_data, ref_ver, ref_ctx, ops)
+            ops = mixed_batch(rng, oracle.ctx, p=p, n=n, k=k,
+                              current=oracle.data)
             state, ctx, res, _, _ = atomics.apply(spec, state, ops, ctx)
-            np.testing.assert_array_equal(
-                np.asarray(atomics.logical(spec, state)), ref_data)
-            np.testing.assert_array_equal(np.asarray(res.success),
-                                          ref_res.success)
+            oracle.step_and_check(
+                ops, result=res, logical=atomics.logical(spec, state))
         # the registry rejects silent double-registration
         with pytest.raises(ValueError, match="already registered"):
             atomics.register_strategy(PlainClone())
@@ -308,19 +278,13 @@ def test_registered_strategy_with_non_shadow_layout():
         init = rng.integers(0, 2 ** 31, (n, k), dtype=np.uint32)
         state = atomics.init(spec, init)
         ctx = atomics.init_ctx(p, k)
-        ref_ctx = _np_ctx(ctx)
-        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
+        oracle = TableOracle(n, k, p, initial=init)
         for _ in range(3):
-            ops = _mixed_batch(rng, ref_ctx, p=p, n=n, k=k, current=ref_data)
-            ref_data, ref_ver, ref_ctx, ref_res = \
-                atomics.apply_ops_reference(ref_data, ref_ver, ref_ctx, ops)
+            ops = mixed_batch(rng, oracle.ctx, p=p, n=n, k=k,
+                              current=oracle.data)
             state, ctx, res, _, _ = atomics.apply(spec, state, ops, ctx)
-            np.testing.assert_array_equal(
-                np.asarray(atomics.logical(spec, state)), ref_data)
-            np.testing.assert_array_equal(np.asarray(res.value),
-                                          ref_res.value)
-            np.testing.assert_array_equal(np.asarray(res.success),
-                                          ref_res.success)
+            oracle.step_and_check(
+                ops, result=res, logical=atomics.logical(spec, state))
     finally:
         atomics.unregister_strategy("obfuscated_v2test")
 

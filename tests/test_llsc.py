@@ -9,69 +9,58 @@ dependency) so they run identically under the real package or the shim.
 import numpy as np
 import pytest
 
+from oracle import TableOracle
 from repro import atomics
 from repro.core import bigatomic as ba
-from repro.core import semantics as sem
 from repro.sync import atomic_copy as ac
 from repro.sync import llsc
-from repro.sync.queue import DEQ, ENQ, QIDLE, BackoffPolicy, BigQueue
+from repro.sync.queue import DEQ, ENQ, BackoffPolicy, BigQueue
 
 LOCKFREE = ["seqlock", "indirect", "cached_wf", "cached_me"]
 
-
-def _ctx_np(ctx):
-    return llsc.LinkCtx(np.asarray(ctx.slot), np.asarray(ctx.version),
-                        np.asarray(ctx.value), np.asarray(ctx.linked))
+_SYNC_KINDS = np.asarray([atomics.LL, atomics.SC, atomics.VALIDATE,
+                          atomics.IDLE], np.int32)
 
 
 def _random_sync_batch(rng, ref_ctx, *, p, n, k):
-    """Mixed LL/SC/VL/IDLE batch; SC/VL lanes mostly target their link."""
-    kind = rng.integers(0, 4, p).astype(np.int32)
+    """Mixed LL/SC/VALIDATE/IDLE batch; SC/VALIDATE lanes mostly target
+    their link (unified kinds)."""
+    kind = _SYNC_KINDS[rng.integers(0, 4, p)]
     slot = rng.integers(0, n, p).astype(np.int32)
+    linked = np.asarray(ref_ctx.linked)
+    lslot = np.asarray(ref_ctx.slot)
     for i in range(p):
-        if kind[i] in (llsc.SC, llsc.VL) and ref_ctx.linked[i] \
+        if kind[i] in (atomics.SC, atomics.VALIDATE) and linked[i] \
                 and rng.random() < 0.7:
-            slot[i] = ref_ctx.slot[i]
+            slot[i] = lslot[i]
     desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
-    return llsc.make_sync_batch(kind, slot, desired, k=k)
+    return atomics.make_ops(kind, slot, desired=desired, k=k)
 
 
 # ---------------------------------------------------------------------------
-# LL/SC vs sequential oracle
+# LL/SC vs the shared sequential oracle (tests/oracle.py)
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("strategy", LOCKFREE)
-def test_apply_sync_matches_oracle(strategy):
+def test_sync_batches_match_oracle(strategy):
     rng = np.random.default_rng(hash(strategy) % 2 ** 31)
     for trial in range(4):
         n = int(rng.integers(2, 16))
         k = int(rng.integers(1, 6))
         p = int(rng.integers(1, 24))
         init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
-        state = ba.init(n, k, strategy, p_max=64, initial=init)
-        ref_data, ref_ver = init.copy(), np.zeros(n, np.uint32)
-        ctx = llsc.init_ctx(p, k)
-        ref_ctx = _ctx_np(ctx)
+        spec = atomics.AtomicSpec(n, k, strategy, p_max=64)
+        state = atomics.init(spec, init)
+        ctx = atomics.init_ctx(p, k)
+        oracle = TableOracle(n, k, p, initial=init)
         for step in range(5):
-            ops = _random_sync_batch(rng, ref_ctx, p=p, n=n, k=k)
-            ref_data, ref_ver, ref_ctx, ref_res = llsc.apply_sync_reference(
-                ref_data, ref_ver, ref_ctx, ops)
-            state, ctx, res, stats, traffic = llsc.apply_sync(
-                state, ctx, ops, strategy=strategy, k=k)
-            msg = f"{strategy} trial {trial} step {step}"
-            np.testing.assert_array_equal(
-                np.asarray(ba.logical(state, strategy)), ref_data,
-                err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(state.version), ref_ver,
-                                          err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(res.value),
-                                          ref_res.value, err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(res.success),
-                                          ref_res.success, err_msg=msg)
-            for a, b in zip(ctx[:3], ref_ctx[:3]):
-                np.testing.assert_array_equal(np.asarray(a), b, err_msg=msg)
-            np.testing.assert_array_equal(np.asarray(ctx.linked),
-                                          ref_ctx.linked, err_msg=msg)
+            ops = _random_sync_batch(rng, oracle.ctx, p=p, n=n, k=k)
+            state, ctx, res, stats, traffic = atomics.apply(
+                spec, state, ops, ctx)
+            oracle.step_and_check(
+                ops, result=res, logical=atomics.logical(spec, state),
+                version=state.version, ctx=ctx,
+                msg=f"{strategy} trial {trial} step {step}")
 
 
 @pytest.mark.parametrize("strategy", LOCKFREE)
@@ -85,11 +74,11 @@ def test_sc_defeats_aba(strategy):
     ctx, vals = llsc.ll(state, ctx, [2], strategy=strategy, k=k)
     original = np.asarray(vals[0])
     # store A -> B -> A through the ordinary update path
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=16)
     b = (original + 1).astype(np.uint32)
     for payload in (b, original):
-        ops = sem.make_op_batch(np.asarray([sem.STORE]), np.asarray([2]),
-                                desired=payload[None], k=k)
-        state, _, _, _ = ba.apply_ops(state, ops, strategy=strategy, k=k)
+        state, _, _, _, _ = atomics.apply(
+            spec, state, atomics.stores([2], payload[None], k=k))
     np.testing.assert_array_equal(
         np.asarray(ba.logical(state, strategy))[2], original)  # bytes match
     assert not bool(llsc.validate(state, ctx, [2], strategy=strategy, k=k)[0])
@@ -112,20 +101,20 @@ def test_lapped_linker_fails(strategy):
                      k=k)
     # lanes 1..p-1 commit in turn (each re-linked just before its SC, so
     # each succeeds); lane 0 sleeps on its original link the whole time
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=64)
     for lane in range(1, p):
-        kind = np.full(p, llsc.IDLE, np.int32)
-        kind[lane] = llsc.SC
+        kind = np.full(p, atomics.IDLE, np.int32)
+        kind[lane] = atomics.SC
         desired = np.full((p, k), lane, np.uint32)
-        ops = llsc.make_sync_batch(kind, np.zeros(p, np.int32), desired, k=k)
-        state, ctx, res, _, _ = llsc.apply_sync(state, ctx, ops,
-                                                strategy=strategy, k=k)
+        ops = atomics.make_ops(kind, np.zeros(p, np.int32), desired=desired,
+                               k=k)
+        state, ctx, res, _, _ = atomics.apply(spec, state, ops, ctx)
         assert bool(np.asarray(res.success)[lane])
         if lane + 1 < p:
-            kind = np.full(p, llsc.IDLE, np.int32)
-            kind[lane + 1] = llsc.LL
-            ops = llsc.make_sync_batch(kind, np.zeros(p, np.int32), k=k)
-            state, ctx, _, _, _ = llsc.apply_sync(state, ctx, ops,
-                                                  strategy=strategy, k=k)
+            kind = np.full(p, atomics.IDLE, np.int32)
+            kind[lane + 1] = atomics.LL
+            ops = atomics.make_ops(kind, np.zeros(p, np.int32), k=k)
+            state, ctx, _, _, _ = atomics.apply(spec, state, ops, ctx)
     assert not bool(
         llsc.validate(state, ctx, [0], strategy=strategy, k=k)[0])
     state, ctx, succ = llsc.sc(state, ctx, [0], np.zeros((1, k), np.uint32),
@@ -391,10 +380,11 @@ def test_llsc_commit_kernel_agrees_with_apply_sync():
     desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
 
     # jnp path
-    state2, _, res, _, _ = llsc.apply_sync(
-        state, ctx, llsc.make_sync_batch(
-            np.full(p, llsc.SC, np.int32), slots, desired, k=k),
-        strategy="seqlock", k=k)
+    spec = atomics.AtomicSpec(n, k, "seqlock", p_max=32)
+    state2, _, res, _, _ = atomics.apply(
+        spec, state, atomics.make_ops(
+            np.full(p, atomics.SC, np.int32), slots, desired=desired, k=k),
+        ctx)
 
     # kernel path: feed ALL lanes; stale/duplicate losers carry link_ver
     # equal to the winner's so validation inside the kernel must arbitrate.
