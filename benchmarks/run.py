@@ -18,7 +18,7 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_atomics, bench_cachehash, bench_distributed,
-                        bench_llsc, bench_memory, bench_torn)
+                        bench_llsc, bench_memory, bench_torn, bench_txn)
 
 
 def main():
@@ -35,6 +35,8 @@ def main():
         ("llsc + sync queue (LL/SC application)", bench_llsc.main),
         ("memory (Table 1)", bench_memory.main),
         ("distributed table (beyond paper)", bench_distributed.main),
+        ("txn: MCAS + transactional map (tuples/version-list apps)",
+         bench_txn.main),
     ]
     failures = []
     for name, fn in benches:

@@ -47,7 +47,7 @@ from repro.core.registry import (  # noqa: F401
     unregister_strategy,
 )
 from repro.core.specs import (  # noqa: F401
-    DEFAULT_STRATEGY, AtomicSpec, HashSpec, QueueSpec,
+    DEFAULT_STRATEGY, AtomicSpec, HashSpec, QueueSpec, VersionSpec,
 )
 from repro.core import strategies as _builtin_strategies  # noqa: F401
 # The mesh-sharded execution layer (DESIGN.md §6): same specs, same
@@ -55,6 +55,14 @@ from repro.core import strategies as _builtin_strategies  # noqa: F401
 # DistSpec(spec, axis, n_shards, p_local), state, ops, ctx)`.
 from repro.core import distributed as dist  # noqa: F401
 from repro.core.distributed import DistSpec, DistState  # noqa: F401
+# The transaction layer (DESIGN.md §7): k-word MCAS (`atomics.mcas`,
+# checked txn construction via `atomics.make_txns`), bounded version lists
+# and the optimistic transactional map, all registry-dispatched; the
+# mesh-sharded MCAS is `atomics.dist.mcas` (two-round prepare/commit).
+from repro import txn  # noqa: F401
+from repro.txn.mcas import (  # noqa: F401
+    McasResult, TxnBatch, make_txns, mcas,
+)
 
 
 def memory_bytes(spec: AtomicSpec) -> int:

@@ -412,6 +412,215 @@ def apply(mesh: Mesh, dspec: DistSpec, dstate: DistState, ops: engine.OpBatch,
 
 
 # ---------------------------------------------------------------------------
+# Cross-shard MCAS: the two-round prepare/commit collective (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _build_mcas_apply(mesh: Mesh, dspec: DistSpec, t_local: int, w: int):
+    """One prepare/commit round pair for up to `t_local` transactions of
+    width `w` per source device, as a single shard_mapped program:
+
+      prepare — every active txn lane routes (cell, expected, desired,
+                global txn id) to its owner shard; the owner LLs the cell
+                through the local engine, checks expected, and VOTES: a
+                lane's vote is yes iff it matched AND its txn id is the
+                lowest matching id claiming that cell (the per-owner vote —
+                arbitration needs no global view because ids are global).
+                Match + vote + the witnessed value route back.
+      decide  — the SOURCE holds all of its txn's lanes, so the commit
+                mask is local: commit iff every lane matched and voted.
+      commit  — the commit bit routes out over the SAME lane packing (so
+                it lands on the owner's phase-A link ctx), the owner SCs
+                every committing lane (one-round fast path: links predate
+                the batch, voted lanes are cell-disjoint across txns), and
+                SC success routes back.
+
+    Nothing writes during prepare, so a transaction's reads — even spanning
+    shards — form a consistent global snapshot; voted lanes are pairwise
+    cell-disjoint, so commit is all-or-nothing by construction.
+    """
+    s, axis = dspec.n_shards, dspec.axis
+    lsp: AtomicSpec = dspec.local_spec()
+    k = lsp.k
+    p_lane = t_local * w
+    cap = p_lane                 # a source owns p_lane lanes: never overflows
+
+    def local_fn(state, slot, expected, desired, active):
+        st = _unstack(state)
+        impl = registry.get_strategy(lsp.strategy)
+        my = lax.axis_index(axis).astype(jnp.int32)
+        gid_t = my * t_local + jnp.arange(t_local, dtype=jnp.int32)
+        gid = jnp.repeat(gid_t, w)
+        f_slot = slot.reshape(p_lane)
+        f_exp = expected.reshape(p_lane, k)
+        f_des = desired.reshape(p_lane, k)
+        lane_used = (f_slot >= 0) & (f_slot < dspec.n_global)
+        live = active.reshape(t_local)[jnp.arange(p_lane) // w] & lane_used
+
+        owner, lslot = _owner_and_local(dspec, jnp.where(lane_used,
+                                                         f_slot, 0))
+        owner = jnp.where(live, owner, s)
+        rank, fits = _dst_ranks(owner, cap, s, p_lane)
+
+        # -- prepare: route (cell, expected, desired, gid) to the owner ----
+        dst = jnp.where(fits, owner * cap + rank, s * cap)
+        pack = _packer(dst, s * cap)
+        go = _a2a(axis, s, cap)
+        r_live = go(pack(fits, False)).reshape(s * cap)
+        r_slot = go(pack(lslot, 0)).reshape(s * cap)
+        r_exp = go(pack(f_exp, 0)).reshape(s * cap, k)
+        r_des = go(pack(f_des, 0)).reshape(s * cap, k)
+        r_gid = go(pack(gid, s * t_local)).reshape(s * cap)
+
+        ops1 = engine.OpBatch(
+            jnp.where(r_live, engine.LL, engine.IDLE), r_slot,
+            jnp.zeros((s * cap, k), WORD_DTYPE),
+            jnp.zeros((s * cap, k), WORD_DTYPE))
+        d1, v1, octx, res1, st1 = engine.linearize(
+            impl.engine_view(st), st.version,
+            engine.init_ctx(s * cap, k), ops1)
+        st = impl.commit(st, d1, v1, st1.n_updates, s * cap)
+        vals = res1.value
+        match = r_live & jnp.all(vals == r_exp, axis=1)
+        # per-owner vote: lowest MATCHING txn id claiming each local cell
+        n_loc = dspec.n_local
+        claim = jnp.where(match, r_slot, n_loc)
+        cgid = jnp.where(match, r_gid, s * t_local)
+        cell_min = jnp.full((n_loc + 1,), s * t_local, jnp.int32)
+        cell_min = cell_min.at[claim].min(cgid, mode="drop")
+        vote = match & (cell_min[jnp.minimum(claim, n_loc)] == r_gid)
+
+        # -- route match/vote/witness back to the source -------------------
+        b_match = go(match).reshape(s, cap)
+        b_vote = go(vote).reshape(s, cap)
+        b_val = go(vals).reshape(s, cap, k)
+        safe_owner = jnp.clip(owner, 0, s - 1)
+        safe_pos = jnp.maximum(jnp.where(fits, rank, -1), 0)
+        l_match = jnp.where(fits, b_match[safe_owner, safe_pos], False)
+        l_vote = jnp.where(fits, b_vote[safe_owner, safe_pos], False)
+        l_wit = jnp.where(fits[:, None], b_val[safe_owner, safe_pos], 0)
+
+        def per_txn_all(flag):
+            return jnp.all((flag | ~lane_used).reshape(t_local, w), axis=1)
+
+        act_t = active.reshape(t_local)
+        match_t = act_t & per_txn_all(l_match)
+        commit_t = match_t & per_txn_all(l_vote)
+
+        # -- commit: the commit bit rides the SAME packing onto the same
+        #    owner lanes (phase-A links), then SC success rides back -------
+        commit_lane = commit_t[jnp.arange(p_lane) // w] & lane_used
+        r_commit = go(pack(commit_lane & fits, False)).reshape(s * cap)
+        ops2 = engine.OpBatch(
+            jnp.where(r_commit, engine.SC, engine.IDLE), r_slot,
+            jnp.zeros((s * cap, k), WORD_DTYPE), r_des)
+        d2, v2, _octx2, res2, st2 = engine.linearize(
+            impl.engine_view(st), st.version, octx, ops2)
+        st = impl.commit(st, d2, v2, st2.n_updates, s * cap)
+        b_sc = go(res2.success).reshape(s, cap)
+        l_sc = jnp.where(fits, b_sc[safe_owner, safe_pos], False)
+        success_t = commit_t & per_txn_all(l_sc)
+        return (_restack(st), match_t, success_t,
+                l_wit.reshape(t_local, w, k))
+
+    spec = P(axis)
+    mapped = shard_map(local_fn, mesh=mesh, in_specs=(spec,) * 5,
+                       out_specs=(spec,) * 4, check_rep=False)
+    return jax.jit(mapped)
+
+
+def mcas(mesh: Mesh, dspec: DistSpec, dstate: DistState, txns, *,
+         policy=None, max_rounds: int | None = None):
+    """Cross-shard k-word MCAS: transactions whose lanes span shards commit
+    all-or-nothing through the two-round prepare/commit collective.
+
+    `txns` is a `repro.txn.mcas.TxnBatch` of T transactions issued
+    source-major (txn i from shard i // ceil(T / n_shards); T is IDLE-padded
+    to a shard multiple).  Retries of arbitration losers run host-side under
+    the queue's Dice-style `BackoffPolicy` (default none).  Each round moves
+    `n_shards * t_local * w * (3k + 7)` words per device through four
+    all_to_alls (`mcas_collective_words` is the exact model).
+
+    Returns (dstate', McasResult) — same result contract, claimed
+    linearization and `TxnOracle` compatibility as the single-device
+    `repro.txn.mcas.mcas` (`txn.mcas.linearization_order(result)`).
+    """
+    from repro.sync.queue import BackoffPolicy
+    from repro.txn import mcas as txn_mcas
+    if dspec.is_hash:
+        raise TypeError("hash DistSpec: MCAS runs on tables")
+    policy = policy or BackoffPolicy("none")
+    t, w, k = txns.t, txns.w, dspec.inner.k
+    if txns.expected.shape[2] != k:
+        raise ValueError(f"txn word width {txns.expected.shape[2]} != "
+                         f"spec.k {k}")
+    if max_rounds is None:
+        max_rounds = txn_mcas.max_rounds_bound(t, policy)
+    s = dspec.n_shards
+    t_local = -(-t // s)
+    t_pad = t_local * s
+    pad = t_pad - t
+    slot = jnp.concatenate(
+        [jnp.asarray(txns.slot, jnp.int32),
+         jnp.full((pad, w), -1, jnp.int32)]) if pad else \
+        jnp.asarray(txns.slot, jnp.int32)
+    expected = jnp.concatenate(
+        [jnp.asarray(txns.expected, WORD_DTYPE),
+         jnp.zeros((pad, w, k), WORD_DTYPE)]) if pad else \
+        jnp.asarray(txns.expected, WORD_DTYPE)
+    desired = jnp.concatenate(
+        [jnp.asarray(txns.desired, WORD_DTYPE),
+         jnp.zeros((pad, w, k), WORD_DTYPE)]) if pad else \
+        jnp.asarray(txns.desired, WORD_DTYPE)
+    fn = _build_mcas_apply(mesh, dspec, t_local, w)
+
+    pending = np.concatenate([np.ones(t, bool), np.zeros(pad, bool)])
+    success = np.zeros(t_pad, bool)
+    witness = np.zeros((t_pad, w, k), np.uint32)
+    round_res = np.zeros(t_pad, np.int32)
+    attempts = np.zeros(t_pad, np.int32)
+    delay = np.zeros(t_pad, np.int32)
+    rnd = 0
+    while pending.any():
+        rnd += 1
+        if rnd > max_rounds:
+            raise RuntimeError(f"mcas round bound exceeded ({max_rounds}); "
+                               f"pending={np.nonzero(pending)[0].tolist()}")
+        active = pending & (delay <= 0)
+        if not active.any():
+            delay = np.maximum(delay - 1, 0)
+            continue
+        local, match_t, success_t, wit = fn(
+            dstate.local, slot, expected, desired, jnp.asarray(active))
+        dstate = DistState(local)
+        match_t = np.asarray(match_t)
+        success_t = np.asarray(success_t)
+        failed = active & ~match_t
+        committed = active & success_t
+        resolved = failed | committed
+        witness = np.where(resolved[:, None, None], np.asarray(wit), witness)
+        success |= committed
+        round_res = np.where(resolved, rnd, round_res)
+        pending &= ~resolved
+        lost = active & ~resolved
+        attempts += lost.astype(np.int32)
+        for i in np.nonzero(lost)[0]:
+            delay[i] = policy.delay(int(attempts[i]))
+        delay[~lost] = np.maximum(delay[~lost] - 1, 0)
+    result = txn_mcas.McasResult(
+        success[:t], jnp.asarray(witness[:t]), round_res[:t], attempts[:t],
+        np.int32(rnd))
+    return dstate, result
+
+
+def mcas_collective_words(dspec: DistSpec, t_local: int, w: int) -> int:
+    """Words per device per prepare/commit round pair (4 all_to_alls):
+    out (slot, expected[k], desired[k], gid, live) + back (match, vote,
+    witness[k]) + commit out/back (2)."""
+    return dspec.n_shards * t_local * w * (3 * dspec.inner.k + 7)
+
+
+# ---------------------------------------------------------------------------
 # Sharded CacheHash: FIND/INSERT/DELETE route by key owner.
 # ---------------------------------------------------------------------------
 

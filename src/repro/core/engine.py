@@ -448,6 +448,47 @@ def linearize(data: jax.Array, version: jax.Array, ctx: LinkCtx,
 
 
 # ---------------------------------------------------------------------------
+# Txn-group lane metadata: conflict arbitration for multi-lane transactions.
+# ---------------------------------------------------------------------------
+
+def arbitrate_groups(slot, group, eligible, *, n: int, n_groups: int):
+    """The linearizer's lane-order rule lifted to whole lane GROUPS.
+
+    A transaction (`repro.txn.mcas`) is a group of lanes that must commit
+    all-or-nothing.  Within one batch the engine arbitrates single lanes by
+    lane order (first eligible SC per cell wins); for groups the same rule
+    becomes: the lowest-id eligible group claiming a cell wins that cell,
+    and a group is a WINNER iff it wins every cell it claims.  Winners are
+    therefore pairwise cell-disjoint, so a pure-SC commit batch of all their
+    lanes resolves on the engine's one-round fast path with every SC
+    succeeding — no descriptors, no helping.
+
+    The lowest-id eligible group always wins all its cells, so arbitration
+    guarantees progress (>= 1 group resolves per round).
+
+    slot:     int32[p]  claimed cell per lane (out-of-range = unused lane)
+    group:    int32[p]  owning group id per lane, in [0, n_groups)
+    eligible: bool[p]   lane belongs to a group contending this round
+
+    Returns bool[n_groups]: the winner mask.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    group = jnp.asarray(group, jnp.int32)
+    in_range = (slot >= 0) & (slot < n)
+    live = eligible & in_range
+    claim = jnp.where(live, slot, n)
+    gid = jnp.where(live, group, n_groups)
+    # Lowest eligible group id per claimed cell (scatter-min).
+    cell_min = jnp.full((n + 1,), n_groups, jnp.int32)
+    cell_min = cell_min.at[claim].min(gid, mode="drop")
+    lane_wins = cell_min[jnp.minimum(claim, n)] == group
+    # A group wins iff ALL its live lanes win (scatter-AND via min).
+    grp = jnp.ones((n_groups + 1,), jnp.int32)
+    grp = grp.at[gid].min(lane_wins.astype(jnp.int32), mode="drop")
+    return grp[:n_groups] > 0
+
+
+# ---------------------------------------------------------------------------
 # The single public entry point: apply(spec, state, ops [, ctx]).
 # ---------------------------------------------------------------------------
 

@@ -1,27 +1,35 @@
 """Versioned snapshot store — the paper's multiversioning application
 (§2: "allows the first version, most commonly accessed, to be stored inline
-and updated atomically"), adapted to the thing a training framework actually
+and updated atomically"), applied to the thing a training framework actually
 multi-versions: the train state.
 
-The writer (optimizer loop) `publish()`es each new state into a ring of S
-slots using the Cached-ME protocol:
+Since the txn subsystem landed (DESIGN.md §7) the store's version/step/head
+bookkeeping is no longer hand-rolled: it rides `repro.txn.versionlist` — a
+per-slot bounded version chain whose head cell is a big atomic on the
+unified engine.  The payload ring (`slots`, a pytree of stacked train
+states) stays as before — float tensors don't fit uint32 word cells — but
+every piece of METADATA a reader validates against lives in the version
+list's head table:
 
-    1. bump the slot's version to ODD  (slot locked / mid-copy),
-    2. copy the pytree into the slot,
-    3. bump to EVEN,
-    4. atomically swing `head` to the slot  (the linearization point).
+  * the per-ring-slot `version` array IS the head table's big-atomic cell
+    version (even = consistent; a publish is one engine STORE, +2), and
+  * the per-slot `step` is the head cell's inline value word.
 
-Async readers (`snapshot()`) — checkpointer, evaluator, elastic joiners —
-read `head`, then the slot, then validate the slot's version is even and
-unchanged.  A reader never blocks the writer and never observes a torn
-state: if the writer lapped it mid-read (possible only after S further
-publishes), validation fails and the reader retries on the new head.  This
-is exactly the paper's fast-path invariant "validated pointer => cache equals
-backup", with the ring playing the role of the backup pool and `head` the
-role of the backup pointer.
+The head table is pinned to the `seqlock` layout — the protocol this module
+hand-rolled before the rewrite (data + even/odd version IS a seqlock), so
+`begin_publish` (freeze the writer mid-copy) remains the same odd-version
+torn state, now expressed against the layout's own fields.
 
-Everything is functional (pytrees in, pytrees out) so it works under jit and
-across process boundaries (the checkpoint package serializes snapshots).
+The reader protocol is unchanged: `snapshot()` reads head, then the slot,
+then `validate()` confirms the version is even and unchanged — the paper's
+fast-path invariant "validated pointer => cache equals backup" with the
+ring as the backup pool.  New since the rewrite: `step_at(store, t)` — a
+timestamped read of which training step was live at publish-time `t`,
+straight off the bounded version chain.
+
+Everything is functional (pytrees in, pytrees out) so it works under jit
+and across process boundaries (the checkpoint package serializes
+snapshots).
 """
 
 from __future__ import annotations
@@ -30,13 +38,40 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.specs import VersionSpec
+from repro.txn import versionlist as vl
+
+# The head table stores one word of payload per ring slot (the training
+# step); depth 2 = inline head + one pooled predecessor per slot, enough to
+# answer step_at() across the writer's most recent lap.
+_K = 1
+_DEPTH = 2
+_STRATEGY = "seqlock"          # the layout this module used to hand-roll
+
+
+def _vspec(n_slots: int) -> VersionSpec:
+    return VersionSpec(n=n_slots, k=_K, depth=_DEPTH, strategy=_STRATEGY,
+                       p_max=64)
 
 
 class VersionedStore(NamedTuple):
     slots: Any                # pytree, each leaf stacked to [S, ...]
-    version: jax.Array        # uint32[S], even = consistent
-    step: jax.Array           # int32[S], training step held by each slot
+    vstate: vl.VersionState   # head table: [step] per slot + chain metadata
     head: jax.Array           # int32[], freshest consistent slot
+
+    # -- the v1 read surface, derived from the version-list state ---------
+
+    @property
+    def version(self) -> jax.Array:
+        """uint32[S]; even = consistent (the head table's cell versions)."""
+        return self.vstate.table.version
+
+    @property
+    def step(self) -> jax.Array:
+        """int32[S], training step held by each slot (head cell word 0)."""
+        return self.vstate.table.data[:, 0].astype(jnp.int32)
 
 
 def init_store(state, n_slots: int = 2) -> VersionedStore:
@@ -45,8 +80,7 @@ def init_store(state, n_slots: int = 2) -> VersionedStore:
         lambda x: jnp.broadcast_to(x[None], (n_slots,) + x.shape), state)
     return VersionedStore(
         slots=slots,
-        version=jnp.zeros((n_slots,), jnp.uint32),
-        step=jnp.zeros((n_slots,), jnp.int32),
+        vstate=vl.init(_vspec(n_slots), np.zeros((n_slots, _K), np.uint32)),
         head=jnp.int32(0),
     )
 
@@ -54,19 +88,21 @@ def init_store(state, n_slots: int = 2) -> VersionedStore:
 @jax.jit
 def publish(store: VersionedStore, state, step) -> VersionedStore:
     """Writer: install `state` as the freshest snapshot.  O(bytes) copy, no
-    reader can block it (lock-free by construction: readers only validate)."""
+    reader can block it (lock-free by construction: readers only validate).
+
+    The payload copy lands in the ring; the metadata update — step word +
+    version bump (+2, stays even) — is ONE engine STORE on the slot's
+    big-atomic head cell; swinging `head` is the linearization point."""
     n = store.version.shape[0]
     slot = (store.head + 1) % n
-    # 1. lock (odd) — readers of THIS slot start failing validation
-    ver = store.version.at[slot].add(jnp.uint32(1))
-    # 2. copy
     slots = jax.tree.map(lambda buf, x: buf.at[slot].set(x),
                          store.slots, state)
-    # 3. unlock (even, advanced)
-    ver = ver.at[slot].add(jnp.uint32(1))
-    stepv = store.step.at[slot].set(jnp.asarray(step, jnp.int32))
-    # 4. linearization point: swing head
-    return VersionedStore(slots, ver, stepv, slot)
+    spec = _vspec(n)
+    ts = (store.vstate.count.sum() + 1).astype(jnp.uint32)  # publish counter
+    vstate = vl.publish(spec, store.vstate, slot[None],
+                        jnp.asarray(step, jnp.uint32).reshape(1, _K),
+                        ts[None])
+    return VersionedStore(slots, vstate, slot)
 
 
 class Snapshot(NamedTuple):
@@ -105,18 +141,32 @@ def snapshot_with_validation(store: VersionedStore, *, max_retries: int = 3):
                        "(writer lapped the reader repeatedly)")
 
 
+def step_at(store: VersionedStore, publish_ts):
+    """Timestamped metadata read off the version chains: the training step
+    each ring slot held at global publish time `publish_ts` (uint32[S] step,
+    bool[S] ok; ok=False where that history is evicted or torn)."""
+    n = store.version.shape[0]
+    slots = jnp.arange(n, dtype=jnp.int32)
+    ts = jnp.full((n,), publish_ts, jnp.uint32)
+    vals, _fts, ok = vl.snapshot_read(_vspec(n), store.vstate, slots, ts)
+    return vals[:, 0], ok
+
+
 # ---------------------------------------------------------------------------
 # Torn-state simulation (the oversubscription analogue, for tests/benchmarks)
 # ---------------------------------------------------------------------------
 
 def begin_publish(store: VersionedStore, state) -> VersionedStore:
-    """Freeze the writer mid-copy (steps 1-2 done, 3-4 pending): the target
-    slot is odd/torn, head still points at the previous slot.  Readers using
-    the protocol keep returning the OLD consistent snapshot; a naive reader
-    of the torn slot returns garbage (negative control in tests)."""
+    """Freeze the writer mid-copy (payload half-written, head-cell version
+    bumped ODD, `head` not yet swung): readers using the protocol keep
+    returning the OLD consistent snapshot; a naive reader of the torn slot
+    returns garbage (negative control in tests).  This is the version
+    list's head table playing its seqlock role: odd = locked."""
     n = store.version.shape[0]
     slot = (store.head + 1) % n
-    ver = store.version.at[slot].add(jnp.uint32(1))      # odd = locked
+    table = store.vstate.table
+    table = table._replace(
+        version=table.version.at[slot].add(jnp.uint32(1)))   # odd = locked
 
     def half_copy(buf, x):
         flat = x.reshape(-1)
@@ -126,4 +176,5 @@ def begin_publish(store: VersionedStore, state) -> VersionedStore:
         return buf.at[slot].set(torn)
 
     slots = jax.tree.map(half_copy, store.slots, state)
-    return store._replace(slots=slots, version=ver)
+    return store._replace(slots=slots,
+                          vstate=store.vstate._replace(table=table))

@@ -31,6 +31,14 @@ run on sharded tables through `core.distributed` — page-table finds route
 by key owner inside the SAME fused step, so each decode step stays one
 compiled program, executed per shard (`dispatch_count` still counts 1).
 
+Transactional bookkeeping (DESIGN.md §7, default on): each step's
+multi-cell page-table mutations — the deferred retirement deletes of
+sequences that finished last step plus this step's page-boundary appends —
+commit as ONE all-or-nothing transaction (`repro.txn.map` via
+`paged_kv.txn_bookkeep`), locally or through the key-owner-routed sharded
+collective, instead of separate alloc/free hash batches; the fused decode
+dispatch stays exactly 1 per step (asserted in tests/test_serving.py).
+
 Scope: archs whose layers are all full attention (dense / moe / vlm
 backbones).  SWA / SSM / hybrid archs serve through the dense slot-state path
 (`make_serve_step`) since their state is O(1) or ring-buffered per sequence —
@@ -77,7 +85,7 @@ class ServingEngine:
                  max_pages_per_seq: int = 32, strategy: str | None = None,
                  max_queue: int = 256, seed: int = 0, fused: bool = True,
                  spec: pk.PagedSpec | None = None, mesh=None,
-                 shard_axis: str = "shard"):
+                 shard_axis: str = "shard", txn_bookkeeping: bool = True):
         assert all(k == "attn" for k in cfg.layer_kinds) and \
             cfg.causal and cfg.window == 0, \
             "paged engine serves causal full-attention archs; use " \
@@ -129,6 +137,13 @@ class ServingEngine:
         self.dispatch_count = 0        # decode-path host->device dispatches
         self._decode_fn = jax.jit(self._decode_batch)
         self._fused_fn = jax.jit(self._fused_step) if fused else None
+        # Transactional bookkeeping (DESIGN.md §7): each step's multi-cell
+        # page-table mutations — retirement deletes + boundary-crossing
+        # appends — commit as ONE all-or-nothing transaction instead of
+        # separate alloc/free hash batches.  Retire deletes defer to the
+        # next step's transaction; `_pending_retire` holds them meanwhile.
+        self.txn_bookkeeping = txn_bookkeeping
+        self._pending_retire: list[tuple[int, int]] = []
 
     # -- public API ---------------------------------------------------------
 
@@ -145,10 +160,23 @@ class ServingEngine:
     def step(self):
         """Admit waiting requests into free slots, then decode one token for
         every active slot.  Returns the number of live slots."""
+        if self._pending_retire and \
+                min(len(self.admit_q), len(self.slot_q)) > 0:
+            # Admission will prefill this step: commit the deferred
+            # retirement deletes FIRST so their pages are free for the
+            # prefill allocs — page availability matches the legacy
+            # free-on-finish path exactly.
+            self.paged, _ = pk.txn_bookkeep(self.paged,
+                                            self._drain_retires(), [])
         self._admit()
         live = [i for i, s in enumerate(self.slots) if s.active]
         if live:
             self._decode(live)
+        elif self._pending_retire:
+            # No decode this step: flush the deferred retirement deletes as
+            # their own transaction so pages recycle promptly.
+            self.paged, _ = pk.txn_bookkeep(self.paged,
+                                            self._drain_retires(), [])
         return len(live)
 
     def pending(self) -> int:
@@ -278,13 +306,22 @@ class ServingEngine:
         pstate = pk.append_token_fn(spec, pstate, phys_page, pos % P, nk, nv)
         return pstate, logits
 
+    def _drain_retires(self):
+        retires, self._pending_retire = self._pending_retire, []
+        return retires
+
     def _decode(self, live):
         P = self.paged.page_size
         seq_ids = [self.slots[i].seq_id for i in live]
         pos = np.asarray([self.slots[i].pos for i in live], np.int32)
         # page-boundary crossings allocate through the big-atomic table
         need = [(s, p // P) for s, p in zip(seq_ids, pos) if p % P == 0]
-        if need:
+        if self.txn_bookkeeping:
+            # ONE transaction: deferred retirement deletes + this step's
+            # page-table appends, all-or-nothing (DESIGN.md §7).
+            self.paged, _ = pk.txn_bookkeep(self.paged,
+                                            self._drain_retires(), need)
+        elif need:
             self.paged, _ = pk.alloc_pages(
                 self.paged, [n[0] for n in need], [n[1] for n in need])
         tokens = np.asarray(
@@ -325,7 +362,12 @@ class ServingEngine:
         req.done = True
         P = self.paged.page_size
         used = (slot.pos + P) // P          # pages incl. current partial
-        self.paged = pk.free_pages(self.paged, slot.seq_id, used)
+        if self.txn_bookkeeping:
+            # Page-table deletes join the next step's transaction; the
+            # decode slot recycles through its lock-free ring immediately.
+            self._pending_retire.append((slot.seq_id, used))
+        else:
+            self.paged = pk.free_pages(self.paged, slot.seq_id, used)
         self.slots[i] = _Slot()
         self.slot_q.enqueue_batch(np.asarray([i], np.uint32))
 

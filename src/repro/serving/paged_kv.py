@@ -248,6 +248,67 @@ def append_token_fn(spec: PagedSpec, pstate: PagedState, phys_page, offset,
 # Host-side page lifecycle (admission / retirement, big-atomic free ring)
 # ---------------------------------------------------------------------------
 
+def txn_bookkeep(paged: PagedKV, retires, allocs):
+    """One decode step's page-table bookkeeping as ONE transaction
+    (DESIGN.md §7): retirement deletes + page-boundary inserts commit
+    all-or-nothing through the transactional map (`repro.txn.map`), with
+    the retired mappings as the transaction's read/validation set.  On a
+    sharded page table the commit rides the key-owner-routed collective
+    (`transact_dist`), so cross-shard bookkeeping stays atomic.
+
+    retires: [(seq_id, n_pages_used)]; allocs: [(seq_id, page_no)].
+    Returns (paged, phys int32[len(allocs)]).  Freed physical pages recycle
+    onto the big-atomic ring BEFORE the alloc dequeues, so a same-step
+    retire+alloc never starves the pool."""
+    from repro.txn import map as txn_map
+    q_alloc = len(allocs)
+    ret_keys: list[int] = []
+    for seq_id, used in retires:
+        ret_keys += [int(page_key(seq_id, p)) for p in range(used)]
+    if not ret_keys and not q_alloc:
+        return paged, jnp.zeros((0,), jnp.int32)
+    # Pre-read the retired mappings (the transaction re-reads and validates
+    # the same keys) to recycle their physical pages.
+    if ret_keys:
+        table, res = _hash_apply(
+            paged.spec, paged.state.table,
+            jnp.full((len(ret_keys),), engine.FIND, jnp.int32),
+            jnp.asarray(ret_keys, jnp.uint32), mesh=paged.mesh)
+        paged.state = paged.state._replace(table=table)
+        freed = np.asarray(res.value[:, 0], np.uint32)[np.asarray(res.found)]
+        if len(freed):
+            ok = paged.free.enqueue_batch(freed)
+            assert ok.all()               # ring is sized to hold every page
+    if q_alloc > len(paged.free):
+        raise RuntimeError(f"out of KV pages ({q_alloc} wanted, "
+                           f"{len(paged.free)} free)")
+    phys = np.zeros((0,), np.int32)
+    if q_alloc:
+        vals, ok = paged.free.dequeue_batch(q_alloc)
+        assert ok.all()                   # guarded by the length check above
+        phys = vals[:, 0].astype(np.int32)
+    alloc_keys = [int(page_key(s, p)) for s, p in allocs]
+    w = len(ret_keys) + q_alloc
+    wval = np.zeros((1, w, 1), np.uint32)
+    wval[0, len(ret_keys):, 0] = phys
+    txns = txn_map.make_map_txns(
+        np.asarray(ret_keys or [0], np.uint32)[None],
+        np.asarray(ret_keys + alloc_keys, np.uint32)[None],
+        read_mask=np.asarray([bool(ret_keys)] * max(len(ret_keys), 1))[None],
+        write_del=np.asarray([True] * len(ret_keys)
+                             + [False] * q_alloc)[None],
+        write_value=wval)
+    if paged.spec.n_shards == 1:
+        table, _res = txn_map.transact(paged.spec.table, paged.state.table,
+                                       txns, None)
+    else:
+        table, _res = txn_map.transact_dist(
+            paged.mesh, _table_dspec(paged.spec, paged.spec.n_shards),
+            paged.state.table, txns, None)
+    paged.state = paged.state._replace(table=table)
+    return paged, jnp.asarray(phys)
+
+
 def alloc_pages(paged: PagedKV, seq_ids, page_nos) -> tuple[PagedKV, jax.Array]:
     """Map (seq, page_no) -> fresh physical pages via CacheHash insert
     (a CAS-install on the bucket big atomic).  Physical pages come off the

@@ -1,0 +1,309 @@
+"""Batched k-word MCAS over big atomics — multi-location atomicity on the
+unified engine (DESIGN.md §7).
+
+A transaction is a group of up to W (slot, expected, desired) lanes that
+commit ALL-OR-NOTHING: if every claimed cell still holds its expected value
+at the transaction's linearization point, all W desired values are written
+(each cell's version bumps by 2, exactly as a store); otherwise nothing is
+written and the transaction reports failure with the witnessed values.
+This is the CAS-semantics MCAS of Blelloch & Wei ("LL/SC and Atomic Copy",
+arXiv:1911.09671): multi-word atomicity built from LL/SC, with NO
+descriptors — the batch-step engine arbitrates conflicts directly.
+
+Protocol, per attempt round (all three batches ride `engine.linearize`
+through the strategy registry, so every layout gets MCAS for free):
+
+  1. LL-all       every lane of every contending txn load-links its cell.
+                  A lane whose value != expected fails its whole txn NOW
+                  (the txn linearizes at this read — the failure witness).
+  2. VALIDATE-all surviving txns validate every link (a pure VALIDATE
+                  batch; honesty round — links can only die if a caller
+                  interleaves foreign traffic between engine batches).
+  3. arbitrate    `engine.arbitrate_groups`: lowest txn id claiming a cell
+                  wins it; a txn is a winner iff it wins EVERY cell it
+                  claims.  Winners are pairwise cell-disjoint.
+  4. SC-commit    ONE pure-SC batch commits every winner lane — the
+                  engine's one-round fast path (every link predates the
+                  batch and winners never share a cell, so every SC
+                  succeeds).
+
+Losers (ready but out-arbitrated) retry after a Dice-style abort backoff
+(`repro.sync.queue.BackoffPolicy`, the queue's contention-management module,
+arXiv:1305.5800) measured in rounds.  The lowest pending txn id always wins
+arbitration, so every round either fails or commits at least one txn:
+termination is guaranteed within `max_rounds`.
+
+The CLAIMED linearization: round-major, failures before commits within a
+round, txn id within each class — `linearization_order(result)` emits it
+for the `TxnOracle` harness (tests/oracle.py), and `mcas_reference` is the
+sequential replay that defines the semantics.
+
+Everything is a pure pytree under one `jax.jit` (`spec`, the backoff policy
+and `max_rounds` are the only statics), so `mcas` composes with `lax.scan`,
+donation and `shard_map`; the mesh-sharded two-round prepare/commit variant
+lives in `core.distributed.mcas`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import engine, registry
+from repro.core.layout import WORD_DTYPE
+from repro.core.specs import AtomicSpec
+from repro.sync.queue import BackoffPolicy
+
+
+class TxnBatch(NamedTuple):
+    """T transactions of up to W lanes each (a pure pytree).
+
+    slot:     int32[T, W]  claimed cell per lane; -1 = unused (txn width < W)
+    expected: word[T, W, k]  per-lane comparand
+    desired:  word[T, W, k]  per-lane value to install on commit
+    """
+
+    slot: jax.Array
+    expected: jax.Array
+    desired: jax.Array
+
+    @property
+    def t(self) -> int:
+        return self.slot.shape[0]
+
+    @property
+    def w(self) -> int:
+        return self.slot.shape[1]
+
+
+class McasResult(NamedTuple):
+    """Per-transaction results of one `mcas` call.
+
+    success:  bool[T]     txn committed (all lanes written atomically)
+    witness:  word[T,W,k] value of each claimed cell at the txn's
+                          linearization point (failed txns: the mismatching
+                          read; committed txns: the pre-write values)
+    round:    int32[T]    1-based attempt round at which the txn resolved
+    attempts: int32[T]    arbitration losses before resolving
+    rounds:   int32[]     total rounds the batch took
+    """
+
+    success: jax.Array
+    witness: jax.Array
+    round: jax.Array
+    attempts: jax.Array
+    rounds: jax.Array
+
+
+def make_txns(slot, expected=None, desired=None, *, k: int) -> TxnBatch:
+    """THE checked transaction constructor (mirrors `engine.make_ops`).
+
+    Checks (on concrete inputs): slot is rank-2 [T, W]; expected/desired are
+    [T, W, k] (a mismatched trailing dim is the "mismatched k" error);
+    no duplicate live slots within one transaction.  Word payloads coerce
+    to the canonical WORD_DTYPE."""
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim != 2:
+        raise ValueError(f"slot must be rank-2 [T, W], got shape "
+                         f"{slot.shape}")
+    t, w = slot.shape
+    if t == 0 or w == 0:
+        raise ValueError(f"need at least one transaction lane: {slot.shape}")
+    if expected is None:
+        expected = jnp.zeros((t, w, k), WORD_DTYPE)
+    else:
+        expected = jnp.asarray(expected, WORD_DTYPE)
+    if desired is None:
+        desired = jnp.zeros((t, w, k), WORD_DTYPE)
+    else:
+        desired = jnp.asarray(desired, WORD_DTYPE)
+    for name, arr in (("expected", expected), ("desired", desired)):
+        if arr.shape != (t, w, k):
+            raise ValueError(f"{name} shape {arr.shape} != ({t}, {w}, {k}) "
+                             f"(mismatched k?)")
+    try:
+        slot_np = np.asarray(slot)          # concrete only; tracers skip
+    except Exception:
+        slot_np = None
+    if slot_np is not None:
+        for i in range(t):
+            live = slot_np[i][slot_np[i] >= 0]
+            if len(np.unique(live)) != len(live):
+                raise ValueError(f"transaction {i} claims duplicate slots: "
+                                 f"{sorted(live.tolist())}")
+    return TxnBatch(slot, expected, desired)
+
+
+def _policy_delay(policy: BackoffPolicy, attempts: jax.Array) -> jax.Array:
+    """`policy.delay` as a traced expression (policy fields are static)."""
+    if policy.kind == "none":
+        return jnp.zeros_like(attempts)
+    if policy.kind == "const":
+        return jnp.full_like(attempts, policy.base)
+    if policy.kind == "exp":
+        e = jnp.clip(attempts - 1, 0, 16)
+        return jnp.minimum(jnp.left_shift(jnp.int32(policy.base), e),
+                           jnp.int32(policy.cap))
+    raise ValueError(f"unknown backoff kind {policy.kind!r}")
+
+
+def max_rounds_bound(t: int, policy: BackoffPolicy) -> int:
+    """Rounds after which every txn has provably resolved: >= 1 txn resolves
+    per backoff window, and a window is at most max-delay + 1 rounds."""
+    max_delay = {"none": 0, "const": policy.base, "exp": policy.cap}
+    return t * (max_delay.get(policy.kind, policy.cap) + 2) + 4
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "policy", "max_rounds"))
+def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
+          policy: BackoffPolicy, max_rounds: int):
+    impl = registry.get_strategy(spec.strategy)
+    t, w, k, n = txns.t, txns.w, spec.k, spec.n
+    p = t * w
+    f_slot = txns.slot.reshape(p)
+    f_exp = txns.expected.reshape(p, k)
+    f_des = txns.desired.reshape(p, k)
+    lane_txn = jnp.repeat(jnp.arange(t, dtype=jnp.int32), w)
+    lane_used = (f_slot >= 0) & (f_slot < n)
+    safe_slot = jnp.where(lane_used, f_slot, 0)
+
+    def per_txn_all(flag_lane):
+        """AND a per-lane flag over each txn's USED lanes (unused ⇒ True)."""
+        return jnp.all((flag_lane | ~lane_used).reshape(t, w), axis=1)
+
+    def body(carry):
+        (r, state, pending, success, witness, round_res, attempts,
+         delay) = carry
+        r = r + 1
+        active_t = pending & (delay <= 0)
+        active_lane = active_t[lane_txn] & lane_used
+
+        # 1. LL-all ----------------------------------------------------------
+        ops1 = engine.OpBatch(
+            jnp.where(active_lane, engine.LL, engine.IDLE), safe_slot,
+            jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
+        d1, v1, ctx, res1, st1 = engine.linearize(
+            impl.engine_view(state), state.version,
+            engine.init_ctx(p, k), ops1)
+        state = impl.commit(state, d1, v1, st1.n_updates, p)
+        vals = res1.value
+        match_lane = jnp.all(vals == f_exp, axis=1)
+        txn_match = per_txn_all(match_lane)
+        failed_now = active_t & ~txn_match
+
+        # 2. VALIDATE-all ----------------------------------------------------
+        ready_lane = (active_t & txn_match)[lane_txn] & lane_used
+        ops2 = engine.OpBatch(
+            jnp.where(ready_lane, engine.VALIDATE, engine.IDLE), safe_slot,
+            jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
+        d2, v2, ctx, res2, st2 = engine.linearize(
+            impl.engine_view(state), state.version, ctx, ops2)
+        state = impl.commit(state, d2, v2, st2.n_updates, p)
+        ready_t = active_t & txn_match & per_txn_all(res2.success)
+
+        # 3. arbitrate -------------------------------------------------------
+        winner_t = ready_t & engine.arbitrate_groups(
+            safe_slot, lane_txn, ready_t[lane_txn] & lane_used,
+            n=n, n_groups=t)
+
+        # 4. SC-commit (one round: pure-SC fast path, disjoint cells) --------
+        win_lane = winner_t[lane_txn] & lane_used
+        ops3 = engine.OpBatch(
+            jnp.where(win_lane, engine.SC, engine.IDLE), safe_slot,
+            jnp.zeros((p, k), WORD_DTYPE), f_des)
+        d3, v3, ctx, res3, st3 = engine.linearize(
+            impl.engine_view(state), state.version, ctx, ops3)
+        state = impl.commit(state, d3, v3, st3.n_updates, p)
+        committed = winner_t & per_txn_all(res3.success)
+
+        # 5. bookkeeping -----------------------------------------------------
+        resolved = failed_now | committed
+        res_lane = resolved[lane_txn] & lane_used
+        witness = jnp.where(res_lane[:, None], vals, witness)
+        success = success | committed
+        round_res = jnp.where(resolved, r, round_res)
+        pending = pending & ~resolved
+        lost = ready_t & ~committed
+        attempts = attempts + lost.astype(jnp.int32)
+        delay = jnp.where(lost, _policy_delay(policy, attempts),
+                          jnp.maximum(delay - 1, 0))
+        return (r, state, pending, success, witness, round_res, attempts,
+                delay)
+
+    init = (jnp.int32(0), state, jnp.ones((t,), bool), jnp.zeros((t,), bool),
+            jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((t,), jnp.int32),
+            jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32))
+    out = lax.while_loop(
+        lambda c: (c[0] < max_rounds) & jnp.any(c[2]), body, init)
+    r, state, _pending, success, witness, round_res, attempts, _delay = out
+    return state, McasResult(success, witness.reshape(t, w, k), round_res,
+                             attempts, r)
+
+
+def mcas(spec: AtomicSpec, state, txns: TxnBatch, *,
+         policy: BackoffPolicy = BackoffPolicy("none"),
+         max_rounds: int | None = None):
+    """Commit a batch of k-word MCAS transactions against the table.
+
+    `spec` / `policy` / `max_rounds` are the only statics; `state` and
+    `txns` are pure pytrees.  Returns (state', McasResult); the claimed
+    linearization order is `linearization_order(result)`.
+    """
+    if txns.expected.shape[2] != spec.k:
+        raise ValueError(f"txn word width {txns.expected.shape[2]} != "
+                         f"spec.k {spec.k}")
+    if max_rounds is None:
+        max_rounds = max_rounds_bound(txns.t, policy)
+    return _mcas(spec, state, txns, policy, max_rounds)
+
+
+# ---------------------------------------------------------------------------
+# The claimed order + the sequential replay that defines the semantics.
+# ---------------------------------------------------------------------------
+
+def linearization_order(result: McasResult) -> np.ndarray:
+    """Txn ids in the claimed linearization: round-major, failures before
+    commits within a round (failures witness the pre-commit values), txn id
+    within each class.  Txns that never resolved (round == 0, possible only
+    under a caller-supplied `max_rounds` below the provable bound) never
+    executed and are excluded — the oracle treats them as dropped."""
+    rnd = np.asarray(result.round)
+    suc = np.asarray(result.success).astype(np.int64)
+    ids = np.arange(rnd.shape[0])
+    order = ids[np.lexsort((ids, suc, rnd))]
+    return order[rnd[order] > 0]
+
+
+def mcas_reference(data: np.ndarray, version: np.ndarray, txns: TxnBatch,
+                   order) -> tuple:
+    """Replay whole transactions one at a time in `order`.  Pure numpy.
+
+    Returns (data', version', success[T], witness[T, W, k])."""
+    data = np.array(data, copy=True)
+    version = np.array(version, copy=True)
+    slot = np.asarray(txns.slot)
+    expected = np.asarray(txns.expected)
+    desired = np.asarray(txns.desired)
+    t, w, k = expected.shape
+    success = np.zeros((t,), bool)
+    witness = np.zeros((t, w, k), data.dtype)
+    for i in np.asarray(order, np.int64):
+        used = [j for j in range(w)
+                if 0 <= slot[i, j] < data.shape[0]]
+        ok = True
+        for j in used:
+            witness[i, j] = data[slot[i, j]]
+            if not np.array_equal(data[slot[i, j]], expected[i, j]):
+                ok = False
+        if ok:
+            for j in used:
+                data[slot[i, j]] = desired[i, j]
+                version[slot[i, j]] += 2
+            success[i] = True
+    return data, version, success, witness

@@ -24,7 +24,8 @@ for path in (_HERE, os.path.join(_HERE, "..", "src")):
 import jax                                                     # noqa: E402
 import numpy as np                                             # noqa: E402
 
-from oracle import HashOracle, TableOracle, hash_batch, mixed_batch  # noqa: E402
+from oracle import (HashOracle, MapOracle, TableOracle, TxnOracle,  # noqa: E402
+                    hash_batch, mixed_batch, txn_batch)
 from repro import atomics                                      # noqa: E402
 from repro.core import distributed as dsb                      # noqa: E402
 
@@ -284,6 +285,143 @@ def scenario_hash(strategy: str):
                           order=order, overflow=ovf_ref, msg="hash overflow")
 
 
+def scenario_mcas(strategy: str):
+    """Cross-shard MCAS (two-round prepare/commit collective) vs the
+    TxnOracle replaying the claimed whole-transaction order, shard counts
+    {2, 4, 8}, widths {1, 2, 3} — cross-shard transactions arise naturally
+    (random slots over all shards' cells), plus an explicit one."""
+    from repro.txn import mcas as txn_mcas
+
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()) ^ 0x7777)
+    n, k = 24, 2
+    for shards, w in zip(SHARD_COUNTS, (1, 2, 3)):
+        mesh = _mesh(shards)
+        dspec = dsb.DistSpec(atomics.AtomicSpec(n, k, strategy, p_max=64),
+                             "shard", shards, 8)
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        st = dsb.init_dist(mesh, dspec, init)
+        oracle = TxnOracle(n, k, initial=init)
+        for step in range(3):
+            txns = txn_batch(rng, t=8, w=w, n=n, k=k, current=oracle.data)
+            st, res = dsb.mcas(mesh, dspec, st, txns)
+            oracle.step_and_check(
+                txns, result=res, logical=dsb.logical(dspec, st),
+                version=dsb.versions(dspec, st),
+                msg=f"mcas {strategy} shards={shards} w={w} step {step}")
+
+    # explicit cross-shard all-or-nothing: one txn spans all 4 shards and
+    # one stale lane on the LAST shard aborts the whole thing.
+    shards, w = 4, 4
+    mesh = _mesh(shards)
+    dspec = dsb.DistSpec(atomics.AtomicSpec(n, k, strategy, p_max=64),
+                         "shard", shards, 8)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    st = dsb.init_dist(mesh, dspec, init)
+    span = np.asarray([[0, 6, 12, 18]], np.int32)     # one cell per shard
+    exp = init[span[0]][None].copy()
+    exp[0, 3] += 1                                     # stale on shard 3
+    txns = atomics.make_txns(span, exp,
+                             np.full((1, w, k), 5, np.uint32), k=k)
+    st, res = dsb.mcas(mesh, dspec, st, txns)
+    assert not bool(np.asarray(res.success)[0])
+    np.testing.assert_array_equal(np.asarray(dsb.logical(dspec, st)), init)
+    # fix the comparand: the same txn commits on every shard at once
+    txns = atomics.make_txns(span, init[span[0]][None],
+                             np.full((1, w, k), 5, np.uint32), k=k)
+    st, res = dsb.mcas(mesh, dspec, st, txns)
+    assert bool(np.asarray(res.success)[0])
+    got = np.asarray(dsb.logical(dspec, st))
+    np.testing.assert_array_equal(got[span[0]], np.full((w, k), 5))
+
+
+def scenario_txnmap(strategy: str):
+    """Transactional map over the key-owner-routed sharded CacheHash:
+    read/write sets spanning shards commit serializably (MapOracle),
+    including the everyone-increments-one-counter conflict storm."""
+    from repro.txn import map as txn_map
+
+    def fn(rv, rf):
+        return rv.sum(axis=1, keepdims=True) + 1
+
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()) ^ 0x3333)
+    for shards in (2, 4):
+        mesh = _mesh(shards)
+        hs = atomics.HashSpec(64, vw=1, strategy=strategy, p_max=64)
+        dspec = dsb.DistSpec(hs, "shard", shards, 4)
+        st = dsb.init_dist(mesh, dspec)
+        oracle = MapOracle(vw=1)
+        t, r, w = 5, 2, 2
+        for step in range(2):
+            txns = txn_map.make_map_txns(
+                rng.integers(0, 30, (t, r)).astype(np.uint32),
+                np.stack([rng.choice(30, size=w, replace=False)
+                          for _ in range(t)]).astype(np.uint32),
+                read_mask=rng.random((t, r)) < 0.8,
+                write_del=rng.random((t, w)) < 0.2)
+            st, res = txn_map.transact_dist(mesh, dspec, st, txns,
+                                            _map_fn_copy)
+            oracle.step_and_check(
+                txns, _map_fn_copy, result=res,
+                items=dsb.hash_items(dspec, st),
+                msg=f"txnmap {strategy} shards={shards} step {step}")
+        # conflict storm: T txns increment one counter key serializably
+        t = 4
+        txns = txn_map.make_map_txns(np.full((t, 1), 17, np.uint32),
+                                     np.full((t, 1), 17, np.uint32))
+        st, res = txn_map.transact_dist(mesh, dspec, st, txns, fn)
+        assert int(res.rounds) == t
+        oracle.step_and_check(txns, fn, result=res,
+                              items=dsb.hash_items(dspec, st),
+                              msg=f"txnmap storm shards={shards}")
+        assert oracle.model[17][0] == t
+
+
+def _map_fn_copy(rv, rf):
+    return rv
+
+
+def scenario_txn_plugin(strategy_unused: str):
+    """A strategy registered HERE runs cross-shard MCAS and the sharded
+    transactional map unchanged (the txn layer is registry-dispatched all
+    the way through the collective)."""
+    from repro.txn import map as txn_map
+
+    class PlainCloneTxnDist(atomics.StrategyImpl):
+        name = "dist_txn_plugin_check"
+
+    atomics.register_strategy(PlainCloneTxnDist(), overwrite=True)
+    rng = np.random.default_rng(41)
+    n, k, shards, w = 24, 2, 4, 2
+    mesh = _mesh(shards)
+    dspec = dsb.DistSpec(
+        atomics.AtomicSpec(n, k, "dist_txn_plugin_check", p_max=64),
+        "shard", shards, 8)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    st = dsb.init_dist(mesh, dspec, init)
+    oracle = TxnOracle(n, k, initial=init)
+    for step in range(2):
+        txns = txn_batch(rng, t=8, w=w, n=n, k=k, current=oracle.data)
+        st, res = dsb.mcas(mesh, dspec, st, txns)
+        oracle.step_and_check(
+            txns, result=res, logical=dsb.logical(dspec, st),
+            version=dsb.versions(dspec, st),
+            msg=f"txn plugin mcas step {step}")
+    hs = atomics.HashSpec(64, vw=1, strategy="dist_txn_plugin_check",
+                          p_max=64)
+    hdspec = dsb.DistSpec(hs, "shard", shards, 4)
+    hst = dsb.init_dist(mesh, hdspec)
+    txns = txn_map.make_map_txns(np.full((3, 1), 8, np.uint32),
+                                 np.full((3, 1), 8, np.uint32))
+
+    def fn(rv, rf):
+        return rv.sum(axis=1, keepdims=True) + 1
+
+    hst, res = txn_map.transact_dist(mesh, hdspec, hst, txns, fn)
+    MapOracle(vw=1).step_and_check(txns, fn, result=res,
+                                   items=dsb.hash_items(hdspec, hst),
+                                   msg="txn plugin map")
+
+
 def scenario_serving(strategy: str):
     """The serving engine with a mesh: sharded page table + sharded
     admission/slot rings must produce tokens identical to the single-device
@@ -329,6 +467,9 @@ SCENARIOS = {
     "plugin": scenario_plugin,
     "hash": scenario_hash,
     "serving": scenario_serving,
+    "mcas": scenario_mcas,
+    "txnmap": scenario_txnmap,
+    "txn_plugin": scenario_txn_plugin,
 }
 
 

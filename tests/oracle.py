@@ -161,6 +161,102 @@ class HashOracle:
         return ref
 
 
+class TxnOracle:
+    """Sequential whole-transaction oracle for k-word MCAS (ISSUE 4).
+
+    Replays CLAIMED linearization orders of entire transactions — each one
+    all-or-nothing, including aborted txns (which must leave no trace but
+    still witness a consistent read of every claimed cell) — through
+    `txn.mcas.mcas_reference`, and diffs the live system's success masks,
+    witnesses, logical values and versions against the replay."""
+
+    def __init__(self, n: int, k: int, initial: np.ndarray | None = None):
+        self.n, self.k = n, k
+        self.data = np.zeros((n, k), np.uint32) if initial is None \
+            else np.array(initial, np.uint32)
+        self.version = np.zeros((n,), np.uint32)
+
+    def step(self, txns, order=None):
+        """Replay one txn batch in the claimed `order` (default: txn id
+        order).  Returns (success[T], witness[T, W, k]) as numpy."""
+        from repro.txn import mcas as txn_mcas
+        if order is None:
+            order = np.arange(np.asarray(txns.slot).shape[0])
+        self.data, self.version, success, witness = \
+            txn_mcas.mcas_reference(self.data, self.version, txns, order)
+        return success, witness
+
+    def check(self, *, result=None, ref=None, logical=None, version=None,
+              msg: str = "") -> None:
+        if logical is not None:
+            np.testing.assert_array_equal(np.asarray(logical), self.data,
+                                          err_msg=f"{msg}: logical data")
+        if version is not None:
+            np.testing.assert_array_equal(np.asarray(version), self.version,
+                                          err_msg=f"{msg}: versions")
+        if result is not None:
+            assert ref is not None, "pass ref= (the value step() returned)"
+            ref_success, ref_witness = ref
+            np.testing.assert_array_equal(np.asarray(result.success),
+                                          ref_success,
+                                          err_msg=f"{msg}: txn success")
+            np.testing.assert_array_equal(np.asarray(result.witness),
+                                          ref_witness,
+                                          err_msg=f"{msg}: txn witness")
+
+    def step_and_check(self, txns, *, result=None, logical=None,
+                       version=None, order=None, msg: str = ""):
+        """step() + check() in one call; `order` defaults to the claimed
+        order the live result encodes.  Returns the reference tuple."""
+        from repro.txn import mcas as txn_mcas
+        if order is None and result is not None:
+            order = txn_mcas.linearization_order(result)
+        ref = self.step(txns, order)
+        self.check(result=result, ref=ref, logical=logical, version=version,
+                   msg=msg)
+        return ref
+
+
+class MapOracle:
+    """Sequential dict-model oracle for the transactional map: replays
+    whole read-set/write-set transactions in the claimed serialization."""
+
+    def __init__(self, vw: int = 1):
+        self.vw = vw
+        self.model: dict = {}
+
+    def step(self, txns, fn, order=None):
+        from repro.txn import map as txn_map
+        if order is None:
+            order = np.arange(txns.t)
+        self.model, rv, rf = txn_map.transact_reference(
+            self.model, txns, fn, order, self.vw)
+        return rv, rf
+
+    def check(self, *, result=None, ref=None, items=None,
+              msg: str = "") -> None:
+        if result is not None:
+            assert ref is not None
+            rv, rf = ref
+            np.testing.assert_array_equal(np.asarray(result.read_found), rf,
+                                          err_msg=f"{msg}: read_found")
+            np.testing.assert_array_equal(np.asarray(result.read_value), rv,
+                                          err_msg=f"{msg}: read_value")
+        if items is not None:
+            want = {k: list(np.ravel(v)) for k, v in self.model.items()}
+            got = {k: list(np.ravel(v)) for k, v in items.items()}
+            assert got == want, f"{msg}: table contents diverge"
+
+    def step_and_check(self, txns, fn, *, result=None, items=None,
+                       order=None, msg: str = ""):
+        from repro.txn import map as txn_map
+        if order is None and result is not None:
+            order = txn_map.linearization_order(result)
+        ref = self.step(txns, fn, order)
+        self.check(result=result, ref=ref, items=items, msg=msg)
+        return ref
+
+
 # ---------------------------------------------------------------------------
 # Shared randomized batch generators (tests + the distributed suite).
 # ---------------------------------------------------------------------------
@@ -182,6 +278,26 @@ def mixed_batch(rng: np.random.Generator, ref_ctx, *, p: int, n: int, k: int,
     expected = np.where(use_cur[:, None], np.asarray(current)[slot], expected)
     desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
     return atomics.make_ops(kind, slot, expected, desired, k=k)
+
+
+def txn_batch(rng: np.random.Generator, *, t: int, w: int, n: int, k: int,
+              current: np.ndarray, match_frac: float = 0.6):
+    """Random MCAS batch: mixed widths (-1-padded lanes), distinct slots
+    per txn, `match_frac` of txns expecting the CURRENT values (commit
+    candidates; small n => real conflicts), the rest stale comparands."""
+    slot = np.full((t, w), -1, np.int32)
+    for i in range(t):
+        width = int(rng.integers(1, w + 1))
+        slot[i, :width] = rng.choice(n, size=min(width, n), replace=False)
+    expected = rng.integers(0, 2 ** 32, (t, w, k), dtype=np.uint32)
+    fresh = rng.random(t) < match_frac
+    for i in range(t):
+        if fresh[i]:
+            for j in range(w):
+                if slot[i, j] >= 0:
+                    expected[i, j] = np.asarray(current)[slot[i, j]]
+    desired = rng.integers(0, 2 ** 32, (t, w, k), dtype=np.uint32)
+    return atomics.make_txns(slot, expected, desired, k=k)
 
 
 def hash_batch(rng: np.random.Generator, *, p: int, key_space: int,

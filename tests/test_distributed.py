@@ -77,3 +77,22 @@ def test_serving_engine_on_sharded_table():
     """Sharded page table + sharded admission/slot rings: token-identical
     to the single-device engine, still one dispatch per decode step."""
     _run("serving")
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_cross_shard_mcas_matches_txn_oracle(strategy):
+    """Two-round prepare/commit MCAS vs the whole-transaction oracle,
+    shards {2,4,8}, incl. an all-shards-spanning abort/commit pair."""
+    _run("mcas", strategy)
+
+
+def test_transactional_map_sharded():
+    """Read/write sets spanning shards commit serializably; the counter
+    conflict storm serializes one commit per round."""
+    _run("txnmap")
+
+
+def test_txn_plugin_strategy_runs_sharded():
+    """A test-registered strategy runs cross-shard MCAS + the sharded map
+    without touching core (ISSUE 4 acceptance)."""
+    _run("txn_plugin")

@@ -98,6 +98,54 @@ def test_page_table_lookup_consistency():
     assert (np.asarray(got) == -1).all()
 
 
+def test_txn_bookkeeping_keeps_one_dispatch_and_tokens():
+    """ISSUE 4 acceptance: with the transactional bookkeeping path enabled
+    (the default), each decode step is still exactly ONE jitted dispatch,
+    tokens are identical to the legacy alloc/free path, and retirement
+    still recycles every page through the one-transaction commit."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, 11).astype(np.int32),
+               rng.integers(0, cfg.vocab, 6).astype(np.int32)]
+
+    def serve(txn: bool):
+        eng = ServingEngine(cfg, params, max_batch=2, n_pages=24,
+                            page_size=4, max_pages_per_seq=8,
+                            txn_bookkeeping=txn)
+        assert eng.txn_bookkeeping is txn
+        free0 = len(eng.paged.free)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+        out = eng.run_to_completion()
+        # both slots decode together for 4 fused steps, 1 dispatch each
+        assert eng.dispatch_count == 4, eng.dispatch_count
+        assert len(eng.paged.free) == free0        # all pages recycled
+        assert not eng._pending_retire             # txn committed them
+        return out
+
+    assert serve(True) == serve(False)
+
+
+def test_txn_bookkeeping_frees_pages_before_admission():
+    """Regression: deferred retirement deletes must commit BEFORE a queued
+    request's prefill allocates, or a tight page pool spuriously exhausts
+    (pages sat in _pending_retire while admission asked for them)."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    eng = ServingEngine(cfg, params, max_batch=1, n_pages=4, page_size=4,
+                        max_pages_per_seq=4)
+    free0 = len(eng.paged.free)
+    for rid in range(2):                     # rid 1 queues behind rid 0
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 11)
+                           .astype(np.int32), max_new_tokens=2))
+    out = eng.run_to_completion()
+    assert len(out[0]) == 2 and len(out[1]) == 2
+    assert len(eng.paged.free) == free0
+
+
 def test_failed_admission_leaks_nothing():
     """A prefill that dies (page exhaustion) must hand its decode slot and
     every not-yet-admitted request back to the big-atomic rings."""

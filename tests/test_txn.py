@@ -1,0 +1,350 @@
+"""repro.txn acceptance tests (ISSUE 4): k-word MCAS, bounded version
+lists and the optimistic transactional map, property-tested against the
+whole-transaction oracles (tests/oracle.py TxnOracle / MapOracle) over all
+four lock-free strategies AND a test-registered plug-in strategy.  The
+mesh-sharded variants run in tests/test_distributed.py (dist_checks.py
+scenarios `mcas` / `txnmap`); this file is the single-device suite and
+runs under the CI BIGATOMIC_STRATEGY matrix like the rest of tier-1."""
+
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from oracle import MapOracle, TxnOracle, txn_batch
+from repro import atomics
+from repro.core import cachehash as ch
+from repro.core.specs import VersionSpec
+from repro.sync.queue import BackoffPolicy
+from repro.txn import map as txn_map
+from repro.txn import mcas as txn_mcas
+from repro.txn import versionlist as vl
+
+LOCKFREE = ["seqlock", "indirect", "cached_wf", "cached_me"]
+
+
+# ---------------------------------------------------------------------------
+# MCAS: property tests — width x contention x strategy vs the TxnOracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_mcas_matches_txn_oracle(strategy):
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()))
+    for w, n in ((1, 4), (2, 6), (4, 10)):      # txn width x contention
+        k = int(rng.integers(1, 4))
+        t = int(rng.integers(2, 9))
+        spec = atomics.AtomicSpec(n, k, strategy, p_max=128)
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        state = atomics.init(spec, init)
+        oracle = TxnOracle(n, k, initial=init)
+        for step in range(4):
+            txns = txn_batch(rng, t=t, w=w, n=n, k=k, current=oracle.data)
+            state, res = atomics.mcas(spec, state, txns)
+            oracle.step_and_check(
+                txns, result=res, logical=atomics.logical(spec, state),
+                version=state.version,
+                msg=f"{strategy} w={w} step {step}")
+
+
+def test_mcas_all_match_conflicts_serialize():
+    """Every txn expects the live values of overlapping cells: exactly the
+    txns whose cells were untouched by earlier commits succeed, and the
+    oracle confirms the claimed (round, fail<commit, id) order."""
+    n, k, w, t = 6, 2, 2, 8
+    rng = np.random.default_rng(3)
+    spec = atomics.AtomicSpec(n, k, "cached_me", p_max=64)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    state = atomics.init(spec, init)
+    slot = np.stack([rng.choice(n, size=w, replace=False)
+                     for _ in range(t)]).astype(np.int32)
+    txns = atomics.make_txns(slot, init[slot],
+                             rng.integers(0, 2 ** 32, (t, w, k),
+                                          dtype=np.uint32), k=k)
+    state, res = atomics.mcas(spec, state, txns)
+    assert bool(np.asarray(res.success)[0])      # lowest id always commits
+    TxnOracle(n, k, initial=init).step_and_check(
+        txns, result=res, logical=atomics.logical(spec, state),
+        version=state.version, msg="all-match conflicts")
+
+
+@pytest.mark.parametrize("policy", [BackoffPolicy("const", 2),
+                                    BackoffPolicy("exp", 1, 4)])
+def test_mcas_backoff_policies_preserve_semantics(policy):
+    """Dice-style abort backoff changes WHEN losers retry, never what the
+    batch means: the claimed order still replays exactly."""
+    n, k, w, t = 4, 2, 2, 6
+    rng = np.random.default_rng(11)
+    spec = atomics.AtomicSpec(n, k, "indirect", p_max=64)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    state = atomics.init(spec, init)
+    oracle = TxnOracle(n, k, initial=init)
+    for step in range(3):
+        txns = txn_batch(rng, t=t, w=w, n=n, k=k, current=oracle.data,
+                         match_frac=0.9)
+        state, res = atomics.mcas(spec, state, txns, policy=policy)
+        oracle.step_and_check(
+            txns, result=res, logical=atomics.logical(spec, state),
+            version=state.version, msg=f"policy {policy.kind} step {step}")
+
+
+def test_mcas_aborted_txns_leave_no_trace():
+    n, k = 4, 2
+    spec = atomics.AtomicSpec(n, k, "cached_wf", p_max=32)
+    init = np.arange(n * k, dtype=np.uint32).reshape(n, k)
+    state = atomics.init(spec, init)
+    txns = atomics.make_txns(
+        [[0, 1], [2, 3]],
+        expected=np.full((2, 2, k), 999, np.uint32),     # all stale
+        desired=np.zeros((2, 2, k), np.uint32), k=k)
+    state, res = atomics.mcas(spec, state, txns)
+    assert not np.asarray(res.success).any()
+    np.testing.assert_array_equal(np.asarray(atomics.logical(spec, state)),
+                                  init)
+    np.testing.assert_array_equal(np.asarray(state.version), np.zeros(n))
+    # the failure witness is the consistent read that refused them
+    np.testing.assert_array_equal(np.asarray(res.witness)[0], init[[0, 1]])
+
+
+def test_mcas_is_cas_semantics_not_llsc():
+    """A->B->A between mcas calls: expected compares VALUES, so the txn
+    commits (unlike SC, which compares versions) — and the oracle agrees."""
+    n, k = 2, 2
+    spec = atomics.AtomicSpec(n, k, "cached_me", p_max=16)
+    init = np.asarray([[1, 2], [3, 4]], np.uint32)
+    state = atomics.init(spec, init)
+    oracle = TxnOracle(n, k, initial=init)
+    for payload in ([[9, 9]], [[1, 2]]):                 # A -> B -> A
+        state, _, _, _, _ = atomics.apply(
+            spec, state, atomics.stores([0], np.asarray(payload, np.uint32),
+                                        k=k))
+        oracle.version[0] += 2
+    oracle.data[0] = [1, 2]
+    txns = atomics.make_txns([[0, 1]], expected=init[None][:, [0, 1]],
+                             desired=np.full((1, 2, k), 7, np.uint32), k=k)
+    state, res = atomics.mcas(spec, state, txns)
+    assert bool(np.asarray(res.success)[0])
+    oracle.step_and_check(txns, result=res,
+                          logical=atomics.logical(spec, state),
+                          version=state.version, msg="aba commits")
+
+
+def test_make_txns_validation():
+    with pytest.raises(ValueError, match="duplicate slots"):
+        atomics.make_txns([[1, 1]], k=2)
+    with pytest.raises(ValueError, match="mismatched k"):
+        atomics.make_txns([[0, 1]],
+                          desired=np.zeros((1, 2, 3), np.uint32), k=2)
+    with pytest.raises(ValueError, match="rank-2"):
+        atomics.make_txns([0, 1], k=2)
+    with pytest.raises(ValueError, match="txn word width"):
+        spec = atomics.AtomicSpec(4, 3, "cached_me", p_max=8)
+        atomics.mcas(spec, atomics.init(spec),
+                     atomics.make_txns([[0]], k=2))
+    # padding lanes (-1) are allowed and skipped
+    t = atomics.make_txns([[0, -1]], k=2)
+    assert t.w == 2
+
+
+def test_mcas_plugin_strategy():
+    """A strategy registered HERE runs MCAS unchanged (ISSUE 4 acceptance:
+    the txn layer is registry-dispatched)."""
+    class PlainCloneTxn(atomics.StrategyImpl):
+        name = "txn_plugin_check"
+
+    atomics.register_strategy(PlainCloneTxn(), overwrite=True)
+    try:
+        rng = np.random.default_rng(7)
+        n, k, w, t = 6, 2, 2, 6
+        spec = atomics.AtomicSpec(n, k, "txn_plugin_check", p_max=64)
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        state = atomics.init(spec, init)
+        oracle = TxnOracle(n, k, initial=init)
+        for step in range(3):
+            txns = txn_batch(rng, t=t, w=w, n=n, k=k, current=oracle.data)
+            state, res = atomics.mcas(spec, state, txns)
+            oracle.step_and_check(
+                txns, result=res, logical=atomics.logical(spec, state),
+                version=state.version, msg=f"plugin step {step}")
+    finally:
+        atomics.unregister_strategy("txn_plugin_check")
+
+
+# ---------------------------------------------------------------------------
+# Version lists: timestamped snapshot reads + bounded-chain honesty.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_versionlist_snapshot_reads(strategy):
+    spec = VersionSpec(n=4, k=2, depth=3, strategy=strategy, p_max=32)
+    st = vl.init(spec, np.zeros((4, 2), np.uint32))
+    written = {0: {0: [0, 0]}, 1: {0: [0, 0]}}            # slot -> ts -> val
+    for ts in range(1, 7):
+        slot = ts % 2
+        val = [ts, ts * 10]
+        st = vl.publish(spec, st, [slot], [val], [ts])
+        written[slot][ts] = val
+    # every retained (slot, ts) answers exactly; evicted ones refuse
+    for slot in (0, 1):
+        tss = sorted(written[slot])
+        for q_ts in range(0, 8):
+            vals, fts, ok = vl.snapshot_read(spec, st, [slot], [q_ts])
+            want_ts = max((x for x in tss if x <= q_ts), default=None)
+            retained = tss[-spec.depth:]
+            if want_ts is not None and want_ts in retained:
+                assert bool(ok[0]), (slot, q_ts)
+                assert int(fts[0]) == want_ts
+                np.testing.assert_array_equal(np.asarray(vals[0]),
+                                              written[slot][want_ts])
+            else:
+                assert not bool(ok[0]), (slot, q_ts)     # evicted: honest
+
+
+def test_versionlist_multi_slot_snapshot_is_consistent():
+    """snapshot_read of an arbitrary slot SET at one ts returns the values
+    that were all simultaneously newest at that ts."""
+    spec = VersionSpec(n=3, k=1, depth=4, strategy="cached_me", p_max=32)
+    st = vl.init(spec)
+    log = []                               # (ts, snapshot-of-all-slots)
+    state_now = [0, 0, 0]
+    rng = np.random.default_rng(5)
+    for ts in range(1, 9):
+        slot = int(rng.integers(0, 3))
+        state_now[slot] = ts * 100 + slot
+        st = vl.publish(spec, st, [slot], [[state_now[slot]]], [ts])
+        log.append((ts, list(state_now)))
+    for ts, want in log[-3:]:              # within every chain's window
+        vals, _, ok = vl.snapshot_read(spec, st, [0, 1, 2], [ts] * 3)
+        assert bool(np.asarray(ok).all())
+        np.testing.assert_array_equal(np.asarray(vals)[:, 0], want)
+
+
+def test_versionlist_publish_validation():
+    spec = VersionSpec(n=4, k=1, depth=2)
+    st = vl.init(spec)
+    with pytest.raises(ValueError, match="distinct"):
+        vl.publish(spec, st, [1, 1], [[1], [2]], [1, 2])
+    with pytest.raises(ValueError, match="depth"):
+        VersionSpec(n=4, k=1, depth=1)
+
+
+# ---------------------------------------------------------------------------
+# Transactional map: serializable read-set/write-set txns vs MapOracle.
+# ---------------------------------------------------------------------------
+
+def _fn_sum_plus_one(rv, rf):
+    """Write value = sum of the read set + 1 (broadcast over W=1)."""
+    return rv.sum(axis=1, keepdims=True) + 1
+
+
+def _fn_copy_reads(rv, rf):
+    """Write W values = the R read values (requires R == W)."""
+    return rv
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_txn_map_counter_increments_serialize(strategy):
+    """T txns all read-modify-write the SAME key: serializability forces
+    T distinct rounds and a final value of exactly T."""
+    t = 5
+    hs = atomics.HashSpec(16, vw=1, strategy=strategy, p_max=64)
+    state = ch.init_hash(hs)
+    txns = txn_map.make_map_txns(np.full((t, 1), 9, np.uint32),
+                                 np.full((t, 1), 9, np.uint32))
+    state, res = txn_map.transact(hs, state, txns, _fn_sum_plus_one)
+    assert int(res.rounds) == t                     # one commit per round
+    oracle = MapOracle(vw=1)
+    oracle.step_and_check(txns, _fn_sum_plus_one, result=res,
+                          items=ch.items(state, inline=hs.inline, vw=1),
+                          msg=f"counter {strategy}")
+    assert oracle.model[9][0] == t
+
+
+@pytest.mark.parametrize("strategy", LOCKFREE)
+def test_txn_map_random_txns_match_oracle(strategy):
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()) ^ 0xA5)
+    hs = atomics.HashSpec(32, vw=2, strategy=strategy, p_max=128)
+    state = ch.init_hash(hs)
+    oracle = MapOracle(vw=2)
+    t, r, w, key_space = 6, 2, 2, 12
+    for step in range(4):
+        txns = txn_map.make_map_txns(
+            rng.integers(0, key_space, (t, r)).astype(np.uint32),
+            np.stack([rng.choice(key_space, size=w, replace=False)
+                      for _ in range(t)]).astype(np.uint32),
+            read_mask=rng.random((t, r)) < 0.8,
+            write_del=rng.random((t, w)) < 0.25)
+        state, res = txn_map.transact(hs, state, txns, _fn_copy_reads)
+        oracle.step_and_check(
+            txns, _fn_copy_reads, result=res,
+            items=ch.items(state, inline=hs.inline, vw=2),
+            msg=f"map {strategy} step {step}")
+
+
+def test_txn_map_provided_write_values_and_deletes():
+    """fn=None data transactions (the serving bookkeeping shape): deletes
+    + inserts commit atomically with the read set validating."""
+    hs = atomics.HashSpec(16, vw=1, strategy="cached_me", p_max=64)
+    state = ch.init_hash(hs)
+    seed = txn_map.make_map_txns(
+        np.zeros((1, 1), np.uint32), np.asarray([[1, 2, 3]], np.uint32),
+        read_mask=np.zeros((1, 1), bool),
+        write_value=np.asarray([[[10], [20], [30]]], np.uint32))
+    state, _ = txn_map.transact(hs, state, seed, None)
+    txns = txn_map.make_map_txns(
+        np.asarray([[1, 2]], np.uint32), np.asarray([[1, 4]], np.uint32),
+        write_del=np.asarray([[True, False]]),
+        write_value=np.asarray([[[0], [40]]], np.uint32))
+    state, res = txn_map.transact(hs, state, txns, None)
+    items = {k: int(v[0]) for k, v in
+             ch.items(state, inline=hs.inline, vw=1).items()}
+    assert items == {2: 20, 3: 30, 4: 40}
+    np.testing.assert_array_equal(np.asarray(res.read_found)[0], [1, 1])
+    np.testing.assert_array_equal(np.asarray(res.read_value)[0, :, 0],
+                                  [10, 20])
+
+
+def test_txn_map_plugin_strategy():
+    class PlainCloneMap(atomics.StrategyImpl):
+        name = "txnmap_plugin_check"
+
+    atomics.register_strategy(PlainCloneMap(), overwrite=True)
+    try:
+        hs = atomics.HashSpec(16, vw=1, strategy="txnmap_plugin_check",
+                              p_max=64)
+        state = ch.init_hash(hs)
+        t = 4
+        txns = txn_map.make_map_txns(np.full((t, 1), 3, np.uint32),
+                                     np.full((t, 1), 3, np.uint32))
+        state, res = txn_map.transact(hs, state, txns, _fn_sum_plus_one)
+        oracle = MapOracle(vw=1)
+        oracle.step_and_check(txns, _fn_sum_plus_one, result=res,
+                              items=ch.items(state, inline=True, vw=1),
+                              msg="map plugin")
+    finally:
+        atomics.unregister_strategy("txnmap_plugin_check")
+
+
+def test_make_map_txns_validation():
+    with pytest.raises(ValueError, match="duplicate keys"):
+        txn_map.make_map_txns(np.zeros((1, 1), np.uint32),
+                              np.asarray([[5, 5]], np.uint32))
+    with pytest.raises(ValueError, match="rank-2"):
+        txn_map.make_map_txns(np.zeros((2,), np.uint32),
+                              np.zeros((2, 1), np.uint32))
+    with pytest.raises(ValueError, match="txn counts"):
+        txn_map.make_map_txns(np.zeros((2, 1), np.uint32),
+                              np.zeros((3, 1), np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Facade: the txn layer is reachable from repro.atomics.
+# ---------------------------------------------------------------------------
+
+def test_atomics_facade_exports_txn_layer():
+    assert atomics.mcas is txn_mcas.mcas
+    assert atomics.make_txns is txn_mcas.make_txns
+    assert atomics.TxnBatch is txn_mcas.TxnBatch
+    assert atomics.VersionSpec is VersionSpec
+    assert atomics.txn.transact is txn_map.transact
+    assert hasattr(atomics.dist, "mcas")
