@@ -1,0 +1,146 @@
+"""The perf-regression baseline: a fixed, machine-readable benchmark subset.
+
+`python -m benchmarks.run --baseline [--out BENCH_N.json]` runs this suite
+and writes one JSON document; `python -m benchmarks.compare OLD NEW` diffs
+two such documents and fails on >threshold regressions.  The committed
+`BENCH_<pr>.json` at the repo root is the contract every future PR is held
+to (ISSUE 5): CI regenerates the suite and reports the diff as a
+non-blocking step.
+
+Sizes are FIXED (small enough for a CI runner) and independent of --quick,
+so baselines are comparable across commits; --quick only trims repetitions.
+Every row carries a stable `name` key (suite/scenario/strategy) used by
+compare.py to match rows across files, `ops_s`-class throughput metrics
+(higher is better) and `dispatches`-class cost metrics (lower is better).
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import sys
+
+SCHEMA = 1
+
+# Fixed baseline shapes: small enough for CI, large enough to resolve the
+# fast-path / slow-path gap above timer noise (the sort+scan cost the fast
+# path elides grows with p, so the uncontended cells use the larger batch;
+# the all-same-slot cell serializes into p combining rounds, so it keeps a
+# smaller one to bound wall-clock).
+ATOMICS_N, ATOMICS_K, ATOMICS_P = 1 << 14, 4, 8192
+ATOMICS_P_CONTENDED = 1024
+TXN_N, TXN_K = 1 << 10, 2
+
+
+def _atomics_suite(reps: int):
+    from benchmarks import bench_atomics
+
+    rows = []
+    for scenario in bench_atomics.FASTPATH_SCENARIOS:
+        p = (ATOMICS_P_CONTENDED if scenario == "cas_all_same_slot"
+             else ATOMICS_P)
+        for strategy in ("seqlock", "cached_me"):
+            # Fast-path cells are ~ms-scale: take more reps so the committed
+            # medians are stable on noisy shared runners.
+            cell = bench_atomics.run_fastpath_cell(
+                strategy, scenario, n=ATOMICS_N, k=ATOMICS_K, p=p,
+                reps=max(reps, 11))
+            rows.append({
+                "name": f"atomics/{scenario}/{strategy}",
+                "ops_s": cell["mops_s_fused"] * 1e6,
+                "ops_s_linearize": cell["mops_s_linearize"] * 1e6,
+                "rounds": cell["rounds"],
+            })
+    for strategy in ("indirect", "cached_me"):
+        cell = bench_atomics.run_cell(
+            strategy, n=ATOMICS_N, k=ATOMICS_K, p=ATOMICS_P, u=0.2, z=0.0,
+            reps=reps)
+        rows.append({
+            "name": f"atomics/u0.2_z0/{strategy}",
+            "ops_s": cell["mops_s"] * 1e6,
+            "bytes_op": cell["bytes_op"],
+            "dep_chains": cell["dep_chains"],
+        })
+    return rows
+
+
+def _txn_suite(reps: int):
+    import numpy as np
+
+    from benchmarks.common import time_op
+    from repro import atomics
+
+    rows = []
+    for t, w, contention in ((64, 4, "low"), (64, 4, "high")):
+        rng = np.random.default_rng(0)
+        spec = atomics.AtomicSpec(TXN_N, TXN_K, "cached_me", p_max=t * w)
+        state = atomics.init(spec)
+        hi = TXN_N if contention == "low" else 4 * w
+        slots = np.stack([rng.choice(hi, w, replace=False)
+                          for _ in range(t)]).astype(np.int32)
+        txns = atomics.make_txns(
+            slots,
+            expected=np.zeros((t, w, TXN_K), np.uint32),
+            desired=rng.integers(0, 2 ** 32, (t, w, TXN_K), dtype=np.uint32),
+            k=TXN_K)
+
+        def step(state, txns):
+            return atomics.mcas(spec, state, txns)
+
+        dt, (st2, res) = time_op(step, state, txns, reps=reps)
+        rows.append({
+            "name": f"txn/mcas_w{w}_{contention}/cached_me",
+            "ops_s": t / dt,
+            "rounds": int(res.rounds),
+            "commit_frac": float(np.mean(np.asarray(res.success))),
+        })
+    return rows
+
+
+def _serving_suite(reps: int):
+    from benchmarks import bench_atomics
+
+    rows = []
+    cells = bench_atomics.bench_fused_serving(quick=True)
+    for cell in cells:
+        tag = "fused" if cell["mode"] == "fused" else "v1"
+        rows.append({
+            "name": f"serving/decode_{tag}",
+            "ops_s": cell["steps_s"],
+            "dispatches": cell["dispatches_step"],
+        })
+    return rows
+
+
+def run_baseline(out_path: str, quick: bool = False) -> dict:
+    reps = 2 if quick else 5
+    doc = {
+        "schema": SCHEMA,
+        "config": {
+            "python": sys.version.split()[0],
+            "platform": platform.machine(),
+            "atomics": {"n": ATOMICS_N, "k": ATOMICS_K, "p": ATOMICS_P,
+                        "p_contended": ATOMICS_P_CONTENDED},
+            "txn": {"n": TXN_N, "k": TXN_K},
+            "reps": reps,
+        },
+        "suites": {},
+    }
+    import jax
+    doc["config"]["jax"] = jax.__version__
+    doc["config"]["backend"] = jax.default_backend()
+
+    doc["suites"]["atomics"] = _atomics_suite(reps)
+    doc["suites"]["txn"] = _txn_suite(reps)
+    try:
+        doc["suites"]["serving"] = _serving_suite(reps)
+    except Exception as e:                 # model deps are optional here
+        print(f"[baseline] serving suite skipped: {e!r}")
+        doc["suites"]["serving"] = []
+
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+        f.write("\n")
+    n_rows = sum(len(v) for v in doc["suites"].values())
+    print(f"[baseline] wrote {n_rows} rows to {out_path}")
+    return doc

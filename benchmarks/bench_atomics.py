@@ -23,6 +23,7 @@ v2 additions:
 
 from __future__ import annotations
 
+import functools
 import time
 
 import numpy as np
@@ -125,6 +126,120 @@ def sweep_mixed(*, quick=False, strategies=None):
     return rows
 
 
+@functools.lru_cache(maxsize=None)
+def _pure_xla_step_fn():
+    """The pre-ISSUE-5 engine: every batch through `linearize` (sort + scans
+    + combining-round while_loop), bypassing the strategy's lowered round."""
+    import jax
+
+    from repro.core import engine
+
+    @functools.partial(jax.jit, static_argnames=("spec",))
+    def step(spec, state, ops):
+        impl = atomics.get_strategy(spec.strategy)
+        nd, nv, _, res, stats = engine.linearize(
+            impl.engine_view(state), state.version,
+            engine.init_ctx(ops.p, spec.k), ops)
+        new_state = impl.commit(state, nd, nv, stats.n_updates, ops.p)
+        return new_state, res, stats
+
+    return step
+
+
+def _pure_xla_step(spec, state, ops):
+    return _pure_xla_step_fn()(spec, state, ops)
+
+
+def _fastpath_batch(rng, *, n, k, p, scenario):
+    """The ISSUE-5 acceptance scenarios: uncontended load / CAS batches
+    (the fast path) and the all-same-slot worst case (the slow path)."""
+    slots = rng.choice(n, p, replace=False).astype(np.int32)
+    if scenario == "load_uncontended":
+        kind = np.full(p, atomics.LOAD, np.int32)
+    elif scenario == "cas_uncontended":
+        kind = np.full(p, atomics.CAS, np.int32)
+    elif scenario == "mixed_uncontended":
+        kind = rng.choice(np.asarray(
+            [atomics.LOAD, atomics.STORE, atomics.CAS]), p).astype(np.int32)
+    elif scenario == "cas_all_same_slot":
+        kind = np.full(p, atomics.CAS, np.int32)
+        slots = np.full(p, slots[0], np.int32)
+    else:
+        raise ValueError(scenario)
+    expected = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    desired = rng.integers(0, 2 ** 32, (p, k), dtype=np.uint32)
+    return atomics.make_ops(kind, slots, expected, desired, k=k)
+
+
+def run_fastpath_cell(strategy, scenario, *, n, k, p, reps=5, seed=0):
+    """One scenario timed through BOTH engines: the fused round (runtime
+    fast/slow dispatch, `atomics.apply`) and the pure-XLA `linearize`."""
+    rng = np.random.default_rng(seed)
+    spec = atomics.AtomicSpec(n, k, strategy, p_max=p)
+    state0 = atomics.init(spec)
+    ops = _fastpath_batch(rng, n=n, k=k, p=p, scenario=scenario)
+    # half the CAS lanes succeed so the write path is truly exercised
+    cur = np.asarray(atomics.logical(spec, state0))
+    exp = np.array(ops.expected, copy=True)
+    sl = np.asarray(ops.slot)
+    for i in range(0, p, 2):
+        exp[i] = cur[sl[i]]
+    ops = atomics.OpBatch(ops.kind, ops.slot, exp, ops.desired)
+
+    def fused(state, ops):
+        new_state, _, res, stats, _ = atomics.apply(spec, state, ops)
+        return new_state, res, stats
+
+    # Interleave the two arms' repetitions: shared-runner clock drift is
+    # larger than the effect under test, and pairing cancels it.
+    import time as _time
+
+    import jax
+
+    for _ in range(2):                                    # warmup both arms
+        jax.block_until_ready(fused(state0, ops))
+        jax.block_until_ready(_pure_xla_step(spec, state0, ops))
+    ts_f, ts_x = [], []
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        out_f = fused(state0, ops)
+        jax.block_until_ready(out_f)
+        ts_f.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        out_x = _pure_xla_step(spec, state0, ops)
+        jax.block_until_ready(out_x)
+        ts_x.append(_time.perf_counter() - t0)
+    dt_f, dt_x = float(np.median(ts_f)), float(np.median(ts_x))
+    _, _, stats = out_f
+    return {
+        "strategy": strategy, "scenario": scenario, "n": n, "k": k, "p": p,
+        "mops_s_fused": p / dt_f / 1e6,
+        "mops_s_linearize": p / dt_x / 1e6,
+        "speedup": dt_x / dt_f,
+        "rounds": int(stats.rounds),
+    }
+
+
+FASTPATH_SCENARIOS = ["load_uncontended", "cas_uncontended",
+                      "mixed_uncontended", "cas_all_same_slot"]
+
+
+def sweep_fastpath(*, quick=False, strategies=None):
+    strategies = strategies or ["seqlock", "cached_me"]
+    n = 1 << 12 if quick else 1 << 14
+    p = 1024 if quick else 8192
+    # all-same-slot serializes into p combining rounds; cap its batch so the
+    # worst-case cell stays seconds, not minutes
+    p_contended = min(p, 1024)
+    rows = []
+    for scenario in FASTPATH_SCENARIOS:
+        for s in strategies:
+            rows.append(run_fastpath_cell(
+                s, scenario, n=n, k=4,
+                p=p_contended if scenario == "cas_all_same_slot" else p))
+    return rows
+
+
 def bench_fused_serving(quick: bool = False):
     """Dispatch-count / wall-clock delta from jitting the fused serving step:
     the same decode workload through the v1 4-dispatch path and the v2
@@ -205,6 +320,22 @@ def main(quick: bool = False):
                 "(one unified apply)", all_rows["mixed"],
                 ["strategy", "sync_frac", "mops_s", "rounds", "writes",
                  "bytes_op"])
+    all_rows["fastpath"] = sweep_fastpath(quick=quick)
+    print_table("Fused engine round vs pure-XLA linearize (ISSUE 5)",
+                all_rows["fastpath"],
+                ["strategy", "scenario", "mops_s_fused", "mops_s_linearize",
+                 "speedup", "rounds"])
+    fp = [r for r in all_rows["fastpath"]
+          if r["scenario"] != "cas_all_same_slot"]
+    sl = [r for r in all_rows["fastpath"]
+          if r["scenario"] == "cas_all_same_slot"]
+    fp_speed = float(np.mean([r["speedup"] for r in fp]))
+    sl_speed = float(np.mean([r["speedup"] for r in sl]))
+    print(f"\n[check] fast path speedup on uncontended batches: "
+          f"{fp_speed:.2f}x -> {'OK' if fp_speed > 1 else 'UNEXPECTED'}")
+    print(f"[check] all-same-slot speedup (>=~1 expected, the predicate "
+          f"must not cost): {sl_speed:.2f}x -> "
+          f"{'OK' if sl_speed > 0.9 else 'UNEXPECTED'}")
     try:
         all_rows["fused_serving"] = bench_fused_serving(quick=quick)
         print_table("Fused serving decode step: v1 4-dispatch vs one "

@@ -1,0 +1,110 @@
+"""Diff two perf baselines; fail on regression.
+
+  python -m benchmarks.compare BENCH_5.json new.json [--threshold 0.10]
+
+Rows are matched across files by their stable `name` key.  Metrics are
+classed by name: `ops_s*` are throughputs (regression = NEW below OLD by
+more than the threshold fraction), `dispatches*` are per-step costs
+(regression = NEW above OLD by more than the threshold — dispatch counts
+are deterministic, so even small increases are real).  Everything else is
+informational.  Exit status 1 iff any regression; CI runs this as a
+non-blocking report step, humans run it before merging perf-sensitive PRs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        raise SystemExit(f"{path}: unknown baseline schema "
+                         f"{doc.get('schema')!r}")
+    return doc
+
+
+def rows_by_name(doc: dict) -> dict:
+    out = {}
+    for suite, rows in doc.get("suites", {}).items():
+        for row in rows:
+            out[row["name"]] = row
+    return out
+
+
+def classify(metric: str) -> str:
+    if metric.startswith("ops_s"):
+        return "throughput"
+    if metric.startswith("dispatches"):
+        return "cost"
+    return "info"
+
+
+def compare(old: dict, new: dict, threshold: float):
+    """Yields (name, metric, old, new, delta_frac, verdict)."""
+    old_rows = rows_by_name(old)
+    new_rows = rows_by_name(new)
+    for name in sorted(old_rows):
+        o = old_rows[name]
+        n = new_rows.get(name)
+        if n is None:
+            yield (name, "-", None, None, None, "MISSING")
+            continue
+        for metric, oval in o.items():
+            if metric == "name" or not isinstance(oval, (int, float)):
+                continue
+            nval = n.get(metric)
+            if nval is None:
+                continue
+            kind = classify(metric)
+            if kind == "info":
+                continue
+            if oval == 0:
+                delta = 0.0 if nval == 0 else float("inf")
+            else:
+                delta = (nval - oval) / abs(oval)
+            if kind == "throughput":
+                verdict = "REGRESSION" if delta < -threshold else "ok"
+            else:                                   # cost
+                verdict = "REGRESSION" if delta > threshold else "ok"
+            yield (name, metric, oval, nval, delta, verdict)
+    for name in sorted(set(new_rows) - set(old_rows)):
+        yield (name, "-", None, None, None, "NEW")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="reference baseline (e.g. BENCH_5.json)")
+    ap.add_argument("new", help="freshly generated baseline")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="regression threshold as a fraction (default 0.10)")
+    args = ap.parse_args(argv)
+
+    old, new = load(args.old), load(args.new)
+    regressions = 0
+    print(f"{'row':44s} {'metric':14s} {'old':>12s} {'new':>12s} "
+          f"{'delta':>8s}  verdict")
+    for name, metric, oval, nval, delta, verdict in compare(
+            old, new, args.threshold):
+        if verdict in ("MISSING", "NEW"):
+            print(f"{name:44s} {'-':14s} {'-':>12s} {'-':>12s} "
+                  f"{'-':>8s}  {verdict}")
+            regressions += verdict == "MISSING"
+            continue
+        if verdict == "REGRESSION":
+            regressions += 1
+        print(f"{name:44s} {metric:14s} {oval:12.4g} {nval:12.4g} "
+              f"{delta:+8.1%}  {verdict}")
+    if regressions:
+        print(f"\n{regressions} regression(s) beyond "
+              f"{args.threshold:.0%} vs {args.old}")
+        return 1
+    print(f"\nno regressions beyond {args.threshold:.0%} vs {args.old}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,17 @@
 framework's roofline report.
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run --baseline [--out BENCH_N.json]
 
 --quick shrinks sizes for CI; default finishes in a few minutes on one CPU
 core.  Results land in benchmarks/results/*.json.
+
+--baseline runs the FIXED machine-readable perf-regression suite
+(benchmarks/baseline.py: atomics fast-path cells, txn MCAS cells, serving
+dispatch counts) and writes one JSON document; diff two of them with
+`python -m benchmarks.compare OLD NEW` (fails on >10% regression).  The
+committed BENCH_<pr>.json at the repo root is the reference every PR is
+held to.
 """
 
 from __future__ import annotations
@@ -25,8 +33,17 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip", default="", help="comma-list to skip")
+    ap.add_argument("--baseline", action="store_true",
+                    help="run the fixed perf-regression suite and exit")
+    ap.add_argument("--out", default="BENCH_baseline.json",
+                    help="output path for --baseline")
     args, _ = ap.parse_known_args()
     skip = set(s for s in args.skip.split(",") if s)
+
+    if args.baseline:
+        from benchmarks.baseline import run_baseline
+        run_baseline(args.out, quick=args.quick)
+        return
 
     benches = [
         ("atomics (Fig 2)", bench_atomics.main),

@@ -2,3 +2,7 @@ from repro.analysis.hlo import (  # noqa: F401
     HloCost, analyze_hlo, parse_computations, roofline_terms,
     TPU_V5E,
 )
+from repro.analysis import tracing  # noqa: F401
+from repro.analysis.tracing import (  # noqa: F401
+    assert_max_new_traces, cache_entries, counting,
+)

@@ -1,0 +1,70 @@
+"""Trace/compile counters: make silent retracing a test failure.
+
+`jax.jit` retraces whenever an argument's *abstract* signature changes —
+a weak-typed scalar vs a committed int32, a numpy int64 batch vs the jnp
+int32 one, a `None` ctx vs a concrete one.  Each retrace silently
+recompiles and doubles dispatch latency; for the engine hot round (ISSUE 5)
+a weakly-varying `OpBatch`/`LinkCtx` leaf meant one full recompile per
+call site.  These helpers read the jitted function's compilation-cache
+size so tests can pin the trace count:
+
+    with tracing.assert_max_new_traces(engine._apply, 1):
+        atomics.apply(spec, state, ops_a)      # first call: 1 trace
+        atomics.apply(spec, state, ops_b)      # same signature: 0 traces
+
+`cache_entries` works on anything produced by `jax.jit` (including
+`functools.partial(jax.jit, ...)` application).  For plain functions that
+are traced *inside* another jit, `counting(fn)` wraps the Python callable —
+its body only runs while tracing, so the wrapper's counter IS the trace
+count.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+
+def cache_entries(jitted) -> int:
+    """Number of compiled entries in a jitted function's cache (one per
+    distinct abstract signature seen)."""
+    try:
+        return jitted._cache_size()
+    except AttributeError as e:
+        raise TypeError(
+            f"{jitted!r} has no compilation cache; pass the object returned "
+            "by jax.jit (or use tracing.counting for plain functions)"
+        ) from e
+
+
+@contextlib.contextmanager
+def assert_max_new_traces(jitted, n: int):
+    """Fail if the block adds more than `n` entries to the jit cache."""
+    before = cache_entries(jitted)
+    yield
+    added = cache_entries(jitted) - before
+    assert added <= n, (
+        f"{added} new traces of {getattr(jitted, '__name__', jitted)!r} "
+        f"(allowed {n}) — an argument's dtype/weak-type/shape is varying "
+        "between calls; canonicalize it (see engine.canonicalize_ops)")
+
+
+class TraceCounter:
+    """Counts executions of a function's Python body (= times traced when
+    the function is only ever called under `jax.jit`)."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+
+def counting(fn: Callable) -> tuple[Callable, TraceCounter]:
+    """Wrap `fn` so each trace of its body increments a counter.  Wrap
+    BEFORE jitting: `jit_fn = jax.jit(counting(fn)[0])`."""
+    counter = TraceCounter()
+
+    def wrapper(*args, **kwargs):
+        counter.count += 1
+        return fn(*args, **kwargs)
+
+    wrapper.__name__ = getattr(fn, "__name__", "wrapped")
+    return wrapper, counter

@@ -261,6 +261,21 @@ def _apply_hash(spec: HashSpec, state: HashState, ops: engine.OpBatch):
         return dict(cell=cell, is_empty=is_empty, found_depth=found_depth,
                     vis=vis, steps=steps, overflow=overflow)
 
+    def found_value(w, pool):
+        """(found node index, found value) from a walk result: the inlined
+        first link when found_depth == 0, else the pool node at that depth.
+        THE one definition of FIND value extraction, shared by the round
+        loop and the probe fast path."""
+        fd = w["found_depth"]
+        node_at_fd = w["vis"][lanes, jnp.clip(fd - 1, 0, max_chain - 1)]
+        if inline:
+            inline_val = w["cell"][:, 1:1 + vw]
+        else:
+            inline_val = jnp.zeros((q, vw), sem.WORD_DTYPE)
+        pool_val = pool[jnp.maximum(node_at_fd, 0), 1:1 + vw]
+        return node_at_fd, jnp.where((fd == 0)[:, None], inline_val,
+                                     pool_val)
+
     def round_body(carry):
         (t, data, ver, pool, ring, head, tail, count,
          r_found, r_value, r_over, chain_steps, inline_hits,
@@ -278,13 +293,7 @@ def _apply_hash(spec: HashSpec, state: HashState, ops: engine.OpBatch):
 
         # ---- FIND ----------------------------------------------------------
         f_live = live & (s_kind == engine.FIND)
-        node_at_fd = vis[lanes, jnp.clip(fd - 1, 0, max_chain - 1)]
-        if inline:
-            inline_val = cell[:, 1:1 + vw]
-        else:
-            inline_val = jnp.zeros((q, vw), sem.WORD_DTYPE)
-        pool_val = pool[jnp.maximum(node_at_fd, 0), 1:1 + vw]
-        fval = jnp.where((fd == 0)[:, None], inline_val, pool_val)
+        node_at_fd, fval = found_value(w, pool)
         r_value = jnp.where((f_live & found)[:, None], fval, r_value)
         r_found = jnp.where(f_live, found, r_found)
 
@@ -403,9 +412,39 @@ def _apply_hash(spec: HashSpec, state: HashState, ops: engine.OpBatch):
                   jnp.zeros((q,), bool), jnp.zeros((q, vw), sem.WORD_DTYPE),
                   jnp.zeros((q,), bool), jnp.int32(0), jnp.int32(0),
                   jnp.uint32(0), jnp.uint32(0))
-    out = lax.while_loop(lambda c: c[0] < n_rounds, round_body, init_carry)
-    (_, data, ver, pool, ring, head, tail, count,
-     r_found, r_value, r_over, chain_steps, inline_hits, allocs, frees) = out
+
+    def _mutating():
+        """The full path: L = max-ops-per-bucket serialization rounds."""
+        out = lax.while_loop(lambda c: c[0] < n_rounds, round_body,
+                             init_carry)
+        return out[1:]
+
+    def _find_only():
+        """The probe fast path (the hash analogue of the engine's fast
+        round, DESIGN.md §8): FINDs commute even on the same bucket, so a
+        mutation-free batch is ONE chain walk over the live table — no
+        round loop, no alloc/retire scatter machinery, state untouched."""
+        w = walk(state.table.data, state.pool, s_bucket, s_key)
+        fd = w["found_depth"]
+        found = fd >= 0
+        live = active[order] & (s_bucket < nb)
+        f_live = live & (s_kind == engine.FIND)
+        _, fval = found_value(w, state.pool)
+        r_value = jnp.where((f_live & found)[:, None], fval,
+                            jnp.zeros((q, vw), sem.WORD_DTYPE))
+        chain_steps = jnp.sum(jnp.where(live, w["steps"], 0))
+        inline_hits = jnp.sum(
+            (live & ((fd == 0) | w["is_empty"])).astype(jnp.int32))
+        return (state.table.data, state.table.version, state.pool,
+                state.free_ring, state.ring_head, state.ring_tail,
+                state.count, f_live & found, r_value, live & w["overflow"],
+                chain_steps, inline_hits, jnp.uint32(0), jnp.uint32(0))
+
+    has_mut = jnp.any(active & ((ops.kind == engine.INSERT)
+                                | (ops.kind == engine.DELETE)))
+    (data, ver, pool, ring, head, tail, count,
+     r_found, r_value, r_over, chain_steps, inline_hits, allocs, frees) = \
+        lax.cond(has_mut, _mutating, _find_only)
 
     n_upd = ((ver - state.table.version) // 2).sum().astype(jnp.int32)
     table = ba.commit_layout(state.table, data, ver, n_upd,

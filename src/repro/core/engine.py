@@ -26,6 +26,13 @@ closed form, ONE round, instead of the L-round combining loop.
 (an `AtomicSpec`) is the only static argument; layout maintenance and the
 traffic model dispatch through the strategy registry, so new layouts plug in
 without touching this file.
+
+Execution is two-tier since ISSUE 5 (DESIGN.md §8): `linearize` below is the
+pure-XLA *reference* executor, and `round_for(spec)` swaps in the strategy's
+lowered fused round (`repro.kernels.engine_round` — a runtime fast path for
+collision-free batches, a single-pass sequential-replay kernel for contended
+ones) whenever the layout provides one.  Every result remains bit-identical
+to `linearize`, which remains bit-identical to `apply_ops_reference`.
 """
 
 from __future__ import annotations
@@ -285,6 +292,45 @@ def _seg_broadcast_any(flags: jax.Array, seg_end: jax.Array) -> jax.Array:
     return jnp.flip(rev) > 0
 
 
+def stats_on_sorted(n: int, s_slot, s_kind, succ_s) -> ApplyStats:
+    """`ApplyStats` from the (slot, lane)-sorted order — THE single
+    definition, shared by `linearize` and the fused kernel round
+    (`repro.kernels.engine_round`), so the two can never drift.
+
+    succ_s is per-lane update success in sorted order (meaningful for
+    STORE/CAS/SC lanes; the closed `rounds` form below equals what the
+    general/pure-sync execution branches would report)."""
+    p = s_slot.shape[0]
+    idx = jnp.arange(p, dtype=jnp.int32)
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), s_slot[1:] != s_slot[:-1]])
+    seg_end = jnp.concatenate([seg_start[1:], jnp.ones((1,), bool)])
+    start_idx = _segmented_scan_max(jnp.where(seg_start, idx, -1), seg_start)
+    is_valcas = (s_kind == STORE) | (s_kind == CAS)
+    is_sc = (s_kind == SC) & (s_slot < n)
+    is_upd = is_valcas | is_sc
+    is_read = (s_kind == LOAD) | (s_kind == LL)
+    cum_upd = jnp.cumsum(is_upd.astype(jnp.int32))
+    excl_upd = cum_upd - is_upd.astype(jnp.int32)
+    upd_rank = excl_upd - excl_upd[start_idx]
+    n_rounds = jnp.where(jnp.any(is_upd),
+                         jnp.max(jnp.where(is_upd, upd_rank, -1)) + 1, 0)
+    wrote = is_valcas | (is_sc & succ_s)
+    seg_any_wrote = _seg_broadcast_any(wrote, seg_end)
+    seg_any_succ = _seg_broadcast_any(succ_s & is_upd, seg_end)
+    return ApplyStats(
+        rounds=jnp.where(jnp.any(is_valcas), n_rounds,
+                         jnp.where(jnp.any(is_sc), 1, 0)).astype(jnp.int32),
+        n_updates=jnp.sum(wrote.astype(jnp.int32)),
+        n_loads=jnp.sum(is_read.astype(jnp.int32)),
+        n_cas_fail=jnp.sum((((s_kind == CAS) | is_sc) & ~succ_s)
+                           .astype(jnp.int32)),
+        n_raced_loads=jnp.sum((is_read & seg_any_wrote).astype(jnp.int32)),
+        n_dirty_cells=jnp.sum((seg_start & seg_any_succ & (s_slot < n))
+                              .astype(jnp.int32)),
+    )
+
+
 @jax.jit
 def linearize(data: jax.Array, version: jax.Array, ctx: LinkCtx,
               ops: OpBatch):
@@ -315,7 +361,6 @@ def linearize(data: jax.Array, version: jax.Array, ctx: LinkCtx,
     idx = jnp.arange(p, dtype=jnp.int32)
     seg_start = jnp.concatenate(
         [jnp.ones((1,), bool), s_slot[1:] != s_slot[:-1]])
-    seg_end = jnp.concatenate([seg_start[1:], jnp.ones((1,), bool)])
     start_idx = _segmented_scan_max(jnp.where(seg_start, idx, -1), seg_start)
 
     is_valcas = (s_kind == STORE) | (s_kind == CAS)
@@ -382,7 +427,7 @@ def linearize(data: jax.Array, version: jax.Array, ctx: LinkCtx,
                            ver0)
         val_s = jnp.where(is_upd[:, None], witness, val_pt)
         verpt_s = jnp.where(is_upd, wver, ver_pt)
-        return data, version, val_s, verpt_s, succ, n_rounds
+        return data, version, val_s, verpt_s, succ
 
     def _fast(data, version):
         """One-round closed form for batches without STORE/CAS lanes: every
@@ -403,10 +448,9 @@ def linearize(data: jax.Array, version: jax.Array, ctx: LinkCtx,
         w_idx = jnp.where(win, s_slot, n)
         new_data = data.at[w_idx].set(s_desired, mode="drop")
         new_version = version.at[w_idx].add(jnp.uint32(2), mode="drop")
-        rounds = jnp.where(jnp.any(is_sc), 1, 0).astype(jnp.int32)
-        return new_data, new_version, val_s, verpt_s, win, rounds
+        return new_data, new_version, val_s, verpt_s, win
 
-    new_data, new_version, val_s, verpt_s, succ_s, rounds = lax.cond(
+    new_data, new_version, val_s, verpt_s, succ_s = lax.cond(
         jnp.any(is_valcas), _general, _fast, data, version)
 
     # --- per-lane results ---------------------------------------------------
@@ -429,21 +473,8 @@ def linearize(data: jax.Array, version: jax.Array, ctx: LinkCtx,
     new_ctx = LinkCtx(n_slot[inv], n_ver[inv], n_val[inv], n_lnk[inv])
     result = ApplyResult(s_value[inv], s_success[inv])
 
-    # --- stats ---------------------------------------------------------------
-    wrote = is_valcas | (is_sc & succ_s)
-    seg_any_wrote = _seg_broadcast_any(wrote, seg_end)
-    seg_any_succ = _seg_broadcast_any(succ_s & is_upd, seg_end)
-    raced_load = is_read & seg_any_wrote
-    stats = ApplyStats(
-        rounds=rounds,
-        n_updates=jnp.sum(wrote.astype(jnp.int32)),
-        n_loads=jnp.sum(is_read.astype(jnp.int32)),
-        n_cas_fail=jnp.sum((((s_kind == CAS) | is_sc) & ~succ_s)
-                           .astype(jnp.int32)),
-        n_raced_loads=jnp.sum(raced_load.astype(jnp.int32)),
-        n_dirty_cells=jnp.sum((seg_start & seg_any_succ & (s_slot < n))
-                              .astype(jnp.int32)),
-    )
+    # --- stats (the shared sorted-order definition) --------------------------
+    stats = stats_on_sorted(n, s_slot, s_kind, succ_s)
     return new_data, new_version, new_ctx, result, stats
 
 
@@ -489,6 +520,51 @@ def arbitrate_groups(slot, group, eligible, *, n: int, n_groups: int):
 
 
 # ---------------------------------------------------------------------------
+# Round lowering: strategies may swap `linearize` for a fused kernel round.
+# ---------------------------------------------------------------------------
+
+def _engine_round():
+    from repro.kernels import engine_round  # lazy: kernels import engine
+    return engine_round
+
+
+def round_for(spec: AtomicSpec, impl=None, mode: str | None = None):
+    """The execution round for `spec`: the strategy's lowered kernel round
+    (DESIGN.md §8) when it provides one and the engine-kernel mode allows
+    it, else the pure-XLA `linearize`.  The returned callable has the exact
+    `linearize` signature and is resolved at trace time (spec is static).
+
+    Jitted callers must thread `mode` through as a static argument (see
+    `_apply`) so a mid-process BIGATOMIC_ENGINE_KERNEL change can never hit
+    a stale trace of the other engine."""
+    mode, interpret = _engine_round().resolved_mode(mode)
+    if mode == "off":
+        return linearize
+    if impl is None:
+        impl = registry.get_strategy(spec.strategy)
+    lowered = impl.lower_round(spec, mode=mode, interpret=interpret)
+    return linearize if lowered is None else lowered
+
+
+def canonicalize_ops(ops: OpBatch) -> OpBatch:
+    """Coerce an op batch to the canonical dtypes (int32 kinds/slots, uint32
+    words, no weak types) so equal-shaped batches can never retrace the
+    jitted round (tests/test_engine_round.py asserts this with the
+    `repro.analysis.tracing` counter)."""
+    return OpBatch(jnp.asarray(ops.kind, jnp.int32),
+                   jnp.asarray(ops.slot, jnp.int32),
+                   jnp.asarray(ops.expected, WORD_DTYPE),
+                   jnp.asarray(ops.desired, WORD_DTYPE))
+
+
+def canonicalize_ctx(ctx: LinkCtx) -> LinkCtx:
+    return LinkCtx(jnp.asarray(ctx.slot, jnp.int32),
+                   jnp.asarray(ctx.version, jnp.uint32),
+                   jnp.asarray(ctx.value, WORD_DTYPE),
+                   jnp.asarray(ctx.linked, bool))
+
+
+# ---------------------------------------------------------------------------
 # The single public entry point: apply(spec, state, ops [, ctx]).
 # ---------------------------------------------------------------------------
 
@@ -505,12 +581,13 @@ def check_kinds(kind, allowed, what: str) -> None:
                          f"(allowed: {sorted(allowed)})")
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None):
+def _apply_impl(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None,
+                mode: str):
     impl = registry.get_strategy(spec.strategy)
     if ctx is None:
         ctx = init_ctx(ops.p, spec.k)
-    new_data, new_version, new_ctx, result, stats = linearize(
+    round_fn = round_for(spec, impl, mode)
+    new_data, new_version, new_ctx, result, stats = round_fn(
         impl.engine_view(state), state.version, ctx, ops)
     new_state = impl.commit(state, new_data, new_version,
                             stats.n_updates, ops.p)
@@ -518,7 +595,22 @@ def _apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None):
     return new_state, new_ctx, result, stats, traffic
 
 
-def apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None = None):
+# The engine-kernel mode rides the jit cache key, so flipping
+# BIGATOMIC_ENGINE_KERNEL mid-process retraces instead of silently reusing
+# the other engine's compiled round.
+_apply = functools.partial(jax.jit,
+                           static_argnames=("spec", "mode"))(_apply_impl)
+# Donating twin: hands the state buffers to XLA so the round updates them in
+# place instead of copying the table once per call.  Correct only when the
+# caller treats the passed state as dead; `apply(donate=True)` routes here
+# (off-CPU only — the CPU runtime cannot donate and would warn every call).
+_apply_donated = functools.partial(
+    jax.jit, static_argnames=("spec", "mode"),
+    donate_argnums=(1,))(_apply_impl)
+
+
+def apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None = None,
+          *, donate: bool = False):
     """Linearize `ops` against the table; maintain the strategy's layout.
 
     `spec` is the only static argument; `state`, `ops` and `ctx` are pure
@@ -527,9 +619,22 @@ def apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None = None):
     for batches without LL/SC/VALIDATE lanes.  Hash kinds (FIND/INSERT/
     DELETE) belong to `cachehash.apply_hash`, not here.
 
+    Op/ctx leaves are canonicalized (int32 kinds/slots, uint32 words) before
+    dispatch, so differently-typed but equal-shaped batches reuse one trace.
+    `donate=True` additionally donates the state buffers to the jitted
+    round (one fewer full table copy per call); the passed `state` must not
+    be reused afterwards.  Donation is skipped on CPU backends, which
+    cannot donate.
+
     Returns (state', ctx', ApplyResult, ApplyStats, Traffic)."""
     check_kinds(ops.kind, TABLE_KINDS, "table")
-    return _apply(spec, state, ops, ctx)
+    ops = canonicalize_ops(ops)
+    if ctx is not None:
+        ctx = canonicalize_ctx(ctx)
+    mode = _engine_round().configured_mode()
+    if donate and jax.default_backend() != "cpu":
+        return _apply_donated(spec, state, ops, ctx, mode)
+    return _apply(spec, state, ops, ctx, mode)
 
 
 def init(spec: AtomicSpec, initial=None):

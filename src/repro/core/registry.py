@@ -86,6 +86,19 @@ class StrategyImpl:
         must retry — see `bigatomic.read_protocol` for the full contract."""
         return state.data[slots], jnp.ones((slots.shape[0],), bool)
 
+    def lower_round(self, spec, *, mode: str, interpret: bool):
+        """Hand the engine a fused execution round for this layout, or None.
+
+        Called at trace time by `engine.round_for` with the resolved
+        engine-kernel mode ('pallas' or 'xla'; 'off' never reaches here) and
+        whether Pallas kernels must run interpreted (non-TPU backends).  A
+        layout returns a callable with the exact `engine.linearize`
+        signature — typically `repro.kernels.engine_round.make_round(spec.n,
+        spec.k, mode=mode, interpret=interpret)` — or None to keep the
+        pure-XLA `linearize` path (the default: plug-in strategies get the
+        reference engine until they opt in; see DESIGN.md §8)."""
+        return None
+
     def traffic(self, stats, k: int, p: int) -> Traffic:
         """Analytic HBM bytes + dependency depth per batch (roofline)."""
         w = WORD_BYTES

@@ -29,6 +29,24 @@ from repro.core.layout import (NULL, TableState, Traffic, WORD_BYTES,
 from repro.core.registry import StrategyImpl, register_strategy
 
 
+class _KernelLowering:
+    """Mixin: lower the engine round to the fused fast/slow kernels
+    (DESIGN.md §8).  The four paper layouts share the kernel — they all
+    linearize against the same (engine_view, version) pair — but each owns
+    its lane-tile width so a layout with wider cells can trade grid steps
+    for VMEM (the (8, 128) register tile is the default).  PLAIN/SIMPLOCK
+    and external plug-ins inherit the base `lower_round` (None) and stay on
+    the pure-XLA reference path."""
+
+    kernel_block: int = 8
+
+    def lower_round(self, spec, *, mode: str, interpret: bool):
+        from repro.kernels import engine_round
+        return engine_round.make_round(spec.n, spec.k, mode=mode,
+                                       interpret=interpret,
+                                       block=self.kernel_block)
+
+
 @register_strategy
 class Plain(StrategyImpl):
     """Negative control: no protocol, readers may observe torn cells."""
@@ -45,7 +63,7 @@ class _Versioned(StrategyImpl):
 
 
 @register_strategy
-class Seqlock(_Versioned):
+class Seqlock(_KernelLowering, _Versioned):
     name = "seqlock"
     blocks_readers = True
 
@@ -150,7 +168,7 @@ class _NodePool(_Versioned):
 
 
 @register_strategy
-class Indirect(_NodePool):
+class Indirect(_KernelLowering, _NodePool):
     name = "indirect"
     lock_free = True
 
@@ -201,7 +219,7 @@ class _Cached(_NodePool):
 
 
 @register_strategy
-class CachedWF(_Cached):
+class CachedWF(_KernelLowering, _Cached):
     name = "cached_wf"
     lock_free = True
 
@@ -236,7 +254,7 @@ class CachedWF(_Cached):
 
 
 @register_strategy
-class CachedME(_Cached):
+class CachedME(_KernelLowering, _Cached):
     name = "cached_me"
     lock_free = True
 

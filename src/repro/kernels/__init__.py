@@ -1,8 +1,14 @@
 """Pallas TPU kernels for the paper's hot paths.
 
+  engine_round     — THE fused engine round: blocked fast-path kernel for
+                     collision-free batches + sorted sequential-replay slow
+                     kernel, dispatched by one duplicate-scatter predicate
+                     (DESIGN.md §8; strategies plug it in via lower_round)
   seqlock_gather   — version-validated k-word cell gather (the fast path)
   cas_apply        — one conflict-free combining round of store/CAS
   cachehash_probe  — CacheHash bucket probe with inlined first link
+  llsc_commit      — fused validate+commit SC round (subsumed by
+                     engine_round's fast path; kept for direct kernel use)
 
 ops.py holds the jit'd wrappers (interpret-mode on CPU), ref.py the pure-jnp
 oracles that define correctness.
@@ -10,4 +16,7 @@ oracles that define correctness.
 
 from repro.kernels.cachehash_probe import cachehash_probe  # noqa: F401
 from repro.kernels.cas_apply import cas_apply_round  # noqa: F401
+from repro.kernels.engine_round import (  # noqa: F401
+    fast_path_ok, fast_round_pallas, make_round, slow_round_pallas,
+)
 from repro.kernels.seqlock_gather import seqlock_gather  # noqa: F401

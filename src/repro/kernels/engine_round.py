@@ -1,0 +1,589 @@
+"""The fused engine round: blocked fast-path / slow-path megakernels.
+
+`core/engine.linearize` gives every batch the full slow-path pipeline — two
+stable argsorts, four segmented scans and a `lax.while_loop` of masked
+gather -> check -> scatter rounds — even when the batch is collision-free.
+The paper's whole performance story (Schweizer et al., "Evaluating the Cost
+of Atomic Operations") is that the *uncontended* path must be one cache-line
+round trip; this module is that path made real at the XLA/Pallas level:
+
+  fast path   When a batch has no intra-batch slot collisions (or is
+              read-only, where collisions cannot matter), every lane is
+              independent: ONE blocked pass gathers each lane's cell row,
+              evaluates LOAD/STORE/CAS/LL/SC/VALIDATE in registers, and
+              scatters data+version back — no sort, no scans, no rounds.
+              On TPU this is a Pallas kernel (grid over lane tiles of
+              `block` lanes, scalar-prefetched slot routing as in
+              `cas_apply.py`, input/output aliasing, conditional write-back
+              DMA); off-TPU it is the equivalent O(p) gather/compute/scatter
+              XLA program.
+
+  slow path   Contended batches sort by (slot, lane) once, then ONE Pallas
+              pass replays the sorted lanes sequentially per cell segment:
+              a cell row is DMA'd into VMEM at its segment start, all its
+              ops apply in registers, and the row is written back at the
+              segment end — each dirty cell makes exactly one HBM round
+              trip instead of L gather/scatter rounds.  Off-TPU the slow
+              path is `engine.linearize` itself (the pure-XLA reference).
+
+  dispatch    `fast_path_ok` is one cheap duplicate-scatter check; a
+              `lax.cond` picks the branch at runtime.  The predicate is
+              conservative: any batch it cannot prove independent takes the
+              slow path, so a colliding batch can NEVER take the fast
+              kernel (property-tested in tests/test_engine_round.py).
+
+Strategies opt in through `StrategyImpl.lower_round` (DESIGN.md §8); the
+round returned by `make_round` is signature-compatible with
+`engine.linearize` and bit-identical to it on every in-contract batch
+(slots of active lanes inside [0, n); out-of-range active slots are
+formally out of contract — the kernels treat them as failed no-ops, where
+`linearize` reports a clamp-gathered value).
+
+The fast path subsumes `kernels/llsc_commit`: a pure-SC batch over distinct
+cells is exactly a collision-free batch with SC lanes, so the one-round SC
+commit is just the fast kernel with link versions routed in (stale links
+arrive poisoned odd and can never match an even cell version).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import engine
+from repro.core.engine import (
+    ApplyResult, ApplyStats, CAS, IDLE, LL, LOAD, LinkCtx, OpBatch, SC,
+    STORE, VALIDATE,
+)
+
+_ANY = pltpu.TPUMemorySpace.ANY
+
+# Lane-tile width: 8 sublanes per grid step, so a block of k-word payloads
+# is one (8, k<=128) register tile (ops.pad_cells lane-aligns k on TPU).
+DEFAULT_BLOCK = 8
+
+_MODES = ("auto", "pallas", "xla", "off")
+
+
+def configured_mode() -> str:
+    """The engine-kernel mode requested by the environment.
+
+    BIGATOMIC_ENGINE_KERNEL = auto (default) | pallas | xla | off:
+      auto    pallas on TPU backends, xla elsewhere;
+      pallas  always use the Pallas kernels (interpret=True off-TPU — the
+              CI kernel-exercise mode);
+      xla     fused round with the pure-XLA fast path (the CPU production
+              mode: still skips sort+scans on collision-free batches);
+      off     pure `engine.linearize` everywhere (the pre-kernel engine).
+    """
+    mode = os.environ.get("BIGATOMIC_ENGINE_KERNEL", "auto")
+    if mode not in _MODES:
+        raise ValueError(f"BIGATOMIC_ENGINE_KERNEL={mode!r}; "
+                         f"expected one of {_MODES}")
+    return mode
+
+
+def resolved_mode(mode: str | None = None) -> tuple[str, bool]:
+    """Resolve `auto` against the backend.  Returns (mode, interpret)."""
+    mode = mode or configured_mode()
+    on_tpu = jax.default_backend() == "tpu"
+    if mode == "auto":
+        mode = "pallas" if on_tpu else "xla"
+    return mode, not on_tpu
+
+
+# ---------------------------------------------------------------------------
+# The fast-path predicate: one duplicate-scatter check.
+# ---------------------------------------------------------------------------
+
+def fast_path_ok(n: int, ops: OpBatch) -> jax.Array:
+    """True iff every lane of the batch is provably independent.
+
+    Exactly when (a) every active slot is in [0, n), AND (b) the batch is
+    read-only (no STORE/CAS/SC — reads and validates commute freely even on
+    the same cell) OR no two active lanes share a slot (one scatter-add of
+    lane counts, then a max).  False positives are impossible by
+    construction: a colliding batch with any write fails (b), so it can
+    never take the fast kernel."""
+    kind, slot = ops.kind, ops.slot
+    active = kind != IDLE
+    in_range = (slot >= 0) & (slot < n)
+    all_in = ~jnp.any(active & ~in_range)
+    is_write = active & ((kind == STORE) | (kind == CAS) | (kind == SC))
+    read_only = ~jnp.any(is_write)
+    cslot = jnp.where(active & in_range, slot, n)
+    counts = jnp.zeros((n + 1,), jnp.int32).at[cslot].add(1, mode="drop")
+    no_dup = jnp.max(counts[:n], initial=0) <= 1
+    return all_in & (read_only | no_dup)
+
+
+# ---------------------------------------------------------------------------
+# Shared fast-path assembly: kernel/XLA producers feed the same epilogue.
+# ---------------------------------------------------------------------------
+
+def _poisoned_link_ver(ctx: LinkCtx, slot: jax.Array) -> jax.Array:
+    """A lane's link version, odd-poisoned when the link cannot validate
+    (dead link or link naming a different cell) — cell versions are always
+    even, so a poisoned link never matches (the llsc_commit idiom)."""
+    link_ok = ctx.linked & (ctx.slot == slot)
+    return jnp.where(link_ok, ctx.version, jnp.uint32(1))
+
+
+def _assemble_fast(n: int, ctx: LinkCtx, ops: OpBatch, link_ver, cur, ver,
+                   okw, new_data, new_version):
+    """Per-lane results / ctx / stats for an independent (fast-path) batch.
+
+    cur/ver are each lane's pre-batch cell value+version; okw is write
+    success for STORE/CAS/SC lanes (False elsewhere)."""
+    kind = ops.kind
+    active = kind != IDLE
+    is_read = (kind == LOAD) | (kind == LL)
+    is_valcas = active & ((kind == STORE) | (kind == CAS))
+    is_sc = active & (kind == SC)
+    is_upd = is_valcas | is_sc
+
+    vl_ok = link_ver == ver                      # poisoned-odd never matches
+    success = jnp.where(
+        is_read | (kind == STORE), active,
+        jnp.where(kind == VALIDATE, vl_ok,
+                  jnp.where(is_upd, okw, False)))
+    value = jnp.where(active[:, None], cur, jnp.zeros_like(cur))
+
+    is_ll = (kind == LL) & active
+    new_ctx = LinkCtx(
+        slot=jnp.where(is_ll, ops.slot, ctx.slot),
+        version=jnp.where(is_ll, ver, ctx.version),
+        value=jnp.where(is_ll[:, None], cur, ctx.value),
+        linked=jnp.where(is_ll, True,
+                         jnp.where(kind == SC, False, ctx.linked)),
+    )
+    stats = ApplyStats(
+        rounds=jnp.any(is_upd).astype(jnp.int32),
+        n_updates=jnp.sum((is_valcas | (is_sc & okw)).astype(jnp.int32)),
+        n_loads=jnp.sum((active & is_read).astype(jnp.int32)),
+        n_cas_fail=jnp.sum((((kind == CAS) & active) | is_sc) & ~okw)
+        .astype(jnp.int32),
+        # No two lanes share a written cell on the fast path, so no load
+        # ever races a write and every successful write dirties its own cell.
+        n_raced_loads=jnp.int32(0),
+        n_dirty_cells=jnp.sum(okw.astype(jnp.int32)),
+    )
+    return new_data, new_version, new_ctx, ApplyResult(value, success), stats
+
+
+def _fast_xla(n: int, data, version, ctx: LinkCtx, ops: OpBatch):
+    """Pure-XLA fast path: one gather, register math, one scatter.  No sort,
+    no scans, no rounds — the off-TPU production fast path."""
+    kind, slot = ops.kind, ops.slot
+    active = kind != IDLE
+    safe = jnp.clip(slot, 0, n - 1)
+    cur = data[safe]
+    ver = version[safe]
+    match = jnp.all(cur == ops.expected, axis=1)
+    link_ver = _poisoned_link_ver(ctx, slot)
+    okw = active & ((kind == STORE) | ((kind == CAS) & match)
+                    | ((kind == SC) & (link_ver == ver)))
+    w_idx = jnp.where(okw, slot, n)
+    new_data = data.at[w_idx].set(ops.desired, mode="drop")
+    new_version = version.at[w_idx].add(jnp.uint32(2), mode="drop")
+    return _assemble_fast(n, ctx, ops, link_ver, cur, ver, okw,
+                          new_data, new_version)
+
+
+# ---------------------------------------------------------------------------
+# The blocked fast-path Pallas kernel.
+# ---------------------------------------------------------------------------
+
+def _fast_kernel(n: int, block: int):
+    def kernel(slot_ref, kind_ref, linkver_ref, exp_ref, des_ref,
+               data_hbm, ver_hbm, out_data, out_ver, wit_ref, verpt_ref,
+               succ_ref, rows, vrows, sems, vsems, wsem):
+        b = pl.program_id(0)
+
+        def _gathers(j):
+            # Dead (and out-of-contract) lanes clamp to row 0: the read is
+            # masked out below, and a DMA must never index outside the
+            # table (negative s would wrap in interpret mode and be a rogue
+            # DMA on silicon).
+            s = slot_ref[b * block + j]
+            sd = jnp.clip(s, 0, n - 1)
+            return (
+                pltpu.make_async_copy(out_data.at[pl.ds(sd, 1)],
+                                      rows.at[pl.ds(j, 1)], sems.at[j]),
+                pltpu.make_async_copy(out_ver.at[pl.ds(sd, 1)],
+                                      vrows.at[pl.ds(j, 1)], vsems.at[j]),
+            )
+
+        # Phase 1 — overlapped gather: all of the tile's row DMAs in flight
+        # at once (fast-path contract: live lanes target distinct rows).
+        def start(j, _):
+            for cp in _gathers(j):
+                cp.start()
+            return 0
+
+        def wait(j, _):
+            for cp in _gathers(j):
+                cp.wait()
+            return 0
+
+        lax.fori_loop(0, block, start, 0)
+        lax.fori_loop(0, block, wait, 0)
+
+        # Phase 2 — evaluate the whole tile in registers.
+        slots = jnp.stack([slot_ref[b * block + j] for j in range(block)])
+        live = (slots >= 0) & (slots < n)
+        cv = rows[...]                               # [block, k]
+        vr = vrows[...][:, 0]
+        kd = kind_ref[...][:, 0]
+        lv = linkver_ref[...][:, 0]
+        match = jnp.all(cv == exp_ref[...], axis=1)
+        okw = live & ((kd == STORE) | ((kd == CAS) & match)
+                      | ((kd == SC) & (lv == vr)))
+        wit_ref[...] = jnp.where(live[:, None], cv, jnp.zeros_like(cv))
+        verpt_ref[...] = jnp.where(live, vr, jnp.uint32(0))[:, None]
+        succ_ref[...] = okw.astype(jnp.int32)[:, None]
+        rows[...] = jnp.where(okw[:, None], des_ref[...], cv)
+        vrows[...] = (vr + jnp.uint32(2) * okw.astype(jnp.uint32))[:, None]
+
+        # Phase 3 — write-back only the lanes that actually wrote (their
+        # rows are distinct by the fast-path contract; serialized starts
+        # keep the common mostly-read case cheap).
+        def writeback(j, _):
+            s = slot_ref[b * block + j]
+
+            @pl.when(okw[j])
+            def _():
+                cp = pltpu.make_async_copy(
+                    rows.at[pl.ds(j, 1)], out_data.at[pl.ds(s, 1)], wsem)
+                cp.start()
+                cp.wait()
+                cp = pltpu.make_async_copy(
+                    vrows.at[pl.ds(j, 1)], out_ver.at[pl.ds(s, 1)], wsem)
+                cp.start()
+                cp.wait()
+
+            return 0
+
+        lax.fori_loop(0, block, writeback, 0)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret"))
+def fast_round_pallas(data, version, slot, kind, link_ver, expected, desired,
+                      *, block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """One blocked fast-path pass.  data: word[n, k]; version: uint32[n];
+    slot: int32[p] (inactive lanes -> n); link_ver: uint32[p] (odd-poisoned
+    when the lane's link cannot validate).  Precondition: active lanes
+    target distinct in-range slots (or the batch is read-only).
+
+    Returns (data', version', witness[p, k], ver_pt[p], okw[p])."""
+    n, k = data.shape
+    p = slot.shape[0]
+    pad = (-p) % block
+    if pad:
+        slot = jnp.concatenate([slot, jnp.full((pad,), n, jnp.int32)])
+        kind = jnp.concatenate([kind, jnp.full((pad,), IDLE, jnp.int32)])
+        link_ver = jnp.concatenate([link_ver, jnp.ones((pad,), jnp.uint32)])
+        expected = jnp.concatenate(
+            [expected, jnp.zeros((pad, k), expected.dtype)])
+        desired = jnp.concatenate(
+            [desired, jnp.zeros((pad, k), desired.dtype)])
+    pp = p + pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pp // block,),
+        in_specs=[
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # kind
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # link ver
+            pl.BlockSpec((block, k), lambda i, s: (i, 0)),     # expected
+            pl.BlockSpec((block, k), lambda i, s: (i, 0)),     # desired
+            pl.BlockSpec(memory_space=_ANY),                   # data
+            pl.BlockSpec(memory_space=_ANY),                   # version
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=_ANY),                   # data back
+            pl.BlockSpec(memory_space=_ANY),                   # version back
+            pl.BlockSpec((block, k), lambda i, s: (i, 0)),     # witness
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # ver at point
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # write ok
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block, k), data.dtype),
+            pltpu.VMEM((block, 1), jnp.uint32),
+            pltpu.SemaphoreType.DMA((block,)),
+            pltpu.SemaphoreType.DMA((block,)),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    new_data, new_ver, wit, verpt, okw = pl.pallas_call(
+        _fast_kernel(n, block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), data.dtype),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((pp, k), data.dtype),
+            jax.ShapeDtypeStruct((pp, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((pp, 1), jnp.int32),
+        ],
+        # alias the table through: 0 = slot prefetch, then 4 blocked inputs,
+        # so data=5, version=6
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(slot, kind.reshape(pp, 1), link_ver.reshape(pp, 1).astype(jnp.uint32),
+      expected, desired, data, version.reshape(n, 1))
+    return (new_data, new_ver.reshape(n), wit[:p], verpt[:p, 0], okw[:p, 0])
+
+
+def _fast_pallas(n: int, data, version, ctx: LinkCtx, ops: OpBatch, *,
+                 block: int, interpret: bool):
+    slot = jnp.where(ops.kind != IDLE, ops.slot, n)
+    link_ver = _poisoned_link_ver(ctx, ops.slot)
+    new_data, new_version, wit, verpt, okw = fast_round_pallas(
+        data, version, slot, ops.kind, link_ver, ops.expected, ops.desired,
+        block=block, interpret=interpret)
+    return _assemble_fast(n, ctx, ops, link_ver, wit, verpt, okw != 0,
+                          new_data, new_version)
+
+
+# ---------------------------------------------------------------------------
+# The slow-path Pallas kernel: one sequential replay pass over sorted lanes.
+# ---------------------------------------------------------------------------
+
+def _slow_kernel(n: int, p: int, block: int):
+    def kernel(slot_ref, kind_ref, linkver_ref, exp_ref, des_ref,
+               data_hbm, ver_hbm, out_data, out_ver, valpt_ref, verpt_ref,
+               succ_ref, row, vrow, sem):
+        b = pl.program_id(0)
+
+        def lane(j, _):
+            g = b * block + j
+            s = slot_ref[g]
+            # Same out-of-contract guard as the fast kernel: a negative slot
+            # must never become a DMA index.
+            live = (s >= 0) & (s < n)
+            prev = slot_ref[jnp.maximum(g - 1, 0)]
+            nxt = slot_ref[jnp.minimum(g + 1, p - 1)]
+            seg_start = (g == 0) | (s != prev)
+            seg_end = (g == p - 1) | (s != nxt)
+
+            @pl.when(live)
+            def _():
+                # Segment start: the cell row makes its ONE trip into VMEM.
+                @pl.when(seg_start)
+                def _():
+                    cp = pltpu.make_async_copy(
+                        out_data.at[pl.ds(s, 1)], row, sem)
+                    cp.start()
+                    cp.wait()
+                    cp = pltpu.make_async_copy(
+                        out_ver.at[pl.ds(s, 1)], vrow, sem)
+                    cp.start()
+                    cp.wait()
+
+                cv = row[...]
+                vr = vrow[0, 0]
+                kd = kind_ref[j, 0]
+                match = jnp.all(cv == exp_ref[pl.ds(j, 1), :])
+                link_ok = linkver_ref[j, 0] == vr
+                okw = ((kd == STORE) | ((kd == CAS) & match)
+                       | ((kd == SC) & link_ok))
+                succ = ((kd == LOAD) | (kd == STORE) | (kd == LL)
+                        | ((kd == VALIDATE) & link_ok)
+                        | (((kd == CAS) | (kd == SC)) & okw))
+                valpt_ref[pl.ds(j, 1), :] = cv
+                verpt_ref[pl.ds(j, 1), :] = vrow[...]
+                succ_ref[pl.ds(j, 1), :] = succ.astype(jnp.int32)[None, None]
+                row[...] = jnp.where(okw, des_ref[pl.ds(j, 1), :], cv)
+                vrow[0, 0] = vr + jnp.uint32(2) * okw.astype(jnp.uint32)
+
+                # Segment end: write the (possibly dirty) row back.
+                @pl.when(seg_end)
+                def _():
+                    cp = pltpu.make_async_copy(
+                        row, out_data.at[pl.ds(s, 1)], sem)
+                    cp.start()
+                    cp.wait()
+                    cp = pltpu.make_async_copy(
+                        vrow, out_ver.at[pl.ds(s, 1)], sem)
+                    cp.start()
+                    cp.wait()
+
+            @pl.when(~live)
+            def _():
+                valpt_ref[pl.ds(j, 1), :] = jnp.zeros(
+                    (1, valpt_ref.shape[1]), valpt_ref.dtype)
+                verpt_ref[pl.ds(j, 1), :] = jnp.zeros(
+                    (1, 1), verpt_ref.dtype)
+                succ_ref[pl.ds(j, 1), :] = jnp.zeros((1, 1), jnp.int32)
+
+            return 0
+
+        lax.fori_loop(0, block, lane, 0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def slow_round_pallas(data, version, s_slot, s_kind, s_link_ver, s_expected,
+                      s_desired, *, block: int = DEFAULT_BLOCK,
+                      interpret: bool = False):
+    """One fused sequential-replay pass over lanes SORTED by (slot, lane).
+
+    Fuses the per-segment arbitration and all L combining rounds of
+    `engine.linearize._general` into one kernel: per-cell segment metadata
+    is derived from the scalar-prefetched sorted slots, a segment's cell row
+    is DMA'd in once, every op of the segment applies in registers (full
+    LOAD/STORE/CAS/LL/SC/VALIDATE semantics), and the row is written back
+    once — replacing the gather -> check -> scatter `while_loop` round
+    trips.  The per-lane DMAs here are deliberately serialized: the replay
+    is sequential by definition (lane j+1 may read what lane j wrote), so
+    only the blocked op tiles pipeline across grid steps.
+
+    Returns (data', version', val_pt[p, k], ver_pt[p], success[p]) in the
+    SORTED lane order."""
+    n, k = data.shape
+    p = s_slot.shape[0]
+    pad = (-p) % block
+    if pad:
+        # Padding lanes are dead (slot n) and sort AFTER every live lane, so
+        # they never split a real segment.
+        s_slot = jnp.concatenate([s_slot, jnp.full((pad,), n, jnp.int32)])
+        s_kind = jnp.concatenate([s_kind, jnp.full((pad,), IDLE, jnp.int32)])
+        s_link_ver = jnp.concatenate(
+            [s_link_ver, jnp.ones((pad,), jnp.uint32)])
+        s_expected = jnp.concatenate(
+            [s_expected, jnp.zeros((pad, k), s_expected.dtype)])
+        s_desired = jnp.concatenate(
+            [s_desired, jnp.zeros((pad, k), s_desired.dtype)])
+    pp = p + pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pp // block,),
+        in_specs=[
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # kind
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # link ver
+            pl.BlockSpec((block, k), lambda i, s: (i, 0)),     # expected
+            pl.BlockSpec((block, k), lambda i, s: (i, 0)),     # desired
+            pl.BlockSpec(memory_space=_ANY),                   # data
+            pl.BlockSpec(memory_space=_ANY),                   # version
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=_ANY),
+            pl.BlockSpec(memory_space=_ANY),
+            pl.BlockSpec((block, k), lambda i, s: (i, 0)),     # value at pt
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # ver at pt
+            pl.BlockSpec((block, 1), lambda i, s: (i, 0)),     # success
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), data.dtype),
+            pltpu.VMEM((1, 1), jnp.uint32),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    new_data, new_ver, valpt, verpt, succ = pl.pallas_call(
+        _slow_kernel(n, pp, block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), data.dtype),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((pp, k), data.dtype),
+            jax.ShapeDtypeStruct((pp, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((pp, 1), jnp.int32),
+        ],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(s_slot, s_kind.reshape(pp, 1),
+      s_link_ver.reshape(pp, 1).astype(jnp.uint32), s_expected, s_desired,
+      data, version.reshape(n, 1))
+    return (new_data, new_ver.reshape(n), valpt[:p], verpt[:p, 0],
+            succ[:p, 0])
+
+
+def _slow_pallas(n: int, data, version, ctx: LinkCtx, ops: OpBatch, *,
+                 block: int, interpret: bool):
+    """Sort once, replay in one kernel pass, then rebuild ctx/result/stats
+    exactly as `linearize` defines them (two cheap scans; no while_loop)."""
+    p, k = ops.desired.shape
+    kind = ops.kind
+    active = kind != IDLE
+    slot = jnp.where(active, ops.slot, n)
+    order = jnp.argsort(slot, stable=True)
+    inv = jnp.argsort(order, stable=True)
+
+    s_slot = slot[order]
+    s_kind = kind[order]
+    s_link_ver = _poisoned_link_ver(ctx, ops.slot)[order]
+
+    new_data, new_version, val_s, verpt_s, succ_i = slow_round_pallas(
+        data, version, s_slot, s_kind, s_link_ver, ops.expected[order],
+        ops.desired[order], block=block, interpret=interpret)
+    s_success = succ_i != 0
+
+    is_ll = (s_kind == LL) & (s_slot < n)
+    n_slot = jnp.where(is_ll, s_slot, ctx.slot[order])
+    n_ver = jnp.where(is_ll, verpt_s, ctx.version[order])
+    n_val = jnp.where(is_ll[:, None], val_s, ctx.value[order])
+    n_lnk = jnp.where(is_ll, True,
+                      jnp.where(s_kind == SC, False, ctx.linked[order]))
+    new_ctx = LinkCtx(n_slot[inv], n_ver[inv], n_val[inv], n_lnk[inv])
+    s_value = jnp.where((s_kind != IDLE)[:, None], val_s,
+                        jnp.zeros_like(val_s))
+    result = ApplyResult(s_value[inv], s_success[inv])
+
+    # Stats: the single sorted-order definition shared with `linearize`.
+    stats = engine.stats_on_sorted(n, s_slot, s_kind, s_success)
+    return new_data, new_version, new_ctx, result, stats
+
+
+# ---------------------------------------------------------------------------
+# The round factory: what StrategyImpl.lower_round hands the engine.
+# ---------------------------------------------------------------------------
+
+def make_round(n: int, k: int, *, mode: str | None = None,
+               interpret: bool | None = None, block: int = DEFAULT_BLOCK):
+    """Build a fused round callable, signature-compatible with
+    `engine.linearize`: (data, version, ctx, ops) ->
+    (data', version', ctx', ApplyResult, ApplyStats).
+
+    mode  'xla'    runtime fast path in pure XLA, `linearize` slow path;
+          'pallas' blocked Pallas fast + slow kernels (interpret off-TPU);
+          'off'/None resolves via `resolved_mode()`.
+    """
+    r_mode, r_interp = resolved_mode(mode)
+    if interpret is None:
+        interpret = r_interp
+    if r_mode == "off":
+        return engine.linearize
+
+    def round_fn(data, version, ctx: LinkCtx, ops: OpBatch):
+        # linearize gathers ctx lanes by sorted lane index, which for a ctx
+        # wider than the batch means "the first p lanes"; replicate that so
+        # both tiers see (and return) batch-width ctx exactly as it does.
+        if ctx.slot.shape[0] != ops.p:
+            ctx = LinkCtx(ctx.slot[:ops.p], ctx.version[:ops.p],
+                          ctx.value[:ops.p], ctx.linked[:ops.p])
+        take_fast = fast_path_ok(n, ops)
+        if r_mode == "pallas":
+            fast = functools.partial(_fast_pallas, n, block=block,
+                                     interpret=interpret)
+            slow = functools.partial(_slow_pallas, n, block=block,
+                                     interpret=interpret)
+        else:
+            fast = functools.partial(_fast_xla, n)
+
+            def slow(data, version, ctx, ops):
+                return engine.linearize(data, version, ctx, ops)
+
+        return lax.cond(take_fast, fast, slow, data, version, ctx, ops)
+
+    return round_fn

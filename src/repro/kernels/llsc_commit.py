@@ -99,35 +99,34 @@ def commit_round(spec: AtomicSpec, state, ctx, slots, desired, *,
                  interpret: bool = False):
     """Run one fused SC commit round against a `TableState`, routed by spec.
 
-    Extracts the (values, versions) view from the table, validates + commits
-    each lane's link through the Pallas kernel, then reconciles the layout
-    via the strategy registry — so any registered strategy gets the fused
-    kernel without new plumbing.  Caller contract (one-SC-per-cell fast
-    path, DESIGN.md §4): live lanes target DISTINCT cells; dead lanes carry
+    Since the engine grew its own fused round (DESIGN.md §8) this entry
+    point is SUBSUMED by the fast-path kernel: a pure-SC batch over distinct
+    cells is exactly a collision-free batch, so the round dispatches through
+    `repro.kernels.engine_round` (the strategy's lowered round in the
+    resolved engine-kernel mode; `interpret=True` forces the Pallas kernels
+    in interpret mode, the test configuration).  The standalone
+    `llsc_commit_round` kernel above is kept for direct kernel tests and
+    non-engine callers.  Caller contract (one-SC-per-cell fast path,
+    DESIGN.md §4): live lanes target DISTINCT cells; dead lanes carry
     slot == spec.n.
 
     Returns (state', ctx', success bool[p], witness word[p, k]).
     """
+    from repro.core import engine
+    from repro.kernels import engine_round
+
     impl = get_strategy(spec.strategy)
     n, k = spec.n, spec.k
     slots = jnp.asarray(slots, jnp.int32)
     p = slots.shape[0]
-    data = jnp.concatenate([impl.engine_view(state),
-                            jnp.zeros((1, k), state.version.dtype)])
-    meta = jnp.concatenate([state.version[:, None],
-                            jnp.zeros((n, 1), jnp.uint32)], axis=1)
-    meta = jnp.concatenate([meta, jnp.zeros((2,), jnp.uint32)[None]])
-    live = (slots < n).astype(jnp.int32)
-    # A lane whose link does not name its slot must fail: poison its link
-    # version with an odd value (cell versions are always even).
-    link_ok = ctx.linked & (ctx.slot == slots)
-    link_ver = jnp.where(link_ok, ctx.version, jnp.uint32(1))
-    new_data, new_meta, succ, witness = llsc_commit_round(
-        data, meta, slots, live, link_ver, jnp.asarray(desired, data.dtype),
-        interpret=interpret)
-    succ = succ[:, 0].astype(bool)
-    n_updates = jnp.sum(succ.astype(jnp.int32))
-    new_state = impl.commit(state, new_data[:n], new_meta[:n, 0],
-                            n_updates, p)
-    new_ctx = ctx._replace(linked=ctx.linked & (slots >= n))  # SC consumes
-    return new_state, new_ctx, succ, witness
+    kind = jnp.where(slots < n, engine.SC, engine.IDLE)
+    ops = engine.OpBatch(kind, slots, jnp.zeros((p, k), state.data.dtype),
+                         jnp.asarray(desired, state.data.dtype))
+    round_fn = engine_round.make_round(
+        n, k, mode="pallas" if interpret else None,
+        interpret=True if interpret else None)
+    new_data, new_version, new_ctx, result, stats = round_fn(
+        impl.engine_view(state), state.version, ctx, ops)
+    new_state = impl.commit(state, new_data, new_version,
+                            stats.n_updates, p)
+    return new_state, new_ctx, result.success, result.value

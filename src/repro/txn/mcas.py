@@ -160,10 +160,15 @@ def max_rounds_bound(t: int, policy: BackoffPolicy) -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spec", "policy", "max_rounds"))
+                   static_argnames=("spec", "policy", "max_rounds", "mode"))
 def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
-          policy: BackoffPolicy, max_rounds: int):
+          policy: BackoffPolicy, max_rounds: int, mode: str):
     impl = registry.get_strategy(spec.strategy)
+    # Commit rounds ride the strategy's lowered kernel round (DESIGN.md §8):
+    # the LL-all batch is collision-free under low contention and the SC
+    # batch always is (winners are cell-disjoint), so both hit the fast
+    # path.  `mode` is static so an engine-kernel env change retraces.
+    round_fn = engine.round_for(spec, impl, mode)
     t, w, k, n = txns.t, txns.w, spec.k, spec.n
     p = t * w
     f_slot = txns.slot.reshape(p)
@@ -188,7 +193,7 @@ def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
         ops1 = engine.OpBatch(
             jnp.where(active_lane, engine.LL, engine.IDLE), safe_slot,
             jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
-        d1, v1, ctx, res1, st1 = engine.linearize(
+        d1, v1, ctx, res1, st1 = round_fn(
             impl.engine_view(state), state.version,
             engine.init_ctx(p, k), ops1)
         state = impl.commit(state, d1, v1, st1.n_updates, p)
@@ -202,7 +207,7 @@ def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
         ops2 = engine.OpBatch(
             jnp.where(ready_lane, engine.VALIDATE, engine.IDLE), safe_slot,
             jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
-        d2, v2, ctx, res2, st2 = engine.linearize(
+        d2, v2, ctx, res2, st2 = round_fn(
             impl.engine_view(state), state.version, ctx, ops2)
         state = impl.commit(state, d2, v2, st2.n_updates, p)
         ready_t = active_t & txn_match & per_txn_all(res2.success)
@@ -217,7 +222,7 @@ def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
         ops3 = engine.OpBatch(
             jnp.where(win_lane, engine.SC, engine.IDLE), safe_slot,
             jnp.zeros((p, k), WORD_DTYPE), f_des)
-        d3, v3, ctx, res3, st3 = engine.linearize(
+        d3, v3, ctx, res3, st3 = round_fn(
             impl.engine_view(state), state.version, ctx, ops3)
         state = impl.commit(state, d3, v3, st3.n_updates, p)
         committed = winner_t & per_txn_all(res3.success)
@@ -260,7 +265,8 @@ def mcas(spec: AtomicSpec, state, txns: TxnBatch, *,
                          f"spec.k {spec.k}")
     if max_rounds is None:
         max_rounds = max_rounds_bound(txns.t, policy)
-    return _mcas(spec, state, txns, policy, max_rounds)
+    return _mcas(spec, state, txns, policy, max_rounds,
+                 engine._engine_round().configured_mode())
 
 
 # ---------------------------------------------------------------------------
