@@ -112,6 +112,32 @@ def _serving_suite(reps: int):
     return rows
 
 
+def _oversub_suite(reps: int):
+    from benchmarks import bench_oversub
+
+    rows = []
+    for strategy in ("seqlock", "cached_wf"):
+        for hot_frac, cont in ((0.0, "uniform"), (0.5, "hot")):
+            base = None
+            for factor in (1, 4):
+                cell = bench_oversub.run_oversub_cell(
+                    strategy, factor=factor, hot_frac=hot_frac, reps=reps)
+                base = base or cell["mops_s"]
+                rows.append({
+                    "name": f"oversub/f{factor}_{cont}/{strategy}",
+                    "ops_s": cell["mops_s"] * 1e6,
+                    "x_of_f1": round(cell["mops_s"] / base, 3),
+                })
+    rec = bench_oversub.run_recovery_cell()
+    rows.append({
+        "name": "oversub/shard_loss_recovery",
+        "latency_s": rec["latency_s"],          # informational: the ISSUE 7
+        "replayed": rec["replayed"],            # acceptance number
+        "shards_after": rec["shards_after"],
+    })
+    return rows
+
+
 def run_baseline(out_path: str, quick: bool = False) -> dict:
     reps = 2 if quick else 5
     doc = {
@@ -132,6 +158,7 @@ def run_baseline(out_path: str, quick: bool = False) -> dict:
 
     doc["suites"]["atomics"] = _atomics_suite(reps)
     doc["suites"]["txn"] = _txn_suite(reps)
+    doc["suites"]["oversub"] = _oversub_suite(reps)
     try:
         doc["suites"]["serving"] = _serving_suite(reps)
     except Exception as e:                 # model deps are optional here

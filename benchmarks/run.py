@@ -26,7 +26,8 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_atomics, bench_cachehash, bench_distributed,
-                        bench_llsc, bench_memory, bench_torn, bench_txn)
+                        bench_llsc, bench_memory, bench_oversub, bench_torn,
+                        bench_txn)
 
 
 def main():
@@ -54,6 +55,8 @@ def main():
         ("distributed table (beyond paper)", bench_distributed.main),
         ("txn: MCAS + transactional map (tuples/version-list apps)",
          bench_txn.main),
+        ("oversubscribed executor + shard-loss recovery (runtime)",
+         bench_oversub.main),
     ]
     failures = []
     for name, fn in benches:

@@ -80,6 +80,18 @@ class DistSpec:
                     is source-major, such loads are adjacent).
     interleave:     owner = slot % n_shards instead of contiguous blocks
                     (tables only; spreads contiguous-slot hotspots).
+    n_nodes:        > 1 factors the shard axis as (n_nodes, devs_per_node)
+                    and routes HIERARCHICALLY (tables only): phase 1 is an
+                    intra-node all_to_all over `axis` that combines each
+                    node's lanes onto the relay device whose in-node index
+                    matches the owner's, phase 2 is ONE cross-node
+                    all_to_all over `node_axis`.  Cross-node words drop from
+                    n_shards*cap to n_nodes*node_capacity per device — the
+                    cross-node combining win the executor overlaps rounds
+                    behind (DESIGN.md §9).
+    node_axis:      mesh axis of size n_nodes the cross-node hop runs over.
+    node_capacity:  per-(relay, dst-node) slots in the phase-2 buffers
+                    (default devs_per_node * cap, which can never overflow).
     """
 
     inner: Any                       # AtomicSpec | HashSpec
@@ -89,10 +101,24 @@ class DistSpec:
     route_capacity: int | None = None
     dedup_loads: bool = False
     interleave: bool = False
+    n_nodes: int = 1
+    node_axis: str = "node"
+    node_capacity: int | None = None
 
     def __post_init__(self):
         if self.n_shards <= 0 or self.p_local <= 0:
             raise ValueError(f"mesh geometry must be positive: {self}")
+        if self.n_nodes <= 0:
+            raise ValueError("n_nodes must be positive")
+        if self.n_nodes > 1:
+            if isinstance(self.inner, HashSpec):
+                raise ValueError("hierarchical routing applies to tables "
+                                 "only (hash ops route flat)")
+            if self.n_shards % self.n_nodes:
+                raise ValueError(f"n_shards={self.n_shards} not divisible "
+                                 f"by n_nodes={self.n_nodes}")
+        if self.node_capacity is not None and self.node_capacity <= 0:
+            raise ValueError("node_capacity must be positive")
         if isinstance(self.inner, HashSpec):
             if self.interleave:
                 raise ValueError("interleave applies to tables only (hash "
@@ -135,6 +161,15 @@ class DistSpec:
     def cap(self) -> int:
         return self.route_capacity or self.p_local
 
+    @property
+    def devs_per_node(self) -> int:
+        return self.n_shards // self.n_nodes
+
+    @property
+    def cap2(self) -> int:
+        """Phase-2 per-(relay, dst-node) capacity (hierarchical only)."""
+        return self.node_capacity or self.devs_per_node * self.cap
+
     def local_spec(self):
         """The per-shard spec the local engine runs (same strategy name, so
         the registry resolves the same `StrategyImpl` on every shard)."""
@@ -166,16 +201,38 @@ def _mesh_shards(mesh: Mesh, axis: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
 
 
+def _pspec(dspec: DistSpec) -> P:
+    """Shard-axis partition spec: hierarchical specs split the stacked
+    [n_shards] leading dim over (node_axis, axis) — shard o lives on mesh
+    coordinate (o // devs_per_node, o % devs_per_node)."""
+    if dspec.n_nodes > 1:
+        return P((dspec.node_axis, dspec.axis))
+    return P(dspec.axis)
+
+
+def _check_mesh(mesh: Mesh, dspec: DistSpec) -> None:
+    if dspec.n_nodes > 1:
+        got = (_mesh_shards(mesh, dspec.node_axis),
+               _mesh_shards(mesh, dspec.axis))
+        want = (dspec.n_nodes, dspec.devs_per_node)
+        if got != want:
+            raise ValueError(f"mesh axes ({dspec.node_axis!r}, "
+                             f"{dspec.axis!r}) have {got} devices, spec "
+                             f"says {want}")
+    elif _mesh_shards(mesh, dspec.axis) != dspec.n_shards:
+        raise ValueError(f"mesh axis {dspec.axis!r} has "
+                         f"{_mesh_shards(mesh, dspec.axis)} devices, spec "
+                         f"says {dspec.n_shards}")
+
+
 def init_dist(mesh: Mesh, dspec: DistSpec, initial: np.ndarray | None = None
               ) -> DistState:
     """Build the sharded initial state: one local state per shard, stacked
-    and placed `P(axis)` on the mesh.  `initial` (tables only) is the
-    word[n, k] array of initial GLOBAL logical values."""
+    and placed `P(axis)` on the mesh (`P((node_axis, axis))` when
+    hierarchical).  `initial` (tables only) is the word[n, k] array of
+    initial GLOBAL logical values."""
     s = dspec.n_shards
-    if _mesh_shards(mesh, dspec.axis) != s:
-        raise ValueError(f"mesh axis {dspec.axis!r} has "
-                         f"{_mesh_shards(mesh, dspec.axis)} devices, spec "
-                         f"says {s}")
+    _check_mesh(mesh, dspec)
     lsp = dspec.local_spec()
     if dspec.is_hash:
         if initial is not None:
@@ -194,13 +251,14 @@ def init_dist(mesh: Mesh, dspec: DistSpec, initial: np.ndarray | None = None
                       for i in range(s)]
         locals_ = [engine.init(lsp, sh) for sh in shards]
     local = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *locals_)
-    return DistState(jax.device_put(local, NamedSharding(mesh, P(dspec.axis))))
+    return DistState(jax.device_put(local,
+                                    NamedSharding(mesh, _pspec(dspec))))
 
 
 def init_dist_ctx(mesh: Mesh, dspec: DistSpec) -> engine.LinkCtx:
     """A fresh p_global-lane LinkCtx, sharded by source lane."""
     ctx = engine.init_ctx(dspec.p_global, dspec.inner.k)
-    return jax.device_put(ctx, NamedSharding(mesh, P(dspec.axis)))
+    return jax.device_put(ctx, NamedSharding(mesh, _pspec(dspec)))
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +407,123 @@ def _build_table_apply(mesh: Mesh, dspec: DistSpec):
     return jax.jit(mapped)
 
 
+@functools.lru_cache(maxsize=256)
+def _build_table_apply_2level(mesh: Mesh, dspec: DistSpec):
+    """Hierarchical route -> apply -> return: intra-node combine onto the
+    relay device whose in-node index matches the owner's, then ONE
+    cross-node all_to_all (DESIGN.md §9).
+
+    The owner device of shard o = o_node * d + o_dev sits at mesh
+    coordinate (o_node, o_dev); phase 1 (over `axis`, within each node)
+    moves every lane to the local device with index o_dev, phase 2 (over
+    `node_axis`) moves it to the owner node — the in-node index is
+    preserved across the node hop, so it lands exactly on the owner.
+    Owner-side lane order is [src_node, phase-2 rank], and phase-2 ranks
+    follow relay-lane order [src_dev, phase-1 rank]: the claimed total
+    order is (owner, src node, src dev, lane) — `linearization_order`
+    mirrors it host-side.  Capacity rejects at EITHER hop surface in the
+    returned per-lane overflow mask; rejected lanes never reach a table.
+    """
+    axis, node_axis = dspec.axis, dspec.node_axis
+    nn, d = dspec.n_nodes, dspec.devs_per_node
+    cap1, cap2 = dspec.cap, dspec.cap2
+    lsp: AtomicSpec = dspec.local_spec()
+    p_local, k = dspec.p_local, lsp.k
+
+    def local_fn(state, ctx, kind, slot, expected, desired):
+        st = _unstack(state)
+        impl = registry.get_strategy(lsp.strategy)
+        active0 = kind != engine.IDLE
+
+        rep = jnp.arange(p_local, dtype=jnp.int32)
+        if dspec.dedup_loads:
+            kind, rep = _dedup(kind, slot, dspec.n_global, p_local)
+        active = kind != engine.IDLE
+
+        owner, lslot = _owner_and_local(dspec, slot)
+        o_node = jnp.where(active, owner // d, nn)
+        o_dev = jnp.where(active, owner % d, d)
+
+        # -- phase 1 out: intra-node combine onto the o_dev relay -----------
+        link_ok = ctx.linked & (ctx.slot == slot)
+        rank1, fits1 = _dst_ranks(o_dev, cap1, d, p_local)
+        dst1 = jnp.where(fits1, o_dev * cap1 + rank1, d * cap1)
+        pack1 = _packer(dst1, d * cap1)
+        go1 = _a2a(axis, d, cap1)
+        r1_kind = go1(pack1(jnp.where(fits1, kind, engine.IDLE),
+                            engine.IDLE)).reshape(d * cap1)
+        r1_slot = go1(pack1(lslot, 0)).reshape(d * cap1)
+        r1_node = go1(pack1(o_node, nn)).reshape(d * cap1)
+        r1_exp = go1(pack1(expected, 0)).reshape(d * cap1, k)
+        r1_des = go1(pack1(desired, 0)).reshape(d * cap1, k)
+        r1_lver = go1(pack1(ctx.version, 0)).reshape(d * cap1)
+        r1_lok = go1(pack1(link_ok, False)).reshape(d * cap1)
+
+        # -- phase 2 out: ONE cross-node hop to the owner node --------------
+        key2 = jnp.where(r1_kind != engine.IDLE, r1_node, nn)
+        rank2, fits2 = _dst_ranks(key2, cap2, nn, d * cap1)
+        dst2 = jnp.where(fits2, key2 * cap2 + rank2, nn * cap2)
+        pack2 = _packer(dst2, nn * cap2)
+        go2 = _a2a(node_axis, nn, cap2)
+        r2_kind = go2(pack2(jnp.where(fits2, r1_kind, engine.IDLE),
+                            engine.IDLE)).reshape(nn * cap2)
+        r2_slot = go2(pack2(r1_slot, 0)).reshape(nn * cap2)
+        r2_exp = go2(pack2(r1_exp, 0)).reshape(nn * cap2, k)
+        r2_des = go2(pack2(r1_des, 0)).reshape(nn * cap2, k)
+        r2_lver = go2(pack2(r1_lver, 0)).reshape(nn * cap2)
+        r2_lok = go2(pack2(r1_lok, False)).reshape(nn * cap2)
+
+        # -- apply at the owner (same engine round as the flat path) --------
+        octx = engine.LinkCtx(
+            slot=jnp.where(r2_lok, r2_slot, -1), version=r2_lver,
+            value=jnp.zeros((nn * cap2, k), WORD_DTYPE), linked=r2_lok)
+        rops = engine.OpBatch(r2_kind, r2_slot, r2_exp, r2_des)
+        new_data, new_ver, new_octx, res, stats = engine.linearize(
+            impl.engine_view(st), st.version, octx, rops)
+        st = impl.commit(st, new_data, new_ver, stats.n_updates, nn * cap2)
+
+        # -- return hop 2: owner node -> relay ------------------------------
+        b2_val = go2(res.value).reshape(nn, cap2, k)
+        b2_suc = go2(res.success).reshape(nn, cap2)
+        b2_ver = go2(new_octx.version).reshape(nn, cap2)
+        safe_n = jnp.clip(key2, 0, nn - 1)
+        safe_r2 = jnp.maximum(jnp.where(fits2, rank2, -1), 0)
+        v1 = jnp.where(fits2[:, None], b2_val[safe_n, safe_r2], 0)
+        s1 = jnp.where(fits2, b2_suc[safe_n, safe_r2], False)
+        ver1 = b2_ver[safe_n, safe_r2]
+
+        # -- return hop 1: relay -> source (the fits2 bit rides back so the
+        #    source learns which lanes ACTUALLY executed) --------------------
+        b1_val = go1(v1).reshape(d, cap1, k)
+        b1_suc = go1(s1).reshape(d, cap1)
+        b1_ver = go1(ver1).reshape(d, cap1)
+        b1_exe = go1(fits2).reshape(d, cap1)
+        safe_dev = jnp.clip(o_dev, 0, d - 1)
+        safe_r1 = jnp.maximum(jnp.where(fits1, rank1, -1), 0)
+        executed = fits1 & b1_exe[safe_dev, safe_r1]
+        value = jnp.where(executed[:, None], b1_val[safe_dev, safe_r1], 0)
+        success = jnp.where(executed, b1_suc[safe_dev, safe_r1], False)
+        ret_ver = b1_ver[safe_dev, safe_r1]
+        value = value[rep]
+        success = success[rep]
+        overflow = active0 & ~executed[rep]
+
+        is_ll = executed & (kind == engine.LL)
+        is_sc = executed & (kind == engine.SC)   # dropped SCs keep their link
+        nctx = engine.LinkCtx(
+            slot=jnp.where(is_ll, slot, ctx.slot),
+            version=jnp.where(is_ll, ret_ver, ctx.version),
+            value=jnp.where(is_ll[:, None], value, ctx.value),
+            linked=jnp.where(is_ll, True,
+                             jnp.where(is_sc, False, ctx.linked)))
+        return _restack(st), nctx, value, success, overflow
+
+    spec = P((node_axis, axis))
+    mapped = shard_map(local_fn, mesh=mesh, in_specs=(spec,) * 6,
+                       out_specs=(spec,) * 5, check_rep=False)
+    return jax.jit(mapped)
+
+
 def _pad_ops(ops: engine.OpBatch, p: int) -> engine.OpBatch:
     """IDLE-pad the lane axis up to p (callers may issue fewer lanes)."""
     q = ops.kind.shape[0]
@@ -401,7 +576,8 @@ def apply(mesh: Mesh, dspec: DistSpec, dstate: DistState, ops: engine.OpBatch,
     ops = _pad_ops(ops, dspec.p_global)
     ctx = engine.init_ctx(dspec.p_global, k) if ctx is None \
         else _pad_ctx(ctx, dspec.p_global, k)
-    fn = _build_table_apply(mesh, dspec)
+    fn = (_build_table_apply_2level(mesh, dspec) if dspec.n_nodes > 1
+          else _build_table_apply(mesh, dspec))
     local, nctx, value, success, overflow = fn(
         dstate.local, ctx, ops.kind, ops.slot, ops.expected, ops.desired)
     if q != dspec.p_global:
@@ -409,6 +585,48 @@ def apply(mesh: Mesh, dspec: DistSpec, dstate: DistState, ops: engine.OpBatch,
         value, success, overflow = value[:q], success[:q], overflow[:q]
     return (DistState(local), nctx, engine.ApplyResult(value, success),
             overflow)
+
+
+class DistRoundHandle:
+    """An in-flight distributed round (the collective analog of
+    `engine.RoundHandle`): `apply_round` returns immediately thanks to
+    JAX async dispatch, so the executor routes/packs the NEXT stream's
+    batch while this round's all_to_alls are still on the wire.  `order`
+    (when requested) is the host-side claimed linearization — computed
+    up front, so oracle replay never has to wait on the device."""
+
+    __slots__ = ("state", "ctx", "result", "overflow", "order")
+
+    def __init__(self, state, ctx, result, overflow, order=None):
+        self.state = state
+        self.ctx = ctx
+        self.result = result
+        self.overflow = overflow
+        self.order = order
+
+    def _leaves(self):
+        return jax.tree_util.tree_leaves(
+            (self.state, self.ctx, self.result, self.overflow))
+
+    def ready(self) -> bool:
+        return all(getattr(leaf, "is_ready", lambda: True)()
+                   for leaf in self._leaves())
+
+    def wait(self) -> "DistRoundHandle":
+        jax.block_until_ready(self._leaves())
+        return self
+
+
+def apply_round(mesh: Mesh, dspec: DistSpec, dstate: DistState,
+                ops: engine.OpBatch, ctx: engine.LinkCtx | None = None, *,
+                with_order: bool = False) -> DistRoundHandle:
+    """`apply` wrapped as an overlappable handle for the executor; with
+    `with_order=True` the claimed linearization rides along for replay."""
+    order = None
+    if with_order:
+        order, _ = linearization_order(dspec, ops)
+    state, nctx, res, ovf = apply(mesh, dspec, dstate, ops, ctx)
+    return DistRoundHandle(state, nctx, res, ovf, order)
 
 
 # ---------------------------------------------------------------------------
@@ -549,6 +767,9 @@ def mcas(mesh: Mesh, dspec: DistSpec, dstate: DistState, txns, *,
     from repro.txn import mcas as txn_mcas
     if dspec.is_hash:
         raise TypeError("hash DistSpec: MCAS runs on tables")
+    if dspec.n_nodes > 1:
+        raise NotImplementedError("cross-shard MCAS routes flat; build its "
+                                  "DistSpec with n_nodes=1")
     policy = policy or BackoffPolicy("none")
     t, w, k = txns.t, txns.w, dspec.inner.k
     if txns.expected.shape[2] != k:
@@ -732,8 +953,16 @@ def hash_items(dspec: DistSpec, dstate: DistState) -> dict:
 
 
 def collective_words(dspec: DistSpec) -> int:
-    """Exact words each device moves through the two all_to_alls per batch
-    (the roofline term the §Perf hillclimb drives down)."""
+    """Exact words each device moves through the all_to_alls per batch
+    (the roofline term the §Perf hillclimb drives down).  Hierarchical
+    specs split into an intra-node term (phase 1 also carries the owner
+    node id) and a cross-node term (phase 2 also rides the executed bit
+    back) — the CROSS-NODE words drop from n_shards*cap to
+    n_nodes*cap2 per device, which is the whole point."""
+    if not dspec.is_hash and dspec.n_nodes > 1:
+        k = dspec.inner.k
+        return (dspec.devs_per_node * dspec.cap * (3 * k + 8)
+                + dspec.n_nodes * dspec.cap2 * (3 * k + 7))
     per_lane = (2 * dspec.inner.vw + 4) if dspec.is_hash \
         else (3 * dspec.inner.k + 6)
     return dspec.n_shards * dspec.cap * per_lane
@@ -757,6 +986,11 @@ def linearization_order(dspec: DistSpec, ops: engine.OpBatch):
     rank = lane order; dedup'd loads ride directly after their
     representative), `overflow` is the bool[p_global] mask of
     capacity-rejected lanes.  Feed both to `tests/oracle.py`.
+
+    Hierarchical specs (n_nodes > 1) claim (owner, src node, src device,
+    lane) with capacity charged at BOTH hops: cap per (src device, in-node
+    owner index) — lanes bound for different nodes share a relay budget —
+    then cap2 per (relay, owner node) in relay-lane arrival order.
     """
     kind = np.asarray(ops.kind)
     slot = np.asarray(ops.slot)
@@ -794,6 +1028,47 @@ def linearization_order(dspec: DistSpec, ops: engine.OpBatch):
 
     overflow = np.zeros(p, bool)
     order: list[int] = []
+    if not dspec.is_hash and dspec.n_nodes > 1:
+        nn, d, cap2 = dspec.n_nodes, dspec.devs_per_node, dspec.cap2
+        # phase 1: per source device, cap lanes per in-node owner index
+        # (relay) — relay buffers fill src-device-major, lane order.
+        relay: dict[tuple[int, int], list[int]] = {
+            (m, j): [] for m in range(nn) for j in range(d)}
+        for g in range(s):
+            m = g // d
+            cnt1: dict[int, int] = {}
+            for i in range(g * pl, (g + 1) * pl):
+                if not active[i] or rep[i] != i:
+                    continue
+                j = int(owner_of[i]) % d
+                c = cnt1.get(j, 0)
+                if c < cap:
+                    relay[(m, j)].append(i)
+                    cnt1[j] = c + 1
+                else:
+                    overflow[i] = True
+                    for x in dups.get(i, []):
+                        overflow[x] = True
+        # phase 2: per relay, cap2 lanes per owner node, arrival order.
+        accepted: dict[tuple[int, int], list[int]] = {}
+        for (m, j), lanes in relay.items():
+            cnt2: dict[int, int] = {}
+            for i in lanes:
+                onode = int(owner_of[i]) // d
+                c = cnt2.get(onode, 0)
+                if c < cap2:
+                    accepted.setdefault((int(owner_of[i]), m), []).append(i)
+                    cnt2[onode] = c + 1
+                else:
+                    overflow[i] = True
+                    for x in dups.get(i, []):
+                        overflow[x] = True
+        for o in range(s):
+            for m in range(nn):
+                for i in accepted.get((o, m), []):
+                    order.append(i)
+                    order.extend(dups.get(i, []))
+        return np.asarray(order, np.int64), overflow[:q]
     for o in range(s):
         for src in range(s):
             cnt = 0

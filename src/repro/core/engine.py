@@ -637,6 +637,49 @@ def apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None = None,
     return _apply(spec, state, ops, ctx, mode)
 
 
+class RoundHandle:
+    """A dispatched-but-not-awaited engine round (DESIGN.md §9).
+
+    JAX arrays are futures under async dispatch, so `apply_round` returns
+    the moment the round is enqueued; the handle names the five outputs and
+    lets an executor overlap the NEXT batch's host-side route/pack work with
+    this round's device compute.  `state`/`ctx` may be chained into the next
+    `apply_round` immediately (XLA sequences the data dependency); `wait()`
+    blocks until every output buffer is resident."""
+
+    __slots__ = ("state", "ctx", "result", "stats", "traffic")
+
+    def __init__(self, state, ctx, result, stats, traffic):
+        self.state = state
+        self.ctx = ctx
+        self.result = result
+        self.stats = stats
+        self.traffic = traffic
+
+    def _leaves(self):
+        return jax.tree_util.tree_leaves(
+            (self.state, self.ctx, self.result, self.stats, self.traffic))
+
+    def ready(self) -> bool:
+        """True iff every output buffer is already resident (non-blocking;
+        conservatively False if the runtime lacks `Array.is_ready`)."""
+        return all(getattr(leaf, "is_ready", lambda: False)()
+                   for leaf in self._leaves())
+
+    def wait(self) -> "RoundHandle":
+        jax.block_until_ready(self._leaves())
+        return self
+
+
+def apply_round(spec: AtomicSpec, state, ops: OpBatch,
+                ctx: LinkCtx | None = None, *, donate: bool = False
+                ) -> RoundHandle:
+    """`apply` as an overlappable round: identical semantics, but the outputs
+    come back wrapped in a `RoundHandle` the executor can hold in its
+    in-flight window while it packs the next stream's batch."""
+    return RoundHandle(*apply(spec, state, ops, ctx, donate=donate))
+
+
 def init(spec: AtomicSpec, initial=None):
     """Build the initial `TableState` pytree for `spec`."""
     impl = registry.get_strategy(spec.strategy)

@@ -1,0 +1,69 @@
+"""Deterministic fault injection for the executor (DESIGN.md §9).
+
+Faults fire at exact (round, issue-slot) points in the executor's schedule,
+so every failure scenario is replayable:
+
+  kind="delay"       stream `stream`'s reported step time is inflated by
+                     `seconds` for `rounds` consecutive rounds — the
+                     StragglerWatchdog sees a degraded stream and the
+                     executor deprioritizes it (skips its next issue slot).
+  kind="preempt"     `PreemptionGuard.request_stop()` — the executor drains
+                     in-flight work, writes a final checkpoint at the round
+                     boundary and stops cleanly (resume continues
+                     bit-identically).
+  kind="shard_loss"  a device/shard of the distributed target dies
+                     mid-round: the executor discards in-flight rounds,
+                     restores the last checkpoint, reshards onto the
+                     surviving shard count and replays its issue journal —
+                     tests/oracle.py accepts the claimed order spanning the
+                     fault.
+
+`after_issues` makes the fault genuinely mid-round: it fires only after
+that many issue slots of its round have already dispatched (in-flight work
+exists when the fault lands).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    round: int                    # 1-based executor round the fault fires in
+    kind: str                     # "delay" | "preempt" | "shard_loss"
+    stream: int | None = None     # delay: which stream is slow
+    shard: int | None = None      # shard_loss: which shard died
+    seconds: float = 0.0          # delay: added reported step time
+    rounds: int = 1               # delay: consecutive rounds affected
+    after_issues: int = 0         # fire only after this many issues in-round
+
+    def __post_init__(self):
+        if self.kind not in ("delay", "preempt", "shard_loss"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == "delay" and self.stream is None:
+            raise ValueError("delay faults need stream=")
+
+
+class FaultInjector:
+    """Fires each fault exactly once at its (round, issue-slot) point; the
+    executor polls before every issue.  `fired` is the audit log."""
+
+    def __init__(self, faults: list[Fault]):
+        self._pending = sorted(faults, key=lambda f: (f.round,
+                                                      f.after_issues))
+        self.fired: list[Fault] = []
+
+    def poll(self, round_idx: int, issues_done: int) -> list[Fault]:
+        out, keep = [], []
+        for f in self._pending:
+            due = (round_idx > f.round
+                   or (round_idx == f.round and issues_done >= f.after_issues))
+            (out if due else keep).append(f)
+        self._pending = keep
+        self.fired.extend(out)
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending

@@ -40,12 +40,32 @@ class PreemptionGuard:
         self._event.set()
 
     def __enter__(self):
-        for s in self._signals:
-            self._old[s] = signal.signal(s, self._handler)
+        # Partial-failure safe: if installing handler i raises (non-main
+        # thread, exotic signal), handlers 0..i-1 are rolled back before the
+        # error propagates — a failed __enter__ never leaks handlers.
+        try:
+            for s in self._signals:
+                self._old[s] = signal.signal(s, self._handler)
+        except BaseException:
+            self._restore()
+            raise
         return self
 
+    def _restore(self):
+        first = None
+        for s, h in list(self._old.items()):
+            try:
+                signal.signal(s, h)
+            except BaseException as e:
+                if first is None:
+                    first = e
+            else:
+                del self._old[s]
+        if first is not None:
+            raise first
+
     def __exit__(self, *exc):
-        for s, h in self._old.items():
-            signal.signal(s, h)
-        self._old.clear()
+        # Runs on body exceptions too (context-manager contract), and a
+        # handler that fails to restore doesn't strand the REST un-restored.
+        self._restore()
         return False

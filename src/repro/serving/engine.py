@@ -144,6 +144,7 @@ class ServingEngine:
         # next step's transaction; `_pending_retire` holds them meanwhile.
         self.txn_bookkeeping = txn_bookkeeping
         self._pending_retire: list[tuple[int, int]] = []
+        self._decode_inflight = False  # a dispatched, un-finished decode
 
     # -- public API ---------------------------------------------------------
 
@@ -189,6 +190,20 @@ class ServingEngine:
                 break
         return {r.rid: r.out_tokens for r in self.requests.values()}
 
+    def run_pipelined(self, max_steps: int = 1000):
+        """Serve through `repro.runtime.Executor`: admission and decode run
+        as two DECOUPLED streams, so prefill forwards (device compute)
+        overlap the in-flight fused decode dispatch instead of serializing
+        in front of it as `step()` does.  Greedy sampling is batch-
+        composition independent, so per-request tokens are identical to
+        `run_to_completion` (asserted in tests/test_serving.py)."""
+        from repro.runtime.executor import Executor
+        from repro.runtime.streams import serving_streams
+        decode, admission = serving_streams(self)
+        ex = Executor(None, [admission, decode], slots=1, oversubscription=2)
+        ex.run(max_rounds=max_steps)
+        return {r.rid: r.out_tokens for r in self.requests.values()}
+
     # -- admission / prefill -------------------------------------------------
 
     def _admit(self):
@@ -204,33 +219,32 @@ class ServingEngine:
             try:
                 self._prefill_into(si, self.requests[rid])
             except Exception:
-                # The failing request is dropped (as the old pop-then-raise
-                # path did), but its slot and every not-yet-admitted pair go
-                # back on their rings so nothing leaks.  FIFO is preserved:
-                # anything submitted later is drained and re-enqueued BEHIND
-                # the survivors of this admission round.
-                self.slot_q.enqueue_batch(
-                    np.asarray([si] + [s for _, s in pairs[j + 1:]],
-                               np.uint32))
-                survivors = [r for r, _ in pairs[j + 1:]]
-                depth = len(self.admit_q)
-                if survivors:
-                    later = []
-                    if depth:
-                        vals, ok = self.admit_q.dequeue_batch(depth)
-                        later = [int(v) for v in vals[ok, 0]]
-                    self.admit_q.enqueue_batch(
-                        np.asarray(survivors + later, np.uint32))
+                self._requeue_failed(si, pairs, j)
                 raise
 
-    def _prefill_into(self, slot_idx: int, req: Request):
-        slot = self.slots[slot_idx]
-        seq_id = self._next_seq
-        self._next_seq += 1
+    def _requeue_failed(self, si: int, pairs, j: int) -> None:
+        # The failing request is dropped (as the old pop-then-raise path
+        # did), but its slot and every not-yet-admitted pair go back on
+        # their rings so nothing leaks.  FIFO is preserved: anything
+        # submitted later is drained and re-enqueued BEHIND the survivors
+        # of this admission round.
+        self.slot_q.enqueue_batch(
+            np.asarray([si] + [s for _, s in pairs[j + 1:]], np.uint32))
+        survivors = [r for r, _ in pairs[j + 1:]]
+        depth = len(self.admit_q)
+        if survivors:
+            later = []
+            if depth:
+                vals, ok = self.admit_q.dequeue_batch(depth)
+                later = [int(v) for v in vals[ok, 0]]
+            self.admit_q.enqueue_batch(
+                np.asarray(survivors + later, np.uint32))
+
+    def _prefill_compute(self, req: Request):
+        """The device-heavy half of admission: the prefill forward + first
+        token.  Touches NO engine state (beyond the sampling key), so the
+        executor overlaps it with an in-flight decode dispatch."""
         T = len(req.prompt)
-        P = self.paged.page_size
-        n_pages = (T + P - 1) // P
-        # prefill forward (batch of one) -> per-layer K/V for the prompt
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         if self.cfg.family == "vlm":
             batch["positions"] = jnp.broadcast_to(
@@ -238,14 +252,31 @@ class ServingEngine:
         logits, cache, _ = forward(self.params, self.cfg, batch,
                                    mode="prefill")
         k, v = self._cache_to_layers(cache)          # [L, T, kvh, hd]
+        # first generated token comes from the prefill logits
+        tok = int(self._sample(logits[:, -1])[0])
+        return k, v, tok
+
+    def _prefill_commit(self, slot_idx: int, rid: int, k, v, tok: int):
+        """The page-table half: alloc pages, write the prompt KV, publish
+        the slot.  Chained on `self.paged`, so it orders after whatever
+        decode dispatch is in flight."""
+        slot = self.slots[slot_idx]
+        req = self.requests[rid]
+        seq_id = self._next_seq
+        self._next_seq += 1
+        T = len(req.prompt)
+        P = self.paged.page_size
+        n_pages = (T + P - 1) // P
         self.paged, phys = pk.alloc_pages(
             self.paged, [seq_id] * n_pages, list(range(n_pages)))
         self.paged = pk.write_prompt(self.paged, phys, k, v)
-        # first generated token comes from the prefill logits
-        tok = self._sample(logits[:, -1])
-        req.out_tokens.append(int(tok[0]))
+        req.out_tokens.append(tok)
         slot.rid, slot.seq_id, slot.pos = req.rid, seq_id, T
         slot.new_tokens, slot.active = 1, True
+
+    def _prefill_into(self, slot_idx: int, req: Request):
+        k, v, tok = self._prefill_compute(req)
+        self._prefill_commit(slot_idx, req.rid, k, v, tok)
 
     def _cache_to_layers(self, cache):
         ks, vs = [], []
@@ -311,6 +342,10 @@ class ServingEngine:
         return retires
 
     def _decode(self, live):
+        logits = self._dispatch_decode(live)
+        self._finish_decode(live, logits)
+
+    def _dispatch_decode(self, live):
         P = self.paged.page_size
         seq_ids = [self.slots[i].seq_id for i in live]
         pos = np.asarray([self.slots[i].pos for i in live], np.int32)
@@ -346,6 +381,9 @@ class ServingEngine:
                 self.paged, jnp.asarray(phys[np.arange(len(live)), pos // P]),
                 jnp.asarray(pos % P), nk, nv)
             self.dispatch_count += 4
+        return logits
+
+    def _finish_decode(self, live, logits):
         toks = self._sample(logits[:, 0])
         for j, i in enumerate(live):
             slot = self.slots[i]
@@ -355,6 +393,73 @@ class ServingEngine:
             slot.new_tokens += 1
             if slot.new_tokens >= req.max_new_tokens:
                 self._retire(i)
+
+    # -- pipelined halves (runtime.streams drives these) ---------------------
+
+    @property
+    def decode_inflight(self) -> bool:
+        return self._decode_inflight
+
+    def dispatch_decode(self, live):
+        """Issue the fused decode for `live` slots WITHOUT consuming the
+        logits: the paged state is committed (chained for whatever issues
+        next) and the returned logits are an un-fetched device array.
+        `finish_decode` completes the step; exactly one decode may be in
+        flight (the next step's input tokens depend on this one's)."""
+        if self._fused_fn is None:
+            raise RuntimeError("pipelined decode needs fused=True (the v1 "
+                               "4-dispatch path has nothing to overlap)")
+        if self._decode_inflight:
+            raise RuntimeError("a decode is already in flight; finish it "
+                               "before dispatching the next")
+        self._decode_inflight = True
+        return self._dispatch_decode(live)
+
+    def finish_decode(self, live, logits) -> None:
+        """Host half of a dispatched decode: sample, append tokens, retire
+        finished slots (their page-table deletes defer to the next
+        bookkeeping transaction, exactly as in `step()`)."""
+        self._finish_decode(live, logits)
+        self._decode_inflight = False
+
+    def admit_compute(self) -> list:
+        """Claim every admissible (request, slot) pair and run their
+        prefill FORWARDS — device compute that overlaps an in-flight
+        decode — deferring the page-table commit to `commit_admissions`.
+        Returns the opaque admitted list (empty = nothing to admit)."""
+        n = min(len(self.admit_q), len(self.slot_q))
+        if not n:
+            return []
+        rids, ok_r = self.admit_q.dequeue_batch(n)
+        slot_ids, ok_s = self.slot_q.dequeue_batch(n)
+        assert ok_r.all() and ok_s.all()      # sole consumer of both queues
+        pairs = [(int(r), int(s)) for r, s in zip(rids[:, 0], slot_ids[:, 0])]
+        admitted = []
+        for j, (rid, si) in enumerate(pairs):
+            try:
+                k, v, tok = self._prefill_compute(self.requests[rid])
+            except Exception:
+                self._requeue_failed(si, pairs, j)
+                raise
+            admitted.append((si, rid, k, v, tok))
+        return admitted
+
+    def commit_admissions(self, admitted) -> None:
+        """Publish computed admissions into the page table + slots.  The
+        deferred retirement deletes commit FIRST (their pages must be free
+        for the prefill allocs — same ordering `step()` maintains)."""
+        if self._pending_retire:
+            self.paged, _ = pk.txn_bookkeep(self.paged,
+                                            self._drain_retires(), [])
+        for si, rid, k, v, tok in admitted:
+            self._prefill_commit(si, rid, k, v, tok)
+
+    def flush_retires(self) -> None:
+        """Commit deferred retirement deletes as their own transaction
+        (the pipelined analog of `step()`'s no-decode flush)."""
+        if self._pending_retire:
+            self.paged, _ = pk.txn_bookkeep(self.paged,
+                                            self._drain_retires(), [])
 
     def _retire(self, i):
         slot = self.slots[i]

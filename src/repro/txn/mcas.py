@@ -159,16 +159,35 @@ def max_rounds_bound(t: int, policy: BackoffPolicy) -> int:
     return t * (max_delay.get(policy.kind, policy.cap) + 2) + 4
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("spec", "policy", "max_rounds", "mode"))
-def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
-          policy: BackoffPolicy, max_rounds: int, mode: str):
-    impl = registry.get_strategy(spec.strategy)
-    # Commit rounds ride the strategy's lowered kernel round (DESIGN.md §8):
-    # the LL-all batch is collision-free under low contention and the SC
-    # batch always is (winners are cell-disjoint), so both hit the fast
-    # path.  `mode` is static so an engine-kernel env change retraces.
-    round_fn = engine.round_for(spec, impl, mode)
+class McasCarry(NamedTuple):
+    """The protocol state between attempt rounds (a pure pytree) — identical
+    to `_mcas`'s while_loop carry minus the table state, so one cooperative
+    `mcas_round` step is BIT-IDENTICAL to one iteration of the fused loop.
+
+    r:         int32[]     rounds run so far
+    pending:   bool[T]     txns not yet resolved
+    success:   bool[T]     txns committed
+    witness:   word[T*W,k] flattened per-lane witness values
+    round_res: int32[T]    1-based round each txn resolved in (0 = pending)
+    attempts:  int32[T]    arbitration losses so far
+    delay:     int32[T]    backoff rounds left before the txn re-contends
+    """
+
+    r: jax.Array
+    pending: jax.Array
+    success: jax.Array
+    witness: jax.Array
+    round_res: jax.Array
+    attempts: jax.Array
+    delay: jax.Array
+
+
+def _round_step(spec: AtomicSpec, impl, round_fn, state, txns: TxnBatch,
+                carry: McasCarry, policy: BackoffPolicy):
+    """ONE attempt round (LL-all / VALIDATE-all / arbitrate / SC-commit):
+    the single traced body both `_mcas`'s while_loop and the cooperative
+    `mcas_round` run, so yielding to a scheduler between rounds cannot
+    change any result."""
     t, w, k, n = txns.t, txns.w, spec.k, spec.n
     p = t * w
     f_slot = txns.slot.reshape(p)
@@ -182,73 +201,85 @@ def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
         """AND a per-lane flag over each txn's USED lanes (unused ⇒ True)."""
         return jnp.all((flag_lane | ~lane_used).reshape(t, w), axis=1)
 
-    def body(carry):
-        (r, state, pending, success, witness, round_res, attempts,
-         delay) = carry
-        r = r + 1
-        active_t = pending & (delay <= 0)
-        active_lane = active_t[lane_txn] & lane_used
+    (r, pending, success, witness, round_res, attempts, delay) = carry
+    r = r + 1
+    active_t = pending & (delay <= 0)
+    active_lane = active_t[lane_txn] & lane_used
 
-        # 1. LL-all ----------------------------------------------------------
-        ops1 = engine.OpBatch(
-            jnp.where(active_lane, engine.LL, engine.IDLE), safe_slot,
-            jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
-        d1, v1, ctx, res1, st1 = round_fn(
-            impl.engine_view(state), state.version,
-            engine.init_ctx(p, k), ops1)
-        state = impl.commit(state, d1, v1, st1.n_updates, p)
-        vals = res1.value
-        match_lane = jnp.all(vals == f_exp, axis=1)
-        txn_match = per_txn_all(match_lane)
-        failed_now = active_t & ~txn_match
+    # 1. LL-all --------------------------------------------------------------
+    ops1 = engine.OpBatch(
+        jnp.where(active_lane, engine.LL, engine.IDLE), safe_slot,
+        jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
+    d1, v1, ctx, res1, st1 = round_fn(
+        impl.engine_view(state), state.version,
+        engine.init_ctx(p, k), ops1)
+    state = impl.commit(state, d1, v1, st1.n_updates, p)
+    vals = res1.value
+    match_lane = jnp.all(vals == f_exp, axis=1)
+    txn_match = per_txn_all(match_lane)
+    failed_now = active_t & ~txn_match
 
-        # 2. VALIDATE-all ----------------------------------------------------
-        ready_lane = (active_t & txn_match)[lane_txn] & lane_used
-        ops2 = engine.OpBatch(
-            jnp.where(ready_lane, engine.VALIDATE, engine.IDLE), safe_slot,
-            jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
-        d2, v2, ctx, res2, st2 = round_fn(
-            impl.engine_view(state), state.version, ctx, ops2)
-        state = impl.commit(state, d2, v2, st2.n_updates, p)
-        ready_t = active_t & txn_match & per_txn_all(res2.success)
+    # 2. VALIDATE-all --------------------------------------------------------
+    ready_lane = (active_t & txn_match)[lane_txn] & lane_used
+    ops2 = engine.OpBatch(
+        jnp.where(ready_lane, engine.VALIDATE, engine.IDLE), safe_slot,
+        jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((p, k), WORD_DTYPE))
+    d2, v2, ctx, res2, st2 = round_fn(
+        impl.engine_view(state), state.version, ctx, ops2)
+    state = impl.commit(state, d2, v2, st2.n_updates, p)
+    ready_t = active_t & txn_match & per_txn_all(res2.success)
 
-        # 3. arbitrate -------------------------------------------------------
-        winner_t = ready_t & engine.arbitrate_groups(
-            safe_slot, lane_txn, ready_t[lane_txn] & lane_used,
-            n=n, n_groups=t)
+    # 3. arbitrate -----------------------------------------------------------
+    winner_t = ready_t & engine.arbitrate_groups(
+        safe_slot, lane_txn, ready_t[lane_txn] & lane_used,
+        n=n, n_groups=t)
 
-        # 4. SC-commit (one round: pure-SC fast path, disjoint cells) --------
-        win_lane = winner_t[lane_txn] & lane_used
-        ops3 = engine.OpBatch(
-            jnp.where(win_lane, engine.SC, engine.IDLE), safe_slot,
-            jnp.zeros((p, k), WORD_DTYPE), f_des)
-        d3, v3, ctx, res3, st3 = round_fn(
-            impl.engine_view(state), state.version, ctx, ops3)
-        state = impl.commit(state, d3, v3, st3.n_updates, p)
-        committed = winner_t & per_txn_all(res3.success)
+    # 4. SC-commit (one round: pure-SC fast path, disjoint cells) ------------
+    win_lane = winner_t[lane_txn] & lane_used
+    ops3 = engine.OpBatch(
+        jnp.where(win_lane, engine.SC, engine.IDLE), safe_slot,
+        jnp.zeros((p, k), WORD_DTYPE), f_des)
+    d3, v3, ctx, res3, st3 = round_fn(
+        impl.engine_view(state), state.version, ctx, ops3)
+    state = impl.commit(state, d3, v3, st3.n_updates, p)
+    committed = winner_t & per_txn_all(res3.success)
 
-        # 5. bookkeeping -----------------------------------------------------
-        resolved = failed_now | committed
-        res_lane = resolved[lane_txn] & lane_used
-        witness = jnp.where(res_lane[:, None], vals, witness)
-        success = success | committed
-        round_res = jnp.where(resolved, r, round_res)
-        pending = pending & ~resolved
-        lost = ready_t & ~committed
-        attempts = attempts + lost.astype(jnp.int32)
-        delay = jnp.where(lost, _policy_delay(policy, attempts),
-                          jnp.maximum(delay - 1, 0))
-        return (r, state, pending, success, witness, round_res, attempts,
-                delay)
+    # 5. bookkeeping ---------------------------------------------------------
+    resolved = failed_now | committed
+    res_lane = resolved[lane_txn] & lane_used
+    witness = jnp.where(res_lane[:, None], vals, witness)
+    success = success | committed
+    round_res = jnp.where(resolved, r, round_res)
+    pending = pending & ~resolved
+    lost = ready_t & ~committed
+    attempts = attempts + lost.astype(jnp.int32)
+    delay = jnp.where(lost, _policy_delay(policy, attempts),
+                      jnp.maximum(delay - 1, 0))
+    return state, McasCarry(r, pending, success, witness, round_res,
+                            attempts, delay)
 
-    init = (jnp.int32(0), state, jnp.ones((t,), bool), jnp.zeros((t,), bool),
-            jnp.zeros((p, k), WORD_DTYPE), jnp.zeros((t,), jnp.int32),
-            jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32))
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "policy", "max_rounds", "mode"))
+def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
+          policy: BackoffPolicy, max_rounds: int, mode: str):
+    impl = registry.get_strategy(spec.strategy)
+    # Commit rounds ride the strategy's lowered kernel round (DESIGN.md §8):
+    # the LL-all batch is collision-free under low contention and the SC
+    # batch always is (winners are cell-disjoint), so both hit the fast
+    # path.  `mode` is static so an engine-kernel env change retraces.
+    round_fn = engine.round_for(spec, impl, mode)
+    t, w, k = txns.t, txns.w, spec.k
+
+    def body(c):
+        return _round_step(spec, impl, round_fn, c[0], txns, c[1], policy)
+
+    init = (state, mcas_begin(txns))
     out = lax.while_loop(
-        lambda c: (c[0] < max_rounds) & jnp.any(c[2]), body, init)
-    r, state, _pending, success, witness, round_res, attempts, _delay = out
-    return state, McasResult(success, witness.reshape(t, w, k), round_res,
-                             attempts, r)
+        lambda c: (c[1].r < max_rounds) & jnp.any(c[1].pending), body, init)
+    state, carry = out
+    return state, McasResult(carry.success, carry.witness.reshape(t, w, k),
+                             carry.round_res, carry.attempts, carry.r)
 
 
 def mcas(spec: AtomicSpec, state, txns: TxnBatch, *,
@@ -267,6 +298,57 @@ def mcas(spec: AtomicSpec, state, txns: TxnBatch, *,
         max_rounds = max_rounds_bound(txns.t, policy)
     return _mcas(spec, state, txns, policy, max_rounds,
                  engine._engine_round().configured_mode())
+
+
+# ---------------------------------------------------------------------------
+# Cooperative rounds: the SAME protocol advanced one round per call, so a
+# scheduler (repro.runtime.executor) can run other streams' batches between
+# contended retries instead of spinning inside one lax.while_loop.
+# ---------------------------------------------------------------------------
+
+def mcas_begin(txns: TxnBatch) -> McasCarry:
+    """The fresh carry `_mcas` starts its while_loop from — hand it to
+    `mcas_round` to run the identical protocol cooperatively."""
+    t, w, k = txns.t, txns.w, txns.expected.shape[2]
+    return McasCarry(jnp.int32(0), jnp.ones((t,), bool),
+                     jnp.zeros((t,), bool),
+                     jnp.zeros((t * w, k), WORD_DTYPE),
+                     jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32),
+                     jnp.zeros((t,), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "policy", "mode"))
+def _mcas_round(spec: AtomicSpec, state, txns: TxnBatch, carry: McasCarry,
+                policy: BackoffPolicy, mode: str):
+    impl = registry.get_strategy(spec.strategy)
+    round_fn = engine.round_for(spec, impl, mode)
+    return _round_step(spec, impl, round_fn, state, txns, carry, policy)
+
+
+def mcas_round(spec: AtomicSpec, state, txns: TxnBatch, carry: McasCarry, *,
+               policy: BackoffPolicy = BackoffPolicy("none")):
+    """Advance the MCAS protocol by ONE attempt round (LL-all /
+    VALIDATE-all / arbitrate / SC-commit) and return (state', carry').
+
+    Because links never span rounds (each round builds and consumes its own
+    ctx), a caller may interleave ARBITRARY foreign batches against `state`
+    between rounds — pending txns simply re-read on their next attempt.
+    Driving this to `not carry.pending.any()` yields bit-identical results
+    to `mcas` with the same policy; `mcas_finish` packages them.
+    """
+    if txns.expected.shape[2] != spec.k:
+        raise ValueError(f"txn word width {txns.expected.shape[2]} != "
+                         f"spec.k {spec.k}")
+    return _mcas_round(spec, state, txns, carry, policy,
+                       engine._engine_round().configured_mode())
+
+
+def mcas_finish(txns: TxnBatch, carry: McasCarry) -> McasResult:
+    """Package a drained cooperative run as the standard `McasResult` (same
+    contract as `mcas`, so `linearization_order` and the TxnOracle apply)."""
+    t, w, k = txns.t, txns.w, txns.expected.shape[2]
+    return McasResult(carry.success, carry.witness.reshape(t, w, k),
+                      carry.round_res, carry.attempts, carry.r)
 
 
 # ---------------------------------------------------------------------------

@@ -459,6 +459,154 @@ def scenario_serving(strategy: str):
     assert all(len(v) == n_new for v in got.values())
 
 
+def scenario_twolevel(strategy: str):
+    """Hierarchical two-level routing (DistSpec.n_nodes > 1): intra-node
+    combine over `axis` then ONE cross-node all_to_all over `node_axis`,
+    replayed against the shared oracle over interleave × capacity
+    variants (the tight caps force overflow at BOTH hops)."""
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()) ^ 0x2E11)
+    n, k, pl = 48, 3, 4
+    mesh = jax.make_mesh((2, 4), ("node", "shard"))
+    for ilv in (False, True):
+        for caps in ({}, dict(route_capacity=3, node_capacity=5)):
+            dspec = dsb.DistSpec(
+                atomics.AtomicSpec(n, k, strategy, p_max=64), "shard", 8,
+                pl, n_nodes=2, node_axis="node", interleave=ilv, **caps)
+            init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+            _drive_table(
+                dspec, mesh, rng, init, steps=3,
+                make_ops=lambda rng, oracle: mixed_batch(
+                    rng, oracle.ctx, p=dspec.p_global, n=n, k=k,
+                    current=oracle.data),
+                msg=f"2level ilv={ilv} capped={bool(caps)}")
+
+
+def scenario_executor(strategy: str):
+    """The oversubscribed executor (ISSUE 7 acceptance): S in {2, 4, 8}
+    streams share one 8-shard table with in-flight budget 4; a shard loss
+    injected MID-ROUND forces checkpoint-restore + reshard onto the
+    survivors + journal replay, and the full multi-stream history —
+    including across the recovery boundary — must replay through ONE
+    sequential oracle."""
+    from oracle import replay_executor_history
+    from repro.runtime import (DistTarget, Executor, Fault, FaultInjector,
+                               StragglerWatchdog, SyntheticStream)
+
+    n, k = 32, 2
+
+    def factory(n_surviving):
+        s = 1
+        while s * 2 <= n_surviving and n % (s * 2) == 0:
+            s *= 2
+        mesh = jax.make_mesh((s, 8 // s), ("shard", "rest"))
+        return mesh, dsb.DistSpec(
+            atomics.AtomicSpec(n, k, strategy, p_max=64), "shard", s,
+            32 // s)
+
+    rng = np.random.default_rng(zlib.crc32(strategy.encode()) ^ 0xE7)
+    for n_streams in (2, 4, 8):
+        init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+        mesh0, dspec0 = factory(8)
+        target = DistTarget(mesh0, dspec0, init, mesh_factory=factory)
+        width = dspec0.p_global
+        streams = [SyntheticStream(f"s{i}", seed=1000 + 10 * n_streams + i,
+                                   n=n, k=k, width=width, n_batches=3,
+                                   hot_cells=4, hot_frac=0.3)
+                   for i in range(n_streams)]
+        inj = FaultInjector([Fault(round=2, kind="shard_loss", shard=5,
+                                   after_issues=1)])
+        ex = Executor(target, streams, slots=1, oversubscription=4,
+                      watchdog=StragglerWatchdog(n_hosts=n_streams),
+                      injector=inj, checkpoint_every=2)
+        rep = ex.run()
+        assert rep["recoveries"], rep
+        assert rep["recoveries"][0]["n_shards"] < 8
+        assert target.dspec.p_global == width      # lane layout preserved
+        oracle = replay_executor_history(n, k, [width] * n_streams,
+                                         ex.history, initial=init)
+        np.testing.assert_array_equal(
+            oracle.data, np.asarray(dsb.logical(target.dspec, target.state)),
+            err_msg=f"executor S={n_streams}: final logical")
+        np.testing.assert_array_equal(
+            oracle.version,
+            np.asarray(dsb.versions(target.dspec, target.state)),
+            err_msg=f"executor S={n_streams}: final versions")
+
+
+def scenario_elastic(strategy: str):
+    """Elastic round-trips on the 8-device fixture.  (a) The big-atomic
+    table reshards 8 -> 6 -> 4 -> 8 with logical values AND versions
+    preserved at every hop — an LL link taken BEFORE the trip commits
+    after it.  (b) The (params, opt) training state reshards through the
+    same shrink/grow chain bit-identically, with `mesh_plan` reporting
+    (never silently truncating) the devices each geometry drops."""
+    from jax.sharding import Mesh
+    from repro.runtime import elastic_mesh, mesh_plan, reshard_dist, \
+        reshard_state
+
+    n, k = 48, 2
+    rng = np.random.default_rng(11)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+
+    def geo(s):
+        mesh = Mesh(np.asarray(jax.devices()[:s]), ("shard",))
+        return mesh, dsb.DistSpec(
+            atomics.AtomicSpec(n, k, strategy, p_max=64), "shard", s, 8)
+
+    mesh, dspec = geo(8)
+    st = dsb.init_dist(mesh, dspec, init)
+    ctx = dsb.init_dist_ctx(mesh, dspec)
+    # lane 0 links cell 5; lane 1 bumps cell 7 so versions are non-trivial
+    kind = np.full(dspec.p_global, atomics.IDLE, np.int32)
+    slot = np.zeros(dspec.p_global, np.int32)
+    desired = np.zeros((dspec.p_global, k), np.uint32)
+    kind[0], slot[0] = atomics.LL, 5
+    kind[1], slot[1], desired[1] = atomics.STORE, 7, 77
+    st, ctx, _, _ = dsb.apply(mesh, dspec, st,
+                              atomics.make_ops(kind, slot, desired=desired,
+                                               k=k), ctx)
+    vals = np.asarray(dsb.logical(dspec, st))
+    vers = np.asarray(dsb.versions(dspec, st))
+    assert vers[7] == 2 and vers.sum() == 2
+    for s in (6, 4, 8):
+        mesh2, dspec2 = geo(s)
+        st = reshard_dist(dspec, st, dspec2, mesh2)
+        mesh, dspec = mesh2, dspec2
+        np.testing.assert_array_equal(np.asarray(dsb.logical(dspec, st)),
+                                      vals, err_msg=f"reshard->{s}: values")
+        np.testing.assert_array_equal(np.asarray(dsb.versions(dspec, st)),
+                                      vers, err_msg=f"reshard->{s}: versions")
+    # versions survived the whole trip, so the pre-trip link commits
+    kind = np.full(dspec.p_global, atomics.IDLE, np.int32)
+    kind[0], slot[0], desired[0] = atomics.SC, 5, 55
+    st, ctx, res, _ = dsb.apply(mesh, dspec, st,
+                                atomics.make_ops(kind, slot,
+                                                 desired=desired, k=k), ctx)
+    assert bool(np.asarray(res.success)[0]), \
+        "LL link must survive the 8->6->4->8 reshard round-trip"
+    assert (np.asarray(dsb.logical(dspec, st))[5] == 55).all()
+
+    # (b) training state through the same chain
+    from repro.configs import get_config
+    from repro.launch.steps import init_train_state
+    from repro.optim import AdamWConfig
+
+    cfg = get_config("deepseek_7b", reduced=True)
+    params, opt = init_train_state(cfg, AdamWConfig(warmup=1, total_steps=2),
+                                   0)
+    want = [np.asarray(x) for x in jax.tree.leaves(params)]
+    assert mesh_plan(6, model_parallel=2, global_batch=2).dropped == 4
+    assert mesh_plan(6, model_parallel=2).dropped == 0
+    for n_dev in (8, 6, 4, 8):
+        m = elastic_mesh(n_dev, model_parallel=2, global_batch=2)
+        params, opt = reshard_state((params, opt), cfg, m)
+    got = [np.asarray(x) for x in jax.tree.leaves(params)]
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    lead = jax.tree.leaves(params)[1]
+    assert len(lead.sharding.device_set) in (2, 4, 8)
+
+
 SCENARIOS = {
     "mixed": scenario_mixed,
     "levers": scenario_levers,
@@ -470,6 +618,9 @@ SCENARIOS = {
     "mcas": scenario_mcas,
     "txnmap": scenario_txnmap,
     "txn_plugin": scenario_txn_plugin,
+    "twolevel": scenario_twolevel,
+    "executor": scenario_executor,
+    "elastic": scenario_elastic,
 }
 
 

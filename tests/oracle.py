@@ -258,6 +258,61 @@ class MapOracle:
 
 
 # ---------------------------------------------------------------------------
+# Executor histories: the multi-stream interleaving as ONE linearization.
+# ---------------------------------------------------------------------------
+
+def replay_executor_history(n: int, k: int, widths: list[int], history, *,
+                            initial=None, check: bool = True) -> TableOracle:
+    """Replay a `runtime.Executor` issue history — S streams' batches in
+    their issue interleaving, each with its claimed per-batch order —
+    through ONE sequential TableOracle, and diff every delivered result.
+
+    Each stream owns a fixed lane slice of a width-sum(widths) oracle
+    (stream si's lane j is oracle lane offset(si) + j), so per-stream
+    LL/SC link state persists across batches exactly as the executor's
+    per-stream LinkCtx does.  Works unchanged across a recovery boundary:
+    post-recovery records carry orders computed under the NEW geometry,
+    and replayed (re-delivered) seqs simply appear as fresh records whose
+    results must STILL match — that is the linearizability-across-the-
+    fault claim being checked.
+
+    history: iterable of `runtime.executor.IssueRec` (retired, i.e. with
+    value/success filled).  Returns the oracle (final data/versions inside)
+    for end-state diffs against the live target.
+    """
+    offs = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+    p_all = int(offs[-1])
+    oracle = TableOracle(n, k, p_all, initial=initial)
+    for rec in history:
+        si, off, w = rec.stream, int(offs[rec.stream]), widths[rec.stream]
+        kind = np.asarray(rec.ops.kind)
+        q = kind.shape[0]
+        assert q <= w, f"stream {si} batch width {q} > declared {w}"
+        pk = np.full(p_all, engine.IDLE, np.int32)
+        ps = np.zeros(p_all, np.int32)
+        pe = np.zeros((p_all, k), np.uint32)
+        pd = np.zeros((p_all, k), np.uint32)
+        pk[off:off + q] = kind
+        ps[off:off + q] = np.asarray(rec.ops.slot)
+        pe[off:off + q] = np.asarray(rec.ops.expected)
+        pd[off:off + q] = np.asarray(rec.ops.desired)
+        order = (np.arange(q, dtype=np.int64) if rec.order is None
+                 else np.asarray(rec.order, np.int64)) + off
+        ref = oracle.step(engine.OpBatch(pk, ps, pe, pd), order=order)
+        if not check:
+            continue
+        msg = f"stream {si} seq {rec.seq}"
+        np.testing.assert_array_equal(
+            rec.value, ref.value[off:off + q], err_msg=f"{msg}: values")
+        np.testing.assert_array_equal(
+            rec.success, ref.success[off:off + q], err_msg=f"{msg}: success")
+        if rec.overflow is not None:
+            assert not np.asarray(rec.success)[rec.overflow].any(), \
+                f"{msg}: overflow lanes must report success=False"
+    return oracle
+
+
+# ---------------------------------------------------------------------------
 # Shared randomized batch generators (tests + the distributed suite).
 # ---------------------------------------------------------------------------
 

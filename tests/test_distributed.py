@@ -96,3 +96,26 @@ def test_txn_plugin_strategy_runs_sharded():
     """A test-registered strategy runs cross-shard MCAS + the sharded map
     without touching core (ISSUE 4 acceptance)."""
     _run("txn_plugin")
+
+
+def test_two_level_routing_matches_oracle():
+    """Hierarchical intra-node combine + one cross-node all_to_all replays
+    against the shared oracle (interleave × capacity variants)."""
+    _run("twolevel")
+
+
+@pytest.mark.parametrize("strategy", [s for s in ("seqlock", "cached_wf")
+                                      if s in LOCKFREE])
+def test_oversubscribed_executor_recovers_from_shard_loss(strategy):
+    """Streams {2,4,8} × injected mid-round shard loss: checkpoint-restore,
+    reshard onto survivors, journal replay — the whole interleaving
+    (across the recovery boundary) replays through one sequential oracle
+    (ISSUE 7 acceptance)."""
+    _run("executor", strategy)
+
+
+def test_elastic_reshard_round_trips():
+    """Table 8->6->4->8 preserving values+versions (LL link survives);
+    training state through the same chain bit-identically, with dropped
+    devices reported by mesh_plan."""
+    _run("elastic")

@@ -1,9 +1,11 @@
 """Fault-tolerance tests: atomic checkpoints, bit-identical preemption
 resume, straggler watchdog logic, elastic resharding (subprocess with 8
-placeholder devices), deterministic data pipeline."""
+placeholder devices), the oversubscribed multi-stream executor (DESIGN.md
+§9), deterministic data pipeline."""
 
 import json
 import os
+import signal
 import subprocess
 import sys
 import textwrap
@@ -18,7 +20,7 @@ from repro.checkpoint import (latest_step, list_steps, restore_checkpoint,
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, reduced_shape
 from repro.data import DataPipeline, synthetic_batch
-from repro.runtime import PreemptionGuard, StragglerWatchdog
+from repro.runtime import PreemptionGuard, StragglerWatchdog, mesh_plan
 from repro.runtime.stragglers import StragglerPlan
 
 
@@ -47,6 +49,26 @@ def test_preemption_guard_flag():
         assert not g.should_stop
         g.request_stop()
         assert g.should_stop
+
+
+def test_preemption_guard_restores_handlers_on_enter_failure():
+    """A failed __enter__ (handler i raises) must roll back handlers
+    0..i-1 — a guard that never activated may not leak signal handlers."""
+    marker = lambda signum, frame: None          # noqa: E731
+    old = signal.signal(signal.SIGTERM, marker)
+    try:
+        with pytest.raises((ValueError, OSError)):
+            # 2nd entry is not a valid signal: installing it raises AFTER
+            # SIGTERM's handler was already swapped
+            with PreemptionGuard(signals=(signal.SIGTERM, 10 ** 6)):
+                pytest.fail("enter must not succeed")
+        assert signal.getsignal(signal.SIGTERM) is marker
+        # and a clean enter/exit round-trips the handler too
+        with PreemptionGuard(signals=(signal.SIGTERM,)):
+            assert signal.getsignal(signal.SIGTERM) is not marker
+        assert signal.getsignal(signal.SIGTERM) is marker
+    finally:
+        signal.signal(signal.SIGTERM, old)
 
 
 def test_preempt_resume_bit_identical(tmp_path):
@@ -106,6 +128,148 @@ def test_straggler_blip_does_not_flag():
     assert plan.flagged == []
     plan = w.observe([1.0, 1.0, 1.0])
     assert plan.flagged == []                    # EWMA recovered
+
+
+def test_mesh_plan_reports_dropped_devices():
+    """Surviving-device counts that don't factorize are REPORTED, never
+    silently truncated (a 7-survivor cluster quietly running on 4 devices
+    is a capacity bug)."""
+    assert mesh_plan(8, model_parallel=2) == (4, 2, 8, 0)
+    assert mesh_plan(7, model_parallel=4) == (7, 1, 7, 0)
+    p = mesh_plan(7, model_parallel=1, global_batch=4)
+    assert (p.data, p.model, p.used, p.dropped) == (1, 1, 1, 6)
+    p = mesh_plan(6, model_parallel=4, global_batch=4)
+    assert (p.used, p.dropped) == (2, 4)
+    assert mesh_plan(6, model_parallel=4).dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# the oversubscribed multi-stream executor (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _synth_streams(n_streams, *, n, k, width, n_batches, seed0=50):
+    from repro.runtime import SyntheticStream
+    return [SyntheticStream(f"s{i}", seed=seed0 + i, n=n, k=k, width=width,
+                            n_batches=n_batches, hot_cells=3, hot_frac=0.25)
+            for i in range(n_streams)]
+
+
+def test_executor_oversubscribed_local_matches_oracle():
+    """3 streams, in-flight budget 4 on 1 slot: the journaled interleaving
+    replays through ONE sequential oracle and the final table matches."""
+    from repro import atomics
+    from repro.core import engine
+    from repro.runtime import Executor, LocalTarget
+    sys.path.insert(0, os.path.dirname(__file__))
+    from oracle import replay_executor_history
+
+    n, k, width = 24, 2, 8
+    rng = np.random.default_rng(0)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    target = LocalTarget(atomics.AtomicSpec(n, k, "seqlock", p_max=64), init)
+    streams = _synth_streams(3, n=n, k=k, width=width, n_batches=5)
+    ex = Executor(target, streams, slots=1, oversubscription=4)
+    rep = ex.run()
+    assert rep["issues"] == 15 and ex.budget == 4
+    oracle = replay_executor_history(n, k, [width] * 3, ex.history,
+                                     initial=init)
+    np.testing.assert_array_equal(
+        oracle.data, np.asarray(engine.logical(target.spec, target.state)))
+    np.testing.assert_array_equal(oracle.version,
+                                  np.asarray(target.state.version))
+
+
+def test_executor_preempt_checkpoint_resume(tmp_path):
+    """A preempt fault mid-run drains + checkpoints to disk; a FRESH
+    executor (new process stand-in) resumes from it and finishes with the
+    table bit-identical to an uninterrupted run."""
+    from repro import atomics
+    from repro.core import engine
+    from repro.runtime import Executor, Fault, FaultInjector, LocalTarget
+
+    n, k, width = 24, 2, 8
+    spec = atomics.AtomicSpec(n, k, "seqlock", p_max=64)
+    rng = np.random.default_rng(1)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+
+    ref = LocalTarget(spec, init)
+    Executor(ref, _synth_streams(2, n=n, k=k, width=width,
+                                 n_batches=6)).run()
+    want = np.asarray(engine.logical(spec, ref.state))
+
+    d = str(tmp_path)
+    t1 = LocalTarget(spec, init)
+    ex1 = Executor(t1, _synth_streams(2, n=n, k=k, width=width, n_batches=6),
+                   injector=FaultInjector([Fault(round=3, kind="preempt")]),
+                   checkpoint_dir=d)
+    rep1 = ex1.run()
+    assert rep1["stopped"] and latest_step(d) is not None
+
+    t2 = LocalTarget(spec, init)                 # fresh process stand-in
+    ex2 = Executor(t2, _synth_streams(2, n=n, k=k, width=width, n_batches=6),
+                   checkpoint_dir=d)
+    ex2.resume()
+    rep2 = ex2.run()
+    assert not rep2["stopped"]
+    np.testing.assert_array_equal(
+        want, np.asarray(engine.logical(spec, t2.state)))
+    np.testing.assert_array_equal(np.asarray(ref.state.version),
+                                  np.asarray(t2.state.version))
+
+
+def test_executor_watchdog_deprioritizes_delayed_stream():
+    """An injected delay makes stream 1 a straggler; the watchdog flags it
+    and the executor skips its next issue slot (work still completes)."""
+    from repro import atomics
+    from repro.runtime import (Executor, Fault, FaultInjector, LocalTarget,
+                               StragglerWatchdog)
+
+    n, k, width = 24, 2, 8
+    target = LocalTarget(atomics.AtomicSpec(n, k, "seqlock", p_max=64))
+    streams = _synth_streams(3, n=n, k=k, width=width, n_batches=8)
+    ex = Executor(
+        target, streams, slots=1, oversubscription=4,
+        watchdog=StragglerWatchdog(n_hosts=3, threshold=1.5, patience=2),
+        injector=FaultInjector([Fault(round=1, kind="delay", stream=1,
+                                      seconds=0.05, rounds=4)]))
+    rep = ex.run()
+    assert rep["deprioritized"] > 0
+    assert all(s.done() for s in streams)
+    assert rep["faults_fired"] and rep["faults_fired"][0]["kind"] == "delay"
+
+
+def test_mcas_stream_yields_between_rounds():
+    """An MCAS batch advances one protocol round per scheduling slot,
+    interleaving with a foreign ops stream on DISJOINT cells: the txns
+    still all commit and the ops stream's history still replays."""
+    from repro import atomics
+    from repro.core import engine
+    from repro.runtime import Executor, LocalTarget, McasStream
+    sys.path.insert(0, os.path.dirname(__file__))
+    from oracle import replay_executor_history
+
+    n, k, width, t, w = 32, 2, 8, 4, 2
+    spec = atomics.AtomicSpec(n, k, "seqlock", p_max=64)
+    rng = np.random.default_rng(2)
+    init = rng.integers(0, 2 ** 32, (n, k), dtype=np.uint32)
+    target = LocalTarget(spec, init)
+    # txns on cells [0, 16), ops stream on [16, 32): disjoint footprints
+    slots = rng.permutation(16)[: t * w].reshape(t, w).astype(np.int32)
+    desired = rng.integers(0, 2 ** 32, (t, w, k), dtype=np.uint32)
+    txns = atomics.make_txns(slots, init[slots], desired, k=k)
+    from repro.runtime import SyntheticStream
+    ops_stream = SyntheticStream("ops", seed=9, n=n, k=k, width=width,
+                                 n_batches=4, slot_lo=16, slot_hi=32)
+    mc = McasStream("mcas", txns)
+    ex = Executor(target, [ops_stream, mc], slots=1, oversubscription=2)
+    ex.run()
+    res = mc.result()
+    assert np.asarray(res.success).all()
+    got = np.asarray(engine.logical(spec, target.state))
+    np.testing.assert_array_equal(got[slots.ravel()],
+                                  desired.reshape(-1, k))
+    oracle = replay_executor_history(n, k, [width], ex.history, initial=init)
+    np.testing.assert_array_equal(oracle.data[16:], got[16:])
 
 
 # ---------------------------------------------------------------------------
