@@ -138,6 +138,31 @@ def _oversub_suite(reps: int):
     return rows
 
 
+def _obs_suite(reps: int):
+    """Counter snapshots (ISSUE 9): the fixed bench_obs mixed sweep under
+    BIGATOMIC_OBS=counters.  compare.py diffs the derived rates WARN-only;
+    throughput stays the only hard gate."""
+    from benchmarks import bench_obs
+    from repro import obs
+
+    with bench_obs._obs_mode("counters"):
+        snap = bench_obs.counters_sweep(quick=False)
+    rates = obs.derived(snap)
+    return [{
+        "name": "obs/counters/mixed_sweep",
+        "hit_rate_fast": rates["hit_rate_fast"],
+        "eligible_rate": rates["eligible_rate"],
+        "mean_slow_rounds": rates["mean_slow_rounds"],
+        "counter.engine.batches": snap["engine.batches"],
+        "counter.engine.rounds.slow": snap["engine.rounds.slow"],
+        "counter.engine.fail.cas": snap["engine.fail.cas"],
+        "counter.engine.loads.raced": snap["engine.loads.raced"],
+        "counter.mcas.commits": snap["mcas.commits"],
+        "counter.mcas.aborts": snap["mcas.aborts"],
+        "counter.queue.rounds": snap.get("queue.rounds", 0),
+    }]
+
+
 def run_baseline(out_path: str, quick: bool = False) -> dict:
     reps = 2 if quick else 5
     doc = {
@@ -159,6 +184,7 @@ def run_baseline(out_path: str, quick: bool = False) -> dict:
     doc["suites"]["atomics"] = _atomics_suite(reps)
     doc["suites"]["txn"] = _txn_suite(reps)
     doc["suites"]["oversub"] = _oversub_suite(reps)
+    doc["suites"]["obs"] = _obs_suite(reps)
     try:
         doc["suites"]["serving"] = _serving_suite(reps)
     except Exception as e:                 # model deps are optional here

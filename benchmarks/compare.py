@@ -6,8 +6,11 @@ Rows are matched across files by their stable `name` key.  Metrics are
 classed by name: `ops_s*` are throughputs (regression = NEW below OLD by
 more than the threshold fraction), `dispatches*` are per-step costs
 (regression = NEW above OLD by more than the threshold — dispatch counts
-are deterministic, so even small increases are real).  Everything else is
-informational.  Exit status 1 iff any regression; CI runs this as a
+are deterministic, so even small increases are real).  Counter-derived
+observability metrics (`hit_rate*`, `eligible_rate`, `mean_*`,
+`counter.*` from the obs suite) are WARN-only: drift prints a WARN row
+but can never fail the diff.  Everything else is informational.  Exit
+status 1 iff any regression; CI runs this as a
 non-blocking report step, humans run it before merging perf-sensitive PRs.
 """
 
@@ -40,6 +43,10 @@ def classify(metric: str) -> str:
         return "throughput"
     if metric.startswith("dispatches"):
         return "cost"
+    # Counter-derived observability metrics (ISSUE 9): drift is surfaced
+    # as WARN but never fails the diff — throughput stays the hard gate.
+    if metric.startswith(("hit_rate", "eligible_rate", "mean_", "counter.")):
+        return "counter"
     return "info"
 
 
@@ -68,6 +75,8 @@ def compare(old: dict, new: dict, threshold: float):
                 delta = (nval - oval) / abs(oval)
             if kind == "throughput":
                 verdict = "REGRESSION" if delta < -threshold else "ok"
+            elif kind == "counter":                 # warn-only, never fails
+                verdict = "WARN" if abs(delta) > threshold else "ok"
             else:                                   # cost
                 verdict = "REGRESSION" if delta > threshold else "ok"
             yield (name, metric, oval, nval, delta, verdict)

@@ -26,8 +26,8 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_atomics, bench_cachehash, bench_distributed,
-                        bench_llsc, bench_memory, bench_oversub, bench_torn,
-                        bench_txn)
+                        bench_llsc, bench_memory, bench_obs, bench_oversub,
+                        bench_torn, bench_txn)
 
 
 def main():
@@ -57,6 +57,8 @@ def main():
          bench_txn.main),
         ("oversubscribed executor + shard-loss recovery (runtime)",
          bench_oversub.main),
+        ("observability: counters sweep + executor trace (repro.obs)",
+         bench_obs.main),
     ]
     failures = []
     for name, fn in benches:

@@ -51,3 +51,26 @@ print("inline hits:", int(stats.inline_hits), "of 3 (one cell access each)")
 h.delete(keys[:1])
 res, _ = h.find(keys)
 print("after delete:", np.asarray(res.found))
+
+# --- observability: the §10 counters, on demand ----------------------------
+# BIGATOMIC_OBS=off (the default) costs nothing — the jitted programs are
+# byte-identical.  Flip it to "counters" and every engine call accumulates
+# the in-graph telemetry; pull it any time with obs.snapshot():
+import os
+
+os.environ["BIGATOMIC_OBS"] = "counters"
+import repro.obs as obs
+
+obs.reset()
+table.store(slots, values)
+table.cas(slots[:3], expected, desired)
+snap = obs.snapshot()          # flat {metric_name: int}, stable schema
+rates = obs.derived(snap)      # hit_rate_fast / eligible_rate / mean_slow_rounds
+print("engine.batches:", snap["engine.batches"],
+      "| fast-path hit rate:", round(rates["hit_rate_fast"], 2),
+      "| cas failures:", snap["engine.fail.cas"])
+# The executor timeline tier: pass obs.Recorder(trace=True) to
+# runtime.Executor and export with obs.write_chrome_trace(rcd, path) —
+# one Perfetto track per logical stream, one per device slot.  The full
+# metric-name table lives in DESIGN.md §10.
+os.environ.pop("BIGATOMIC_OBS")

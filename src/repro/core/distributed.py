@@ -60,6 +60,7 @@ from repro.core import registry
 from repro.core.deprecation import warn_once
 from repro.core.layout import TableState, WORD_DTYPE
 from repro.core.specs import AtomicSpec, HashSpec
+from repro.obs import telemetry as obs_telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -583,6 +584,12 @@ def apply(mesh: Mesh, dspec: DistSpec, dstate: DistState, ops: engine.OpBatch,
     if q != dspec.p_global:
         nctx = engine.LinkCtx(*[x[:q] for x in nctx])
         value, success, overflow = value[:q], success[:q], overflow[:q]
+    if obs_telemetry.carry_in(dstate.local, ops.kind) is not None:
+        # One tiny scalar-accumulate dispatch per collective round when
+        # counters are on (threading the pytree through shard_map is not
+        # worth the churn); zero work when off.  `collective_words(dspec)`
+        # is static per dspec, so the jitted accumulator never retraces.
+        obs_telemetry.record_dist(overflow, collective_words(dspec))
     return (DistState(local), nctx, engine.ApplyResult(value, success),
             overflow)
 

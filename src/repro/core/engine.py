@@ -48,6 +48,7 @@ from jax import lax
 from repro.core import registry
 from repro.core.layout import WORD_DTYPE
 from repro.core.specs import AtomicSpec
+from repro.obs import telemetry as obs_telemetry
 
 # Op kinds.  LOAD/STORE/CAS/IDLE keep their v1 numeric values so legacy
 # `semantics.OpBatch` instances are valid unified batches as-is.
@@ -582,7 +583,7 @@ def check_kinds(kind, allowed, what: str) -> None:
 
 
 def _apply_impl(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None,
-                mode: str):
+                mode: str, telem=None):
     impl = registry.get_strategy(spec.strategy)
     if ctx is None:
         ctx = init_ctx(ops.p, spec.k)
@@ -592,7 +593,15 @@ def _apply_impl(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None,
     new_state = impl.commit(state, new_data, new_version,
                             stats.n_updates, ops.p)
     traffic = impl.traffic(stats, spec.k, ops.p)
-    return new_state, new_ctx, result, stats, traffic
+    if telem is None:
+        # BIGATOMIC_OBS=off: None is an empty pytree, so this traces the
+        # exact pre-observability program (tests/test_obs.py asserts it).
+        return new_state, new_ctx, result, stats, traffic
+    eligible, taken = _engine_round().path_counts(
+        spec.n, ops, fused=round_fn is not linearize)
+    telem = obs_telemetry.count_table(telem, spec.n, ops, result, stats,
+                                      eligible=eligible, taken=taken)
+    return new_state, new_ctx, result, stats, traffic, telem
 
 
 # The engine-kernel mode rides the jit cache key, so flipping
@@ -632,9 +641,19 @@ def apply(spec: AtomicSpec, state, ops: OpBatch, ctx: LinkCtx | None = None,
     if ctx is not None:
         ctx = canonicalize_ctx(ctx)
     mode = _engine_round().configured_mode()
-    if donate and jax.default_backend() != "cpu":
-        return _apply_donated(spec, state, ops, ctx, mode)
-    return _apply(spec, state, ops, ctx, mode)
+    # Under BIGATOMIC_OBS=counters the global counter pytree rides the same
+    # jit call as one extra argument/output (no extra dispatch); when off —
+    # or when an outer jit owns this call — telem is None and the traced
+    # program is byte-identical to the pre-observability one.
+    telem = obs_telemetry.carry_in(state, ops.kind)
+    fn = (_apply_donated if donate and jax.default_backend() != "cpu"
+          else _apply)
+    out = fn(spec, state, ops, ctx, mode, telem)
+    if telem is not None:
+        *out, telem = out
+        obs_telemetry.carry_out(telem)
+        return tuple(out)
+    return out
 
 
 class RoundHandle:
@@ -691,14 +710,27 @@ def init(spec: AtomicSpec, initial=None):
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
+def _read(spec: AtomicSpec, state, slots, telem=None):
+    impl = registry.get_strategy(spec.strategy)
+    values, ok = impl.read(state, jnp.asarray(slots, jnp.int32))
+    if telem is None:
+        return values, ok
+    return values, ok, obs_telemetry.count_read(telem, ok)
+
+
 def read(spec: AtomicSpec, state, slots):
     """Honest per-strategy read protocol.  Returns (values[q, k], ok[q]).
 
     ok=False means the reader observed a torn/locked cell and must retry
     (blocking strategies only); lock-free strategies always return ok=True
-    with a consistent value."""
-    impl = registry.get_strategy(spec.strategy)
-    return impl.read(state, jnp.asarray(slots, jnp.int32))
+    with a consistent value.  Under BIGATOMIC_OBS=counters the retry count
+    accumulates into `obs` as `read.torn_retries` (same jitted call)."""
+    telem = obs_telemetry.carry_in(state, slots)
+    if telem is None:
+        return _read(spec, state, slots)
+    values, ok, telem = _read(spec, state, slots, telem)
+    obs_telemetry.carry_out(telem)
+    return values, ok
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))

@@ -123,6 +123,19 @@ def fast_path_ok(n: int, ops: OpBatch) -> jax.Array:
     return all_in & (read_only | no_dup)
 
 
+def path_counts(n: int, ops: OpBatch, *, fused: bool):
+    """(eligible, taken) for the telemetry tier (`repro.obs`).
+
+    `eligible` is the fast-path predicate above; `taken` is the branch the
+    `lax.cond` in `make_round` resolves this batch to — identical to the
+    predicate when the fused round is in play, statically False otherwise
+    (engine-kernel mode `off`, or a strategy with no lowered round, routes
+    every batch through the slow-path `linearize`)."""
+    eligible = fast_path_ok(n, ops)
+    taken = eligible if fused else jnp.zeros((), bool)
+    return eligible, taken
+
+
 # ---------------------------------------------------------------------------
 # Shared fast-path assembly: kernel/XLA producers feed the same epilogue.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,23 @@
+"""repro.obs — two-tier observability (DESIGN.md §10).
+
+Tier 1 (`obs.telemetry`): in-graph int32 counters accumulated inside the
+existing jitted programs, gated by BIGATOMIC_OBS=off|counters|trace so
+`off` compiles to the exact pre-observability programs.
+
+Tier 2 (`obs.recorder` + `obs.export`): the host-side executor timeline —
+Chrome-trace/Perfetto spans per logical stream and per device slot, plus
+a JSONL metrics sink with a stable name schema.
+"""
+
+from repro.obs.export import (chrome_trace, write_chrome_trace,
+                              write_metrics_jsonl)
+from repro.obs.recorder import Recorder
+from repro.obs.telemetry import (Telemetry, configured_mode, counters_on,
+                                 derived, init_telemetry, record, reset,
+                                 snapshot, trace_on)
+
+__all__ = [
+    "Telemetry", "configured_mode", "counters_on", "trace_on",
+    "init_telemetry", "record", "reset", "snapshot", "derived",
+    "Recorder", "chrome_trace", "write_chrome_trace", "write_metrics_jsonl",
+]

@@ -49,6 +49,7 @@ from collections import deque
 import numpy as np
 
 from repro.core import engine
+from repro.obs.recorder import Recorder
 
 
 def _ops_np(ops: engine.OpBatch) -> engine.OpBatch:
@@ -208,8 +209,15 @@ class Executor:
     slots:            modeled compute slots per device.
     oversubscription: in-flight budget = slots * oversubscription; the
                       paper's regime is factor >= 4.
-    watchdog:         `StragglerWatchdog(n_hosts=len(streams))`; flagged
-                      streams are deprioritized (skip their next slot).
+    watchdog:         `StragglerWatchdog(n_hosts=len(streams))`, fed the
+                      per-stream issue latencies the Recorder keeps
+                      (`Recorder.latency_vector`); flagged streams are
+                      deprioritized (skip their next slot).
+    recorder:         `obs.Recorder` sink for round/issue/lifecycle events
+                      (a fresh one is built if omitted).  It owns the
+                      issue-latency bookkeeping feeding the watchdog and,
+                      under BIGATOMIC_OBS=trace, the Chrome-trace span
+                      timeline (`obs.chrome_trace`).
     guard:            `PreemptionGuard` (or compatible) polled at round
                       boundaries; `request_stop()` drains + checkpoints.
     injector:         `faults.FaultInjector`, polled before every issue.
@@ -221,7 +229,8 @@ class Executor:
     def __init__(self, target, streams, *, slots: int = 2,
                  oversubscription: int = 2, watchdog=None, guard=None,
                  injector=None, checkpoint_dir: str | None = None,
-                 checkpoint_every: int = 0, donate: bool = True):
+                 checkpoint_every: int = 0, donate: bool = True,
+                 recorder: Recorder | None = None):
         self.target = target
         self.streams = list(streams)
         self.slots = slots
@@ -233,6 +242,7 @@ class Executor:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.donate = donate
+        self.recorder = recorder if recorder is not None else Recorder()
 
         self._inflight: deque = deque()
         self._ctx = {i: engine.init_ctx(s.width, self._k())
@@ -242,7 +252,6 @@ class Executor:
         self._round = 0
         self._skip: set[int] = set()
         self._delays: dict[int, list] = {}      # si -> [seconds, rounds left]
-        self._last_times: dict[int, float] = {}
         self._last_ck = None                     # (payload, meta, hist_len)
         self.history: list[IssueRec] = []
         self.recoveries: list[Recovery] = []
@@ -260,17 +269,20 @@ class Executor:
     # -- issue / retire ------------------------------------------------------
 
     def _retire_one(self) -> None:
-        rec, h, stream = self._inflight.popleft()
+        rec, h, stream, tok = self._inflight.popleft()
         if hasattr(h, "finish"):                 # host-stream token
             h.finish()
+            self.recorder.end_issue(tok)
             return
         h.wait()
         if rec is None:                          # "round" stream step
+            self.recorder.end_issue(tok)
             return
         rec.value = np.asarray(h.result.value)
         rec.success = np.asarray(h.result.success)
         ovf = getattr(h, "overflow", None)
         rec.overflow = None if ovf is None else np.asarray(ovf)
+        self.recorder.end_issue(tok, args={"seq": rec.seq})
         stream.deliver(rec.seq, rec.value, rec.success, rec.overflow)
 
     def _drain(self) -> None:
@@ -282,32 +294,37 @@ class Executor:
             self._retire_one()
 
     def _issue(self, si: int, stream) -> bool:
+        name = getattr(stream, "name", None) or f"s{si}"
         if stream.kind == "ops":
             ops = stream.next_batch()
             if ops is None:
                 return False
             seq = self._seq[si]
             self._seq[si] += 1
+            span = self.recorder.begin_issue(si, name)
             h = self.target.issue(ops, self._ctx[si], donate=self.donate)
             self._ctx[si] = h.ctx
             rec = IssueRec(si, seq, _ops_np(ops),
                            order=getattr(h, "order", None))
             self.history.append(rec)
-            self._inflight.append((rec, h, stream))
+            self._inflight.append((rec, h, stream, span))
         elif stream.kind == "round":
             if self.target.kind != "local":
                 raise RuntimeError("round streams (MCAS) drive a "
                                    "LocalTarget")
             if stream.done():
                 return False
+            span = self.recorder.begin_issue(si, name)
             self.target.state = stream.step(self.target.spec,
                                             self.target.state)
-            self._inflight.append((None, _CarryHandle(stream), None))
+            self._inflight.append((None, _CarryHandle(stream), None, span))
         elif stream.kind == "host":
+            span = self.recorder.begin_issue(si, name)
             tok = stream.issue()
             if tok is None:
+                self.recorder.cancel_issue(span)
                 return False
-            self._inflight.append((None, tok, None))
+            self._inflight.append((None, tok, None, span))
         else:
             raise ValueError(f"unknown stream kind {stream.kind!r}")
         self.issues += 1
@@ -355,6 +372,7 @@ class Executor:
             save_checkpoint(self.checkpoint_dir, self._round, payload,
                             meta=meta)
         self.checkpoints.append(self._round)
+        self.recorder.checkpoint(self._round)
 
     def _load_ck(self, payload: dict, meta: dict, hist_len: int) -> list:
         """Common restore: state, ctxs, seqs, stream cursors; returns the
@@ -391,9 +409,10 @@ class Executor:
         self._drain()
         # the post-recovery state is the new baseline
         self.checkpoint()
-        self.recoveries.append(Recovery(
-            self._round, shard, self.target.n_shards, len(journal),
-            time.perf_counter() - t0))
+        rec = Recovery(self._round, shard, self.target.n_shards,
+                       len(journal), time.perf_counter() - t0)
+        self.recoveries.append(rec)
+        self.recorder.recovery(rec.round, shard, rec.replayed, rec.latency_s)
 
     def resume(self, checkpoint_dir: str | None = None) -> int:
         """Resume from the latest DISK checkpoint (preemption restart):
@@ -418,7 +437,8 @@ class Executor:
 
     def _run_round(self) -> None:
         self._round += 1
-        times: dict[int, float] = {}
+        rcd = self.recorder
+        rcd.round_begin(self._round)
         issued = 0
         for si, stream in enumerate(self.streams):
             self._poll_faults(issued)
@@ -429,11 +449,11 @@ class Executor:
             if si in self._skip:
                 self._skip.discard(si)          # deprioritized: skip ONE slot
                 continue
-            t0 = time.perf_counter()
+            t0 = rcd.clock()            # injectable (obs.Recorder(clock=))
             if self._issue(si, stream):
                 issued += 1
-                times[si] = (time.perf_counter() - t0
-                             + self._extra_delay(si))
+                rcd.issue_latency(si, rcd.clock() - t0
+                                  + self._extra_delay(si))
         if not issued and self._inflight:
             # nothing issuable until in-flight work retires (e.g. a decode
             # whose successor needs its tokens): guarantee progress
@@ -441,13 +461,12 @@ class Executor:
         self._poll_faults(issued)
         for d in self._delays.values():
             d[1] -= 1
-        self._last_times.update(times)
-        if self.watchdog is not None and times:
-            fill = sorted(times.values())[len(times) // 2]
-            vec = [self._last_times.get(si, times.get(si, fill))
-                   for si in range(len(self.streams))]
-            plan = self.watchdog.observe(vec)
+        rcd.round_end(self._round)
+        if self.watchdog is not None and rcd.round_issued():
+            plan = self.watchdog.observe(
+                rcd.latency_vector(len(self.streams)))
             if plan.flagged:
+                rcd.straggler_flags(self._round, plan.flagged)
                 self._skip |= set(plan.flagged)
                 self.deprioritized += len(plan.flagged)
 
@@ -462,6 +481,8 @@ class Executor:
                 raise RuntimeError(f"executor exceeded {max_rounds} rounds")
             self._run_round()
             if self.guard is not None and self.guard.should_stop:
+                self.recorder.preempt(self._round,
+                                      drained=len(self._inflight))
                 if self.target is not None:
                     self.checkpoint()
                 else:
@@ -486,6 +507,7 @@ class Executor:
             "recoveries": [dataclasses.asdict(r) for r in self.recoveries],
             "faults_fired": [dataclasses.asdict(f) for f in
                              (self.injector.fired if self.injector else [])],
+            "events": self.recorder.metrics(),
         }
 
 

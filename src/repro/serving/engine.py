@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core.specs import DEFAULT_STRATEGY
 from repro.models.common import ModelConfig
+from repro.obs import telemetry as obs_telemetry
 from repro.models.transformer import forward
 from repro.serving import paged_kv as pk
 from repro.sync.queue import BigQueue
@@ -273,6 +274,7 @@ class ServingEngine:
         req.out_tokens.append(tok)
         slot.rid, slot.seq_id, slot.pos = req.rid, seq_id, T
         slot.new_tokens, slot.active = 1, True
+        obs_telemetry.record(**{"serving.admitted": 1})
 
     def _prefill_into(self, slot_idx: int, req: Request):
         k, v, tok = self._prefill_compute(req)
@@ -381,6 +383,11 @@ class ServingEngine:
                 self.paged, jnp.asarray(phys[np.arange(len(live)), pos // P]),
                 jnp.asarray(pos % P), nk, nv)
             self.dispatch_count += 4
+        obs_telemetry.record(**{
+            "serving.decode_steps": 1,
+            "serving.dispatches": 1 if self._fused_fn is not None else 4,
+            "serving.decode_tokens": len(live),
+        })
         return logits
 
     def _finish_decode(self, live, logits):
@@ -475,6 +482,7 @@ class ServingEngine:
             self.paged = pk.free_pages(self.paged, slot.seq_id, used)
         self.slots[i] = _Slot()
         self.slot_q.enqueue_batch(np.asarray([i], np.uint32))
+        obs_telemetry.record(**{"serving.retired": 1})
 
     def _sample(self, logits):
         if self.requests and all(r.temperature == 0.0

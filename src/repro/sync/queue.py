@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.obs import telemetry as obs_telemetry
 from repro.core.specs import (DEFAULT_STRATEGY, QUEUE_HEAD, QUEUE_SLOT0,
                               QUEUE_TAIL, AtomicSpec, QueueSpec)
 
@@ -235,6 +236,10 @@ class BigQueue:
         counter_cell = np.where(kinds == ENQ, TAIL, HEAD).astype(np.int32)
         ctx = engine.init_ctx(p, k)
         rounds = 0
+        # Host-side telemetry (repro.obs): a few int adds per round here,
+        # one `record` call at the end (itself a no-op unless
+        # BIGATOMIC_OBS=counters).  The signals are the loop's own masks.
+        n_full = n_empty = n_lost = n_backoff = 0
 
         while pending.any():
             rounds += 1
@@ -266,6 +271,8 @@ class BigQueue:
             deq_ready = is_deq & (seq == tick + np.uint32(1))
             enq_full = is_enq & ~enq_ready       # C >= 2: seq != t <=> full
             deq_empty = is_deq & ~deq_ready & (other == tick)
+            n_full += int(enq_full.sum())
+            n_empty += int(deq_empty.sum())
 
             # Stably full/empty only if no pending opposite-kind lane could
             # still flip the verdict; otherwise defer and retry.
@@ -311,8 +318,19 @@ class BigQueue:
             pending &= ~won
             lost = attempt & ~won
             attempts[lost] += 1
+            n_lost += int(lost.sum())
             for lane in np.nonzero(lost)[0]:
                 delay[lane] = self.policy.delay(int(attempts[lane]))
+                n_backoff += 1
             delay[~active] = np.maximum(delay[~active] - 1, 0)
 
+        obs_telemetry.record(**{
+            "queue.rounds": rounds,
+            "queue.enq": int((success & (kinds == ENQ)).sum()),
+            "queue.deq": int((success & (kinds == DEQ)).sum()),
+            "queue.enq_full": n_full,
+            "queue.deq_empty": n_empty,
+            "queue.sc_lost": n_lost,
+            "queue.backoff": n_backoff,
+        })
         return out, success, rounds

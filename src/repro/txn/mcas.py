@@ -57,6 +57,7 @@ from jax import lax
 from repro.core import engine, registry
 from repro.core.layout import WORD_DTYPE
 from repro.core.specs import AtomicSpec
+from repro.obs import telemetry as obs_telemetry
 from repro.sync.queue import BackoffPolicy
 
 
@@ -183,11 +184,16 @@ class McasCarry(NamedTuple):
 
 
 def _round_step(spec: AtomicSpec, impl, round_fn, state, txns: TxnBatch,
-                carry: McasCarry, policy: BackoffPolicy):
+                carry: McasCarry, policy: BackoffPolicy, telem=None):
     """ONE attempt round (LL-all / VALIDATE-all / arbitrate / SC-commit):
     the single traced body both `_mcas`'s while_loop and the cooperative
     `mcas_round` run, so yielding to a scheduler between rounds cannot
-    change any result."""
+    change any result.
+
+    `telem` (BIGATOMIC_OBS=counters) accumulates the protocol's own
+    bookkeeping masks — committed / failed_now / lost — into the mcas.*
+    counters and rides the return as a third element; None keeps the
+    pre-observability two-element return and trace."""
     t, w, k, n = txns.t, txns.w, spec.k, spec.n
     p = t * w
     f_slot = txns.slot.reshape(p)
@@ -255,14 +261,18 @@ def _round_step(spec: AtomicSpec, impl, round_fn, state, txns: TxnBatch,
     attempts = attempts + lost.astype(jnp.int32)
     delay = jnp.where(lost, _policy_delay(policy, attempts),
                       jnp.maximum(delay - 1, 0))
-    return state, McasCarry(r, pending, success, witness, round_res,
-                            attempts, delay)
+    carry = McasCarry(r, pending, success, witness, round_res,
+                      attempts, delay)
+    if telem is None:
+        return state, carry
+    return state, carry, obs_telemetry.count_mcas_round(
+        telem, committed, failed_now, lost)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "policy", "max_rounds", "mode"))
 def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
-          policy: BackoffPolicy, max_rounds: int, mode: str):
+          policy: BackoffPolicy, max_rounds: int, mode: str, telem=None):
     impl = registry.get_strategy(spec.strategy)
     # Commit rounds ride the strategy's lowered kernel round (DESIGN.md §8):
     # the LL-all batch is collision-free under low contention and the SC
@@ -272,14 +282,19 @@ def _mcas(spec: AtomicSpec, state, txns: TxnBatch,
     t, w, k = txns.t, txns.w, spec.k
 
     def body(c):
-        return _round_step(spec, impl, round_fn, c[0], txns, c[1], policy)
+        return _round_step(spec, impl, round_fn, c[0], txns, c[1], policy,
+                           *c[2:])
 
-    init = (state, mcas_begin(txns))
+    init = ((state, mcas_begin(txns)) if telem is None
+            else (state, mcas_begin(txns), telem))
     out = lax.while_loop(
         lambda c: (c[1].r < max_rounds) & jnp.any(c[1].pending), body, init)
-    state, carry = out
-    return state, McasResult(carry.success, carry.witness.reshape(t, w, k),
-                             carry.round_res, carry.attempts, carry.r)
+    state, carry = out[0], out[1]
+    result = McasResult(carry.success, carry.witness.reshape(t, w, k),
+                        carry.round_res, carry.attempts, carry.r)
+    if telem is None:
+        return state, result
+    return state, result, out[2]
 
 
 def mcas(spec: AtomicSpec, state, txns: TxnBatch, *,
@@ -296,8 +311,14 @@ def mcas(spec: AtomicSpec, state, txns: TxnBatch, *,
                          f"spec.k {spec.k}")
     if max_rounds is None:
         max_rounds = max_rounds_bound(txns.t, policy)
-    return _mcas(spec, state, txns, policy, max_rounds,
-                 engine._engine_round().configured_mode())
+    mode = engine._engine_round().configured_mode()
+    telem = obs_telemetry.carry_in(state, txns.slot)
+    if telem is None:
+        return _mcas(spec, state, txns, policy, max_rounds, mode)
+    state, result, telem = _mcas(spec, state, txns, policy, max_rounds,
+                                 mode, telem)
+    obs_telemetry.carry_out(telem)
+    return state, result
 
 
 # ---------------------------------------------------------------------------
@@ -319,10 +340,11 @@ def mcas_begin(txns: TxnBatch) -> McasCarry:
 
 @functools.partial(jax.jit, static_argnames=("spec", "policy", "mode"))
 def _mcas_round(spec: AtomicSpec, state, txns: TxnBatch, carry: McasCarry,
-                policy: BackoffPolicy, mode: str):
+                policy: BackoffPolicy, mode: str, telem=None):
     impl = registry.get_strategy(spec.strategy)
     round_fn = engine.round_for(spec, impl, mode)
-    return _round_step(spec, impl, round_fn, state, txns, carry, policy)
+    return _round_step(spec, impl, round_fn, state, txns, carry, policy,
+                       telem)
 
 
 def mcas_round(spec: AtomicSpec, state, txns: TxnBatch, carry: McasCarry, *,
@@ -339,8 +361,14 @@ def mcas_round(spec: AtomicSpec, state, txns: TxnBatch, carry: McasCarry, *,
     if txns.expected.shape[2] != spec.k:
         raise ValueError(f"txn word width {txns.expected.shape[2]} != "
                          f"spec.k {spec.k}")
-    return _mcas_round(spec, state, txns, carry, policy,
-                       engine._engine_round().configured_mode())
+    mode = engine._engine_round().configured_mode()
+    telem = obs_telemetry.carry_in(state, txns.slot)
+    if telem is None:
+        return _mcas_round(spec, state, txns, carry, policy, mode)
+    state, carry, telem = _mcas_round(spec, state, txns, carry, policy,
+                                      mode, telem)
+    obs_telemetry.carry_out(telem)
+    return state, carry
 
 
 def mcas_finish(txns: TxnBatch, carry: McasCarry) -> McasResult:

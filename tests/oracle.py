@@ -313,6 +313,158 @@ def replay_executor_history(n: int, k: int, widths: list[int], history, *,
 
 
 # ---------------------------------------------------------------------------
+# Telemetry recount (ISSUE 9): the repro.obs counters, recomputed in numpy
+# from claimed linearization orders / delivered results alone.
+# ---------------------------------------------------------------------------
+
+def _np_fast_path_ok(n: int, kind: np.ndarray, slot: np.ndarray) -> bool:
+    """Numpy mirror of `kernels.engine_round.fast_path_ok`."""
+    active = kind != engine.IDLE
+    in_range = (slot >= 0) & (slot < n)
+    all_in = not np.any(active & ~in_range)
+    is_write = active & ((kind == engine.STORE) | (kind == engine.CAS)
+                         | (kind == engine.SC))
+    read_only = not np.any(is_write)
+    cslot = np.where(active & in_range, slot, n).astype(np.int64)
+    counts = np.bincount(cslot, minlength=n + 1)
+    no_dup = np.max(counts[:n], initial=0) <= 1
+    return bool(all_in and (read_only or no_dup))
+
+
+def _np_contention_hist(n: int, kind: np.ndarray, slot: np.ndarray):
+    """Numpy mirror of the telemetry contention histogram: cells bucketed by
+    floor(log2(active lanes)) via the SAME integer-threshold compares as the
+    in-graph version (`obs.telemetry.contention_bucket`) — bit-exact."""
+    from repro.obs.telemetry import N_HIST
+    active = kind != engine.IDLE
+    in_range = (slot >= 0) & (slot < n)
+    cslot = np.where(active & in_range, slot, n).astype(np.int64)
+    c = np.bincount(cslot, minlength=n + 1)[:n]
+    c = c[c > 0]
+    th = 2 ** np.arange(1, N_HIST, dtype=np.int64)
+    bucket = (c[:, None] >= th[None, :]).sum(axis=1)
+    return np.bincount(bucket, minlength=N_HIST).astype(np.int64)
+
+
+def _np_stats_sorted(n: int, kind: np.ndarray, slot: np.ndarray,
+                     success: np.ndarray):
+    """Numpy mirror of `engine.stats_on_sorted` on the (slot, lane)-sorted
+    order, fed the DELIVERED per-lane success (within the engine contract
+    `result.success` equals the internal sorted-order update success on
+    every STORE/CAS/SC lane, which is the only place it is read).
+    Returns (rounds, n_raced_loads, n_dirty_cells)."""
+    p = kind.shape[0]
+    active = kind != engine.IDLE
+    aslot = np.where(active, slot, n)
+    order = np.argsort(aslot, kind="stable")
+    s_slot, s_kind, succ_s = aslot[order], kind[order], success[order]
+    seg_start = np.ones(p, bool)
+    seg_start[1:] = s_slot[1:] != s_slot[:-1]
+    seg_id = np.cumsum(seg_start) - 1
+    is_valcas = (s_kind == engine.STORE) | (s_kind == engine.CAS)
+    is_sc = (s_kind == engine.SC) & (s_slot < n)
+    is_upd = is_valcas | is_sc
+    is_read = (s_kind == engine.LOAD) | (s_kind == engine.LL)
+    excl_upd = np.cumsum(is_upd) - is_upd
+    start_idx = np.arange(p)[seg_start][seg_id]
+    upd_rank = excl_upd - excl_upd[start_idx]
+    n_rounds = int(upd_rank[is_upd].max() + 1) if is_upd.any() else 0
+    rounds = n_rounds if is_valcas.any() else (1 if is_sc.any() else 0)
+    wrote = is_valcas | (is_sc & succ_s)
+    # `engine._seg_broadcast_any` is a flipped inclusive scan: a SUFFIX-any
+    # within the segment (any(flags[i:seg_last])), so a load only races a
+    # write AT-OR-AFTER it in sorted order.  Mirror that exactly; for
+    # `dirty` (read at seg starts only) suffix-any == whole-segment any.
+    def _suffix_any(flags):
+        out = np.zeros(p, bool)
+        acc = False
+        for i in range(p - 1, -1, -1):
+            if i == p - 1 or seg_start[i + 1]:
+                acc = False
+            acc = acc or bool(flags[i])
+            out[i] = acc
+        return out
+
+    raced = int(np.sum(is_read & _suffix_any(wrote)))
+    dirty = int(np.sum(seg_start & _suffix_any(succ_s & is_upd)
+                       & (s_slot < n)))
+    return rounds, raced, dirty
+
+
+class TelemetryOracle:
+    """Recount the `repro.obs` in-graph counters from the oracle's own
+    inputs: op batches, delivered results, MCAS results and distributed
+    claimed orders.  `tests/test_obs.py` requires `counts()` to equal the
+    matching keys of `obs.snapshot()` BIT-EXACTLY across strategies and
+    engine-kernel modes — the counters are definitions, not estimates."""
+
+    _KINDS = ("load", "store", "cas", "idle", "ll", "sc", "validate",
+              "find", "insert", "delete")
+
+    def __init__(self, n: int):
+        from repro.obs.telemetry import N_HIST
+        self.n = n
+        self._n_hist = N_HIST
+        self.c: dict[str, int] = {}
+
+    def _add(self, name: str, v) -> None:
+        self.c[name] = self.c.get(name, 0) + int(v)
+
+    def count_table_batch(self, ops, result, *, fused: bool) -> None:
+        """One `engine.apply` batch: `fused` says whether the engine ran a
+        lowered kernel round (resolved BIGATOMIC_ENGINE_KERNEL != off)."""
+        kind = np.asarray(ops.kind)
+        slot = np.asarray(ops.slot)
+        success = np.asarray(result.success)
+        active = kind != engine.IDLE
+        self._add("engine.batches", 1)
+        for j, name in enumerate(self._KINDS):
+            self._add(f"engine.ops.{name}", np.sum(kind == j))
+        eligible = _np_fast_path_ok(self.n, kind, slot)
+        taken = eligible and fused
+        self._add("engine.fast.eligible", eligible)
+        self._add("engine.fast.taken", taken)
+        rounds, raced, dirty = _np_stats_sorted(self.n, kind, slot, success)
+        self._add("engine.rounds.total", rounds)
+        self._add("engine.rounds.slow", 0 if taken else rounds)
+        self._add("engine.fail.cas",
+                  np.sum(active & (kind == engine.CAS) & ~success))
+        self._add("engine.fail.sc",
+                  np.sum(active & (kind == engine.SC) & ~success))
+        self._add("engine.loads.raced", raced)
+        self._add("engine.cells.dirty", dirty)
+        hist = _np_contention_hist(self.n, kind, slot)
+        for b in range(self._n_hist):
+            self._add(f"engine.contention.log2_{b:02d}", hist[b])
+
+    def count_read(self, ok) -> None:
+        self._add("read.torn_retries", np.sum(~np.asarray(ok)))
+
+    def count_mcas(self, result) -> None:
+        """One drained `txn.mcas` run, recounted from the McasResult alone:
+        every resolved txn committed or aborted in exactly one round, and
+        `attempts` journals each arbitration loss (= backoff event)."""
+        success = np.asarray(result.success)
+        rnd = np.asarray(result.round)
+        self._add("mcas.commits", np.sum(success))
+        self._add("mcas.aborts", np.sum((rnd > 0) & ~success))
+        self._add("mcas.rounds", int(result.rounds))
+        self._add("mcas.backoff", np.sum(np.asarray(result.attempts)))
+
+    def count_dist_batch(self, overflow, words: int) -> None:
+        """One `distributed.apply` collective round, from the claimed-order
+        overflow mask (`distributed.linearization_order`) and the static
+        `distributed.collective_words(dspec)`."""
+        self._add("dist.route_overflow", np.sum(np.asarray(overflow)))
+        self._add("dist.rounds", 1)
+        self._add("dist.words", words)
+
+    def counts(self) -> dict:
+        """Every recounted metric, keyed exactly like `obs.snapshot()`."""
+        return dict(self.c)
+
+
+# ---------------------------------------------------------------------------
 # Shared randomized batch generators (tests + the distributed suite).
 # ---------------------------------------------------------------------------
 

@@ -238,6 +238,49 @@ def test_executor_watchdog_deprioritizes_delayed_stream():
     assert rep["faults_fired"] and rep["faults_fired"][0]["kind"] == "delay"
 
 
+class _TickClock:
+    """Deterministic stand-in for perf_counter: every call advances 1ms, so
+    each issue measures exactly one tick and injected delays dominate."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.001
+        return self.t
+
+
+def test_straggler_flagged_after_exactly_patience_rounds():
+    """The executor feeds the watchdog from the obs Recorder's per-stream
+    issue latencies (`Recorder.latency_vector`): a stream degraded from
+    round 1 is flagged at EXACTLY round `patience` — the first round its
+    latency window is full — and the flag lands in `recorder.flags`.
+    The Recorder's injectable clock makes the latencies exact (healthy
+    streams 1ms, the faulted stream +50ms), so the round is deterministic."""
+    from repro import atomics
+    from repro.obs import Recorder
+    from repro.runtime import (Executor, Fault, FaultInjector, LocalTarget,
+                               StragglerWatchdog)
+
+    patience = 3
+    n, k, width = 24, 2, 8
+    target = LocalTarget(atomics.AtomicSpec(n, k, "seqlock", p_max=64))
+    streams = _synth_streams(4, n=n, k=k, width=width, n_batches=10)
+    ex = Executor(
+        target, streams, slots=1, oversubscription=4,
+        watchdog=StragglerWatchdog(n_hosts=4, threshold=1.5,
+                                   patience=patience),
+        injector=FaultInjector([Fault(round=1, kind="delay", stream=2,
+                                      seconds=0.05, rounds=10)]),
+        recorder=Recorder(trace=False, clock=_TickClock()))
+    ex.run()
+    assert ex.recorder.flags, "degraded stream never flagged"
+    first_round, flagged = ex.recorder.flags[0]
+    assert flagged == [2]
+    assert first_round == patience
+    assert ex.recorder.metrics()["exec.straggler_flags"] >= 1
+
+
 def test_mcas_stream_yields_between_rounds():
     """An MCAS batch advances one protocol round per scheduling slot,
     interleaving with a foreign ops stream on DISJOINT cells: the txns
