@@ -163,6 +163,35 @@ def _obs_suite(reps: int):
     }]
 
 
+def _faults_suite(reps: int):
+    """Guard cells (DESIGN.md §11): scrub throughput is gated like any
+    `ops_s` metric; recovery latency and the overload shed rate ride
+    along informationally."""
+    from benchmarks import bench_faults
+
+    rows = []
+    for strategy in ("seqlock", "indirect", "cached_wf", "cached_me"):
+        cell = bench_faults.scrub_throughput_cell(strategy, reps=reps)
+        rows.append({
+            "name": f"faults/scrub/{strategy}",
+            "ops_s": cell["cells_s"],
+        })
+    rec = bench_faults.recovery_latency_cell()
+    rows.append({
+        "name": "faults/recovery",
+        "latency_s": rec["latency_s"],
+        "repaired": rec["repaired"],
+        "quarantined": rec["quarantined"],
+    })
+    shed = bench_faults.shed_rate_cell()
+    rows.append({
+        "name": "faults/shed_overload",
+        "shed_rate": shed["shed_rate"],
+        "quarantined": shed["quarantined"],
+    })
+    return rows
+
+
 def run_baseline(out_path: str, quick: bool = False) -> dict:
     reps = 2 if quick else 5
     doc = {
@@ -185,6 +214,7 @@ def run_baseline(out_path: str, quick: bool = False) -> dict:
     doc["suites"]["txn"] = _txn_suite(reps)
     doc["suites"]["oversub"] = _oversub_suite(reps)
     doc["suites"]["obs"] = _obs_suite(reps)
+    doc["suites"]["faults"] = _faults_suite(reps)
     try:
         doc["suites"]["serving"] = _serving_suite(reps)
     except Exception as e:                 # model deps are optional here

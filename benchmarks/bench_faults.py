@@ -1,0 +1,140 @@
+"""repro.guard perf bench (DESIGN.md §11): what fault tolerance costs.
+
+Three fixed cells, each a number the guard's design argues about:
+
+  * scrub throughput — cells/s of the whole-table integrity pass
+    (FNV digest + structural invariants) per strategy; this bounds how
+    often `scrub_every` can afford to run.
+  * recovery latency — wall-clock from an injected bit flip at a drained
+    boundary to the cell spliced back from the checkpoint (the
+    `ScrubReport.latency_s` the executor records).
+  * shed rate under overload — streams confined to a quarantined slot
+    range retry through their backoff budgets and shed; the rate (shed
+    streams / streams) measures how fast degradation converges instead
+    of livelocking.
+
+Results land in benchmarks/results/faults.json; `benchmarks/baseline.py`
+commits the same cells into the BENCH document (`faults` suite), where
+scrub throughput is gated like any other `ops_s` metric and the latency /
+rate cells ride along informationally.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+SCRUB_N, SCRUB_K = 1 << 14, 4
+
+
+def scrub_throughput_cell(strategy: str, *, reps: int = 5) -> dict:
+    """cells/s of a full detection pass (digest + invariants) at the
+    fixed table shape."""
+    import numpy as np
+
+    from repro.core import engine
+    from repro.core.specs import AtomicSpec
+    from repro.guard import cell_digest, check_invariants
+
+    spec = AtomicSpec(SCRUB_N, SCRUB_K, strategy, 64)
+    state = engine.init(spec, np.arange(SCRUB_N * SCRUB_K, dtype=np.uint32)
+                        .reshape(SCRUB_N, SCRUB_K))
+
+    def one_pass():
+        d = cell_digest(spec, state)
+        masks = check_invariants(spec, state)
+        d.block_until_ready()
+        for m in masks.values():
+            m.block_until_ready()
+
+    one_pass()                                      # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        one_pass()
+    dt = (time.perf_counter() - t0) / reps
+    return {"strategy": strategy, "cells_s": SCRUB_N / dt,
+            "pass_s": dt, "n": SCRUB_N, "k": SCRUB_K}
+
+
+def recovery_latency_cell(*, seed: int = 11) -> dict:
+    """Inject one bit flip into a checkpoint-clean cell mid-run; report
+    the scrub pass latency and that the cell came back repaired."""
+    from repro.guard.chaos import run_chaos
+
+    res = run_chaos(seed, "seqlock", n=256, k=2, width=16, n_streams=3,
+                    n_batches=4, data_faults=2, sched_faults=0)
+    reports = [r for r in res["executor"].scrubber.reports
+               if r.detected or r.repaired]
+    lat = [r.latency_s for r in reports]
+    return {"scrubs": len(res["executor"].scrubber.reports),
+            "detecting_scrubs": len(reports),
+            "repaired": sum(len(r.repaired) for r in reports),
+            "quarantined": sum(len(r.quarantined) for r in reports),
+            "latency_s": max(lat) if lat else 0.0}
+
+
+def shed_rate_cell(*, n_streams: int = 4) -> dict:
+    """Overload degradation: every stream hammers one slot range that the
+    guard quarantines wholesale; measure how many shed (vs livelock)."""
+    import numpy as np
+
+    from repro.core.specs import AtomicSpec
+    from repro.runtime.executor import Executor, LocalTarget
+    from repro.runtime.faults import Fault, FaultInjector
+    from repro.runtime.streams import SyntheticStream
+    from repro.sync.queue import BackoffPolicy
+
+    os.environ["BIGATOMIC_GUARD"] = "on"
+    try:
+        lo, hi = 0, 4
+        spec = AtomicSpec(16, 2, "seqlock", 16)
+        streams = [SyntheticStream(f"s{i}", seed=500 + i, n=16, k=2,
+                                   width=4, n_batches=8,
+                                   slot_lo=lo, slot_hi=hi)
+                   for i in range(n_streams)]
+        faults = [Fault(round=2, kind="bit_flip", slot=s, field="data")
+                  for s in range(lo, hi)]
+        ex = Executor(LocalTarget(spec), streams,
+                      injector=FaultInjector(faults, seed=3),
+                      checkpoint_every=0, retry_budget=1,
+                      backoff=BackoffPolicy("none"))
+        t0 = time.perf_counter()
+        rep = ex.run()
+        dt = time.perf_counter() - t0
+    finally:
+        os.environ.pop("BIGATOMIC_GUARD", None)
+    return {"streams": n_streams, "shed": len(rep["shed"]),
+            "shed_rate": len(rep["shed"]) / n_streams,
+            "quarantined": rep["poisoned"], "rounds": rep["rounds"],
+            "wall_s": dt}
+
+
+def main(quick: bool = False) -> None:
+    reps = 2 if quick else 5
+    doc = {"scrub_throughput": [], "recovery": None, "shed": None}
+    for strategy in ("seqlock", "indirect", "cached_wf", "cached_me"):
+        cell = scrub_throughput_cell(strategy, reps=reps)
+        doc["scrub_throughput"].append(cell)
+        print(f"scrub  {strategy:10s} {cell['cells_s'] / 1e6:8.2f} Mcells/s"
+              f"  ({cell['pass_s'] * 1e3:.2f} ms/pass)")
+    doc["recovery"] = recovery_latency_cell()
+    print(f"recover  repaired={doc['recovery']['repaired']} "
+          f"quarantined={doc['recovery']['quarantined']} "
+          f"scrub_latency={doc['recovery']['latency_s'] * 1e3:.2f} ms")
+    doc["shed"] = shed_rate_cell()
+    print(f"shed     rate={doc['shed']['shed_rate']:.2f} "
+          f"({doc['shed']['shed']}/{doc['shed']['streams']} streams, "
+          f"{doc['shed']['quarantined']} cells quarantined)")
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "faults.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

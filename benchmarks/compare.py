@@ -12,6 +12,12 @@ observability metrics (`hit_rate*`, `eligible_rate`, `mean_*`,
 but can never fail the diff.  Everything else is informational.  Exit
 status 1 iff any regression; CI runs this as a
 non-blocking report step, humans run it before merging perf-sensitive PRs.
+
+A row absent from the new file is a REGRESSION only when its whole suite
+still exists there; a suite absent from one side entirely (a bench that
+didn't run — e.g. a quick/--baseline subset, or a fault-injection suite
+gated off) downgrades its rows to WARN-only `MISSING-SUITE` so a partial
+run can never hard-fail the diff on coverage alone.
 """
 
 from __future__ import annotations
@@ -54,11 +60,17 @@ def compare(old: dict, new: dict, threshold: float):
     """Yields (name, metric, old, new, delta_frac, verdict)."""
     old_rows = rows_by_name(old)
     new_rows = rows_by_name(new)
+    new_suites = set(new.get("suites", {}))
+    suite_of = {row["name"]: suite
+                for suite, rows in old.get("suites", {}).items()
+                for row in rows}
     for name in sorted(old_rows):
         o = old_rows[name]
         n = new_rows.get(name)
         if n is None:
-            yield (name, "-", None, None, None, "MISSING")
+            missing_suite = suite_of.get(name) not in new_suites
+            yield (name, "-", None, None, None,
+                   "MISSING-SUITE" if missing_suite else "MISSING")
             continue
         for metric, oval in o.items():
             if metric == "name" or not isinstance(oval, (int, float)):
@@ -98,7 +110,7 @@ def main(argv=None) -> int:
           f"{'delta':>8s}  verdict")
     for name, metric, oval, nval, delta, verdict in compare(
             old, new, args.threshold):
-        if verdict in ("MISSING", "NEW"):
+        if verdict in ("MISSING", "MISSING-SUITE", "NEW"):
             print(f"{name:44s} {'-':14s} {'-':>12s} {'-':>12s} "
                   f"{'-':>8s}  {verdict}")
             regressions += verdict == "MISSING"

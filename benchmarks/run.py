@@ -26,8 +26,8 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_atomics, bench_cachehash, bench_distributed,
-                        bench_llsc, bench_memory, bench_obs, bench_oversub,
-                        bench_torn, bench_txn)
+                        bench_faults, bench_llsc, bench_memory, bench_obs,
+                        bench_oversub, bench_torn, bench_txn)
 
 
 def main():
@@ -59,6 +59,8 @@ def main():
          bench_oversub.main),
         ("observability: counters sweep + executor trace (repro.obs)",
          bench_obs.main),
+        ("fault tolerance: scrub throughput + recovery + shed (repro.guard)",
+         bench_faults.main),
     ]
     failures = []
     for name, fn in benches:

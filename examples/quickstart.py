@@ -74,3 +74,27 @@ print("engine.batches:", snap["engine.batches"],
 # one Perfetto track per logical stream, one per device slot.  The full
 # metric-name table lives in DESIGN.md §10.
 os.environ.pop("BIGATOMIC_OBS")
+
+# --- fault tolerance: the §11 guard, on demand -----------------------------
+# BIGATOMIC_GUARD=off (the default) costs nothing.  The guard layer gives
+# you a per-cell integrity digest, a scrub pass that detects/repairs/
+# quarantines corruption, and a seeded injector to prove it works:
+from repro import guard
+from repro.guard.inject import inject_table_fault
+from repro.runtime.faults import Fault
+
+baseline = np.asarray(guard.cell_digest(table.spec, table.state))
+corrupt, info = inject_table_fault(                 # flip one random bit
+    table.spec, table.state, Fault(round=1, kind="bit_flip"),
+    np.random.default_rng(0))
+report = guard.scrub(table.spec, corrupt, baseline=baseline)
+print("injected", info["kind"], "at slot", info["slot"],
+      "-> detected:", sorted(report.detected),
+      "| quarantined:", sorted(report.quarantined))
+# Under runtime.Executor(scrub_every=1, retry_budget=...) the scrub runs
+# automatically at round boundaries, repairs cells with a trusted copy,
+# masks ops against quarantined cells (success=False), and sheds streams
+# that exhaust their retry budget instead of crashing the run; the
+# serving engine's OverloadPolicy sheds admissions the same way.  The
+# chaos gate (`python -m repro.guard.chaos`) replays seeded fault
+# schedules through the sequential oracle — see DESIGN.md §11.

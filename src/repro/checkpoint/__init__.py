@@ -1,3 +1,4 @@
 from repro.checkpoint.disk import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, list_steps,
+    CheckpointError, save_checkpoint, restore_checkpoint, restore_latest,
+    verify_checkpoint, latest_step, list_steps,
 )

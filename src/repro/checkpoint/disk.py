@@ -23,10 +23,16 @@ import os
 import re
 import shutil
 import tempfile
+import zlib
 
 import jax
 import ml_dtypes
 import numpy as np
+
+
+class CheckpointError(Exception):
+    """A checkpoint failed verification (corrupt, truncated, or missing a
+    leaf) — `restore_latest` falls back to the newest step that verifies."""
 
 # numpy can't np.save extension dtypes (bfloat16, fp8); store them as raw
 # unsigned views and record the logical dtype in the manifest.
@@ -73,10 +79,17 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *, meta: dict | None
             np.save(os.path.join(stage, fname), raw)
             manifest["leaves"][key] = {
                 "file": fname, "shape": list(arr.shape),
-                "dtype": dtype_name}
-        # manifest LAST = the validated-pointer swing
-        with open(os.path.join(stage, "manifest.json"), "w") as f:
+                "dtype": dtype_name,
+                # integrity word (DESIGN.md §11): CRC32 of the raw (native
+                # view) bytes, checked by restore when verify=True
+                "crc32": zlib.crc32(np.ascontiguousarray(raw).tobytes())}
+        # manifest LAST = the validated-pointer swing; its own write is
+        # write-then-rename so a crash can never leave a torn manifest
+        # that still parses
+        mtmp = os.path.join(stage, ".manifest.tmp")
+        with open(mtmp, "w") as f:
             json.dump(manifest, f)
+        os.replace(mtmp, os.path.join(stage, "manifest.json"))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(stage, final)                 # atomic on one filesystem
@@ -104,11 +117,16 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, template,
-                       *, shardings=None):
+                       *, shardings=None, verify: bool = False):
     """Restore into the structure of `template` (a pytree of arrays or
     ShapeDtypeStructs).  `shardings`: optional matching pytree of
     NamedShardings — leaves are device_put with them, which is what makes
-    restore elastic (any mesh, any process count)."""
+    restore elastic (any mesh, any process count).
+
+    verify=True checks every leaf against its manifest CRC32 and raises
+    `CheckpointError` on any damage (corrupt bytes, truncated file,
+    missing leaf) instead of returning silently wrong state; checkpoints
+    written before CRCs existed load unverified with a pass."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -118,11 +136,28 @@ def restore_checkpoint(ckpt_dir: str, step: int, template,
     for key in flat_t:
         ent = manifest["leaves"].get(key)
         if ent is None:
+            if verify:
+                raise CheckpointError(f"checkpoint missing leaf {key!r}")
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = _from_native(np.load(os.path.join(path, ent["file"])),
-                           ent["dtype"])
+        try:
+            raw = np.load(os.path.join(path, ent["file"]))
+        except Exception as e:               # truncated / unreadable npy
+            if verify:
+                raise CheckpointError(f"{key}: unreadable leaf "
+                                      f"({type(e).__name__}: {e})") from e
+            raise
+        if verify and ent.get("crc32") is not None:
+            got = zlib.crc32(np.ascontiguousarray(raw).tobytes())
+            if got != ent["crc32"]:
+                raise CheckpointError(
+                    f"{key}: CRC mismatch ({got:#010x} != "
+                    f"{ent['crc32']:#010x})")
+        arr = _from_native(raw, ent["dtype"])
         want = flat_t[key]
         if tuple(arr.shape) != tuple(want.shape):
+            if verify:
+                raise CheckpointError(f"{key}: shape {arr.shape} != "
+                                      f"{want.shape}")
             raise ValueError(f"{key}: shape {arr.shape} != {want.shape}")
         if flat_s:
             leaves_out.append(jax.device_put(arr, flat_s[key]))
@@ -132,3 +167,44 @@ def restore_checkpoint(ckpt_dir: str, step: int, template,
     paths_leaves = jax.tree_util.tree_flatten_with_path(template)[0]
     return jax.tree_util.tree_unflatten(treedef, leaves_out), \
         manifest.get("meta", {})
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> bool:
+    """True iff every leaf of `step` reads back and matches its manifest
+    CRC32 (pre-CRC checkpoints verify by readability alone)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        for key, ent in manifest["leaves"].items():
+            raw = np.load(os.path.join(path, ent["file"]))
+            if tuple(raw.shape) != tuple(ent["shape"]) and \
+                    ent["dtype"] in _NATIVE:
+                return False
+            crc = ent.get("crc32")
+            if crc is not None and \
+                    zlib.crc32(np.ascontiguousarray(raw).tobytes()) != crc:
+                return False
+    except Exception:
+        return False
+    return True
+
+
+def restore_latest(ckpt_dir: str, template, *, shardings=None):
+    """Restore the newest VERIFYING checkpoint: walks steps newest-first,
+    skipping any that fail CRC/read verification (corrupt or truncated),
+    and returns `(state, meta, step)`.  Raises `CheckpointError` when no
+    step verifies, `FileNotFoundError` when there are no steps at all."""
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    for step in reversed(steps):
+        try:
+            state, meta = restore_checkpoint(ckpt_dir, step, template,
+                                             shardings=shardings,
+                                             verify=True)
+            return state, meta, step
+        except CheckpointError:
+            continue
+    raise CheckpointError(f"no checkpoint under {ckpt_dir} verifies "
+                          f"(tried steps {steps})")

@@ -86,6 +86,19 @@ class StrategyImpl:
         must retry — see `bigatomic.read_protocol` for the full contract."""
         return state.data[slots], jnp.ones((slots.shape[0],), bool)
 
+    def check_invariants(self, spec, state: TableState) -> dict:
+        """Structural invariants of the layout at a QUIESCENT point (no
+        batch in flight) — the redundancy `repro.guard.scrub` checks.
+
+        Returns ``{invariant_name: bool[n] violation mask}`` (True =
+        violated).  Called under `jax.jit`; every mask must be a traced
+        bool[n].  The base PLAIN layout stores no redundancy, so nothing
+        is checkable and the dict is empty; richer layouts report the
+        paper's at-rest invariants (even seqlock versions, indirect
+        pointer/shadow agreement, cached tag consistency — see
+        `core.strategies` and DESIGN.md §11)."""
+        return {}
+
     def lower_round(self, spec, *, mode: str, interpret: bool):
         """Hand the engine a fused execution round for this layout, or None.
 

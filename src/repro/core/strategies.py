@@ -61,6 +61,10 @@ class _Versioned(StrategyImpl):
     def memory_bytes(self, n, k, p):
         return n * (k + 1) * WORD_BYTES
 
+    def check_invariants(self, spec, state):
+        # At a quiescent point every writer has unlocked: versions even.
+        return {"version_parity": state.version % 2 != 0}
+
 
 @register_strategy
 class Seqlock(_KernelLowering, _Versioned):
@@ -118,6 +122,11 @@ class Simplock(_Versioned):
         half = state.data[slot].at[:torn_words].set(new_value[:torn_words])
         return state._replace(lock=state.lock.at[slot].set(jnp.uint32(1)),
                               data=state.data.at[slot].set(half))
+
+    def check_invariants(self, spec, state):
+        out = super().check_invariants(spec, state)
+        out["lock_released"] = state.lock != 0      # no holder at rest
+        return out
 
 
 class _NodePool(_Versioned):
@@ -201,6 +210,16 @@ class Indirect(_KernelLowering, _NodePool):
         pool = state.pool.at[free_slot].set(new_value)
         return state._replace(pool=pool)
 
+    def check_invariants(self, spec, state):
+        out = super().check_invariants(spec, state)
+        m = state.pool.shape[0]
+        bad_ptr = (state.bptr < 0) | (state.bptr >= m)
+        node = state.pool[jnp.clip(state.bptr, 0, m - 1)]
+        out["pointer_range"] = bad_ptr
+        # commit maintains data as an exact shadow of pool[bptr]
+        out["shadow_agrees"] = ~bad_ptr & jnp.any(node != state.data, axis=1)
+        return out
+
 
 class _Cached(_NodePool):
     """Shared traffic model for the two cached layouts (1-gather fast path)."""
@@ -251,6 +270,18 @@ class CachedWF(_KernelLowering, _Cached):
             mark=state.mark.at[slot].set(True),
             version=state.version.at[slot].add(jnp.uint32(1)),
             data=state.data.at[slot].set(half))
+
+    def check_invariants(self, spec, state):
+        out = super().check_invariants(spec, state)
+        m = state.pool.shape[0]
+        bad_ptr = (state.bptr < 0) | (state.bptr >= m)
+        backup = state.pool[jnp.clip(state.bptr, 0, m - 1)]
+        out["pointer_range"] = bad_ptr
+        # every batch ends validated: cache == backup, marks clear
+        out["cache_matches_backup"] = \
+            ~bad_ptr & jnp.any(backup != state.data, axis=1)
+        out["mark_clear"] = state.mark
+        return out
 
 
 @register_strategy
@@ -312,3 +343,13 @@ class CachedME(_KernelLowering, _Cached):
     def memory_bytes(self, n, k, p):
         w = WORD_BYTES
         return n * (k + 2) * w + 3 * p * k * w + 3 * p * w
+
+    def check_invariants(self, spec, state):
+        out = super().check_invariants(spec, state)
+        # At rest every bptr is null (paper §3.2): either the init/restore
+        # NULL or the tagged null commit leaves, whose tag must agree with
+        # the cell's version (-(tag+2) with tag = (ver >> 1) & 0x3FFFFFFF).
+        tag = (state.version >> 1).astype(jnp.int32) & jnp.int32(0x3FFFFFFF)
+        ok = (state.bptr == NULL) | (state.bptr == -(tag + 2))
+        out["tagged_null"] = ~ok
+        return out

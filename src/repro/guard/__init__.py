@@ -1,0 +1,54 @@
+"""repro.guard — integrity scrubbing and graceful degradation (DESIGN.md §11).
+
+The data-plane half of the resilience story: `runtime.faults` can corrupt
+live big-atomic state (bit flips, torn k-word writes, stale shard
+resurrection, damaged checkpoints); this package detects that corruption
+at drained round boundaries, repairs what the last checkpoint still
+vouches for, and quarantines the rest so subsequent ops report
+`success=False` per the overflow-mask contract instead of serving garbage.
+
+Layers:
+
+  invariants   per-strategy structural checks via the
+               `StrategyImpl.check_invariants` registry hook (seqlock
+               parity, indirect pointer/shadow agreement, cached_wf/
+               cached_me tag consistency, version-list head/pool
+               agreement).
+  scrub        jitted whole-table digest + invariant pass classifying
+               each cell clean / repairable / quarantined (`ScrubReport`);
+               XLA always, blocked Pallas digest where the strategy
+               already lowers the engine round.
+  chaos        seeded harness composing randomized scheduling + data-plane
+               fault schedules over executor runs, replayed through
+               tests/oracle.py — the zero-undetected-corruptions gate.
+
+Gate: `BIGATOMIC_GUARD` = off (default) | on, read per executor
+construction.  Off is FREE: no guard object exists, no jitted program
+changes shape, and executor/engine traces are byte-identical to the
+pre-guard build (pinned by tests/test_guard.py via
+`analysis.tracing.assert_max_new_traces`).
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.guard.invariants import (  # noqa: F401
+    check_invariants, check_version_list, violation_mask,
+)
+from repro.guard.scrub import (  # noqa: F401
+    ScrubReport, Scrubber, cell_digest, scrub,
+)
+
+
+def configured() -> str:
+    mode = os.environ.get("BIGATOMIC_GUARD", "off")
+    if mode not in ("off", "on"):
+        raise ValueError(f"BIGATOMIC_GUARD={mode!r}; expected off|on")
+    return mode
+
+
+def enabled() -> bool:
+    """True when the guard tier is requested (read per call, like the
+    BIGATOMIC_OBS / BIGATOMIC_ENGINE_KERNEL flags)."""
+    return configured() == "on"

@@ -1,0 +1,137 @@
+"""Data-plane fault realization: mutate live big-atomic state (DESIGN.md §11).
+
+`runtime.faults` decides WHEN a data-plane fault fires; this module decides
+WHAT it does to the table, per strategy, at a drained round boundary:
+
+  bit_flip     XOR one bit of one live table word.  The victim word is the
+               cell's value storage in its OWN layout — seqlock/cached_me
+               flip `data`, indirect flips the live pool node, cached_wf
+               flips either the cache row or its backup node — or the
+               version word (word == k).  `field=` overrides the choice
+               ("data" | "version" | "pool" | "bptr") for invariant-
+               targeted tests.
+  torn_write   overwrite a prefix of the cell's k-word value row WITHOUT
+               touching the version — the paper's torn-write hazard landed
+               at rest.  The first garbage word is forced to differ from
+               the live word, so the corruption is never a no-op.
+
+Both return `(new_state, info)` with the realized choices, so chaos runs
+can assert the guard detected every single injection.  XOR always changes
+the victim word, and the scrub digest's FNV-1a chain is a bijection of the
+running hash at every word, so ANY single-cell change flips the cell's
+digest — 100% detection is structural, not probabilistic.
+
+`DistTarget` corruption goes through `inject_snapshot_fault` on the
+(logical, versions) snapshot instead — layout internals stay consistent
+(the shards rebuild on load), but the value/version corruption is the
+same and detection rides the same digest.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _flip32(word, bit: int):
+    return (np.uint32(word) ^ np.uint32(1 << bit)).astype(np.uint32)
+
+
+def _value_field(strategy: str, rng) -> str:
+    if strategy == "indirect":
+        return "pool"
+    if strategy == "cached_wf":
+        return str(rng.choice(["data", "pool"]))
+    return "data"
+
+
+def inject_table_fault(spec, state, fault, rng):
+    """Apply one bit_flip / torn_write to a quiescent `TableState`."""
+    import jax.numpy as jnp
+    n, k = spec.n, spec.k
+    slot = fault.slot if fault.slot is not None else int(rng.integers(n))
+    info = {"kind": fault.kind, "slot": slot}
+
+    if fault.kind == "bit_flip":
+        word = fault.word if fault.word is not None \
+            else int(rng.integers(k + 1))
+        bit = fault.bit if fault.bit is not None else int(rng.integers(32))
+        field = fault.field
+        if field is None:
+            field = "version" if word == k else _value_field(spec.strategy,
+                                                             rng)
+        info.update(word=word, bit=bit, field=field)
+        if field == "version":
+            ver = np.array(state.version)
+            ver[slot] = _flip32(ver[slot], bit)
+            return state._replace(version=jnp.asarray(ver)), info
+        if field == "bptr":
+            bp = np.array(state.bptr)
+            bp[slot] = np.int32(_flip32(np.uint32(bp[slot]), bit))
+            return state._replace(bptr=jnp.asarray(bp)), info
+        if field == "pool":
+            node = int(np.asarray(state.bptr)[slot])
+            if 0 <= node < state.pool.shape[0]:
+                pool = np.array(state.pool)
+                w = min(word, k - 1)
+                pool[node, w] = _flip32(pool[node, w], bit)
+                info["node"] = node
+                return state._replace(pool=jnp.asarray(pool)), info
+            field = "data"              # no live node: fall through
+            info["field"] = field
+        data = np.array(state.data)
+        w = min(word, k - 1)
+        data[slot, w] = _flip32(data[slot, w], bit)
+        return state._replace(data=jnp.asarray(data)), info
+
+    if fault.kind == "torn_write":
+        words = fault.words if fault.words is not None \
+            else int(rng.integers(1, k + 1))
+        words = max(1, min(words, k))
+        garbage = rng.integers(0, 2 ** 32, words, dtype=np.uint32)
+        info.update(words=words)
+        if spec.strategy == "indirect":
+            node = int(np.asarray(state.bptr)[slot])
+            pool = np.array(state.pool)
+            # never a no-op: force the first torn word to differ
+            garbage[0] = pool[node, 0] ^ np.uint32(rng.integers(1, 2 ** 32))
+            pool[node, :words] = garbage
+            info["node"] = node
+            return state._replace(pool=jnp.asarray(pool)), info
+        data = np.array(state.data)
+        garbage[0] = data[slot, 0] ^ np.uint32(rng.integers(1, 2 ** 32))
+        data[slot, :words] = garbage
+        return state._replace(data=jnp.asarray(data)), info
+
+    raise ValueError(f"not a state fault: {fault.kind!r}")
+
+
+def inject_snapshot_fault(snap: dict, fault, rng):
+    """bit_flip / torn_write against a {'logical', 'versions'} snapshot
+    (the DistTarget path: corruption in the logical plane, layout rebuilt
+    consistently on load)."""
+    logical = np.array(snap["logical"], copy=True)
+    versions = np.array(snap["versions"], np.uint32, copy=True)
+    n, k = logical.shape
+    slot = fault.slot if fault.slot is not None else int(rng.integers(n))
+    info = {"kind": fault.kind, "slot": slot}
+    if fault.kind == "bit_flip":
+        word = fault.word if fault.word is not None \
+            else int(rng.integers(k + 1))
+        bit = fault.bit if fault.bit is not None else int(rng.integers(32))
+        info.update(word=word, bit=bit,
+                    field="version" if word == k else "data")
+        if word == k:
+            versions[slot] = _flip32(versions[slot], bit)
+        else:
+            logical[slot, word] = _flip32(logical[slot, word], bit)
+    elif fault.kind == "torn_write":
+        words = fault.words if fault.words is not None \
+            else int(rng.integers(1, k + 1))
+        words = max(1, min(words, k))
+        garbage = rng.integers(0, 2 ** 32, words, dtype=np.uint32)
+        garbage[0] = logical[slot, 0] ^ np.uint32(rng.integers(1, 2 ** 32))
+        logical[slot, :words] = garbage
+        info.update(words=words)
+    else:
+        raise ValueError(f"not a state fault: {fault.kind!r}")
+    return {"logical": logical, "versions": versions}, info

@@ -1,0 +1,81 @@
+"""Structural invariants of the big-atomic layouts (DESIGN.md §11).
+
+Each registered strategy exposes its at-rest redundancy through the
+`StrategyImpl.check_invariants(spec, state)` registry hook; this module is
+the jitted front door the scrub pass (and tests) call.  An *invariant* here
+is a property every quiescent state reachable by the engine satisfies —
+so any violation proves corruption (no false positives), while satisfying
+all of them proves nothing (a flipped data bit leaves every structural
+invariant intact; that is what the scrub digest is for).
+
+Per-layout invariants (derived from the paper's cell layouts, see
+core/strategies.py):
+
+  all versioned     version_parity       even version at rest (odd = a
+                                         writer died mid-cell)
+  simplock          lock_released        no lock word held at rest
+  indirect          pointer_range        bptr in [0, pool)
+                    shadow_agrees        data == pool[bptr] (commit's shadow)
+  cached_wf         pointer_range        bptr in [0, pool)
+                    cache_matches_backup data == pool[bptr] after validation
+                    mark_clear           no invalidation mark at rest
+  cached_me         tagged_null          bptr is NULL or -(tag+2) with
+                                         tag = (version >> 1) & 0x3FFFFFFF
+  version lists     head_prev_agrees     head's prev pointer names the ring
+                                         slot the last publish displaced
+                    head_ts_newest       every published pool node is older
+                                         than the inline head
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.registry import get_strategy
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def check_invariants(spec, state) -> dict:
+    """{invariant_name: bool[n] violation mask} for the table's strategy
+    at a quiescent point (no batch in flight)."""
+    return get_strategy(spec.strategy).check_invariants(spec, state)
+
+
+def violation_mask(spec, state) -> np.ndarray:
+    """bool[n]: cells violating ANY structural invariant (host-side)."""
+    masks = check_invariants(spec, state)
+    out = np.zeros((spec.n,), bool)
+    for m in masks.values():
+        out |= np.asarray(m)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("vspec",))
+def check_version_list(vspec, vstate) -> dict:
+    """Head/pool agreement for `txn.versionlist` chains (bool[n] masks).
+
+    A healthy slot's inline head is its newest version: the head's `prev`
+    word names exactly the ring slot the last publish displaced into
+    (NULLV before any publish), and every published pool node carries a
+    strictly older timestamp than the head (`publish` requires strictly
+    increasing ts per slot)."""
+    from repro.txn.versionlist import NULLV
+    k, rd = vspec.k, vspec.ring_depth
+    head = get_strategy(vspec.strategy).logical(vstate.table)   # [n, k+2]
+    hts, hprev = head[:, k], head[:, k + 1]
+    cnt = vstate.count
+    slots = jnp.arange(vspec.n, dtype=jnp.uint32)
+    last_pos = jnp.where(cnt > 0, (cnt - 1) % jnp.uint32(rd), 0)
+    expect = jnp.where(cnt > 0, slots * jnp.uint32(rd) + last_pos, NULLV)
+    pool_ts = vstate.pool[:, :, k]                              # [n, rd]
+    published = (jnp.arange(rd, dtype=jnp.uint32)[None, :]
+                 < jnp.minimum(cnt, jnp.uint32(rd))[:, None])
+    return {
+        "head_prev_agrees": hprev != expect,
+        "head_ts_newest": jnp.any(published & (pool_ts >= hts[:, None]),
+                                  axis=1),
+    }

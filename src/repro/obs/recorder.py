@@ -160,6 +160,25 @@ class Recorder:
         self._bump("exec.preempts")
         self.instant(f"preempt@{round_idx}", args={"drained": drained})
 
+    def data_fault(self, round_idx: int, kind: str, info: dict) -> None:
+        self._bump("exec.data_faults")
+        self.instant(f"fault:{kind}@{round_idx}", args=info)
+
+    def scrub(self, round_idx: int, report) -> None:
+        self._bump("exec.scrubs")
+        self._bump("guard.cells_detected", len(report.detected))
+        self._bump("guard.cells_repaired", len(report.repaired))
+        self._bump("guard.cells_quarantined", len(report.quarantined))
+        self.instant(f"scrub@{round_idx}", args={
+            "detected": report.detected, "repaired": report.repaired,
+            "quarantined": report.quarantined,
+            "latency_s": report.latency_s})
+
+    def shed(self, round_idx: int, stream: int, reason: str) -> None:
+        self._bump("exec.shed")
+        self.instant(f"shed:s{stream}", args={"round": round_idx,
+                                              "reason": reason})
+
     # -- output ------------------------------------------------------------
 
     def metrics(self) -> dict:

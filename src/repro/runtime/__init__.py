@@ -10,8 +10,9 @@ from repro.runtime.stragglers import StragglerPlan, StragglerWatchdog  # noqa: F
 from repro.runtime.elastic import (  # noqa: F401
     MeshPlan, elastic_mesh, mesh_plan, reshard_dist, reshard_state)
 from repro.runtime.executor import (  # noqa: F401
-    DistTarget, Executor, IssueRec, LocalTarget, Recovery)
+    DistTarget, Executor, IssueRec, LocalTarget, Recovery, StreamShed)
 from repro.runtime.streams import (  # noqa: F401
     AdmissionStream, DecodeStream, InFlight, McasStream, SyntheticStream,
     serving_streams)
-from repro.runtime.faults import Fault, FaultInjector  # noqa: F401
+from repro.runtime.faults import (  # noqa: F401
+    DATA_KINDS, SCHED_KINDS, Fault, FaultInjector)

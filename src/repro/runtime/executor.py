@@ -43,6 +43,7 @@ explicit drains at checkpoint/recovery boundaries.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 
@@ -194,6 +195,16 @@ class Recovery:
     latency_s: float
 
 
+@dataclasses.dataclass
+class StreamShed:
+    """A stream dropped after exhausting its retry budget (graceful
+    degradation: the run continues without it, DESIGN.md §11)."""
+    stream: int
+    round: int
+    reason: str
+    attempts: int
+
+
 # ---------------------------------------------------------------------------
 # The executor.
 # ---------------------------------------------------------------------------
@@ -220,17 +231,32 @@ class Executor:
                       timeline (`obs.chrome_trace`).
     guard:            `PreemptionGuard` (or compatible) polled at round
                       boundaries; `request_stop()` drains + checkpoints.
-    injector:         `faults.FaultInjector`, polled before every issue.
+    injector:         `faults.FaultInjector`, polled before every issue
+                      (scheduling faults) and at drained round boundaries
+                      (data-plane faults, `poll_boundary`).
     checkpoint_dir /  atomic disk checkpoints (checkpoint/disk.py) every
     checkpoint_every  N rounds at a drained round boundary; an in-memory
                       copy always backs shard-loss recovery.
+    retry_budget /    graceful degradation: a stream whose issue raises or
+    backoff           whose every lane targets quarantined cells counts a
+                      failed attempt, waits out `backoff.delay(attempts)`
+                      rounds (sync/queue.BackoffPolicy), and is SHED with
+                      a recorded reason once attempts exceed the budget —
+                      the run continues without it.
+    scrub_every       with BIGATOMIC_GUARD=on, run the integrity scrub
+                      (guard/scrub.py) every N drained round boundaries
+                      (default every boundary); repairs from the last
+                      checkpoint, quarantines what it can't.  Guard off:
+                      no scrubber object exists and issue paths are
+                      byte-identical to the unguarded build.
     """
 
     def __init__(self, target, streams, *, slots: int = 2,
                  oversubscription: int = 2, watchdog=None, guard=None,
                  injector=None, checkpoint_dir: str | None = None,
                  checkpoint_every: int = 0, donate: bool = True,
-                 recorder: Recorder | None = None):
+                 recorder: Recorder | None = None, retry_budget: int = 3,
+                 backoff=None, scrub_every: int = 1):
         self.target = target
         self.streams = list(streams)
         self.slots = slots
@@ -260,6 +286,29 @@ class Executor:
         self.deprioritized = 0
         self.stopped = False
 
+        self.retry_budget = retry_budget
+        if backoff is None:
+            from repro.sync.queue import BackoffPolicy
+            backoff = BackoffPolicy("exp", base=1, cap=8)
+        self.backoff = backoff
+        self.scrub_every = scrub_every
+        self.shed: list[StreamShed] = []
+        self._shed_set: set[int] = set()
+        self._attempts: dict[int, int] = {}
+        self._cooldown: dict[int, int] = {}      # si -> rounds to sit out
+        self.data_faults: list = []              # (round, Fault, info)
+        self.scrubber = None
+        if target is not None:
+            from repro import guard as _guard
+            if _guard.enabled():
+                spec = getattr(target, "spec", None)
+                if spec is not None:
+                    self.scrubber = _guard.Scrubber(spec)
+                else:
+                    d = target.dspec
+                    self.scrubber = _guard.Scrubber(
+                        d.inner, n=d.n_shards * d.n_local)
+
     def _k(self) -> int:
         if self.target is None:
             return 1
@@ -282,6 +331,8 @@ class Executor:
         rec.success = np.asarray(h.result.success)
         ovf = getattr(h, "overflow", None)
         rec.overflow = None if ovf is None else np.asarray(ovf)
+        if self.scrubber is not None:
+            self.scrubber.note_results(rec.ops, rec.success)
         self.recorder.end_issue(tok, args={"seq": rec.seq})
         stream.deliver(rec.seq, rec.value, rec.success, rec.overflow)
 
@@ -299,15 +350,37 @@ class Executor:
             ops = stream.next_batch()
             if ops is None:
                 return False
+            poisoned = None
+            if self.scrubber is not None:
+                # quarantined cells: lanes rewritten to IDLE pre-issue, so
+                # they report success=False; the MASKED ops are journaled,
+                # keeping oracle replay in bit-agreement
+                ops, poisoned = self.scrubber.mask_ops(ops)
             seq = self._seq[si]
             self._seq[si] += 1
             span = self.recorder.begin_issue(si, name)
-            h = self.target.issue(ops, self._ctx[si], donate=self.donate)
+            try:
+                h = self.target.issue(ops, self._ctx[si], donate=self.donate)
+            except Exception:
+                # roll the stream back so the SAME batch retries after the
+                # backoff window; non-seekable streams can't retry
+                self.recorder.cancel_issue(span)
+                self._seq[si] = seq
+                if not hasattr(stream, "seek"):
+                    raise
+                stream.seek(seq)
+                self._note_failure(si, "issue raised")
+                return False
             self._ctx[si] = h.ctx
             rec = IssueRec(si, seq, _ops_np(ops),
                            order=getattr(h, "order", None))
             self.history.append(rec)
             self._inflight.append((rec, h, stream, span))
+            if poisoned is not None and \
+                    not (np.asarray(ops.kind) != engine.IDLE).any():
+                self._note_failure(si, "all lanes target quarantined cells")
+            elif si in self._attempts:
+                del self._attempts[si]          # progress resets the budget
         elif stream.kind == "round":
             if self.target.kind != "local":
                 raise RuntimeError("round streams (MCAS) drive a "
@@ -317,6 +390,11 @@ class Executor:
             span = self.recorder.begin_issue(si, name)
             self.target.state = stream.step(self.target.spec,
                                             self.target.state)
+            if self.scrubber is not None:
+                # round streams mutate state outside the journal: the
+                # scrubber can't attribute writes per-slot, so the whole
+                # table goes dirty (quarantine-only until next checkpoint)
+                self.scrubber.note_untracked()
             self._inflight.append((None, _CarryHandle(stream), None, span))
         elif stream.kind == "host":
             span = self.recorder.begin_issue(si, name)
@@ -351,6 +429,97 @@ class Executor:
         d = self._delays.get(si)
         return d[0] if d and d[1] > 0 else 0.0
 
+    def _note_failure(self, si: int, reason: str) -> None:
+        a = self._attempts.get(si, 0) + 1
+        self._attempts[si] = a
+        if a > self.retry_budget:
+            self.shed.append(StreamShed(stream=si, round=self._round,
+                                        reason=reason, attempts=a))
+            self._shed_set.add(si)
+            self._cooldown.pop(si, None)
+            self.recorder.shed(self._round, si, reason)
+        else:
+            self._cooldown[si] = int(self.backoff.delay(a))
+
+    def _guard_boundary(self) -> None:
+        """Drained-round-boundary work: apply due data-plane faults, then
+        scrub.  The baseline digest is taken AFTER the drain but BEFORE
+        injection, so every boundary-injected bit flip / torn write is a
+        guaranteed digest mismatch (see guard/scrub.py)."""
+        if self.target is None:
+            return
+        due = self.injector.poll_boundary(self._round) \
+            if self.injector is not None else []
+        scrub_due = self.scrubber is not None and self.scrub_every \
+            and self._round % self.scrub_every == 0
+        if not due and not scrub_due:
+            return
+        self._drain()
+        baseline = self.scrubber.digest_of(self.target) \
+            if self.scrubber is not None else None
+        for f, rng in due:
+            self._apply_data_fault(f, rng)
+        if self.scrubber is not None:
+            rep = self.scrubber.scrub(self.target, round_idx=self._round,
+                                      baseline=baseline)
+            self.recorder.scrub(self._round, rep)
+
+    def _apply_data_fault(self, f, rng) -> None:
+        from repro.guard.inject import (inject_snapshot_fault,
+                                        inject_table_fault)
+        if f.kind in ("bit_flip", "torn_write"):
+            if self.target.kind == "local":
+                self.target.state, info = inject_table_fault(
+                    self.target.spec, self.target.state, f, rng)
+            else:
+                snap, info = inject_snapshot_fault(self.target.snapshot(),
+                                                   f, rng)
+                self.target.load(snap)
+        elif f.kind == "stale_resurrect":
+            if self._last_ck is None:
+                return
+            payload, meta, _ = self._last_ck
+            self.target.load(payload["table"])
+            info = {"kind": f.kind, "from_round": meta["round"]}
+        elif f.kind in ("ckpt_corrupt", "ckpt_truncate"):
+            info = self._damage_checkpoint(f, rng)
+            if info is None:
+                return                           # no disk checkpoint to hit
+        else:
+            raise ValueError(f"unknown data fault {f.kind!r}")
+        self.data_faults.append((self._round, f, info))
+        self.recorder.data_fault(self._round, f.kind, info)
+
+    def _damage_checkpoint(self, f, rng):
+        from repro.checkpoint.disk import list_steps
+        if not self.checkpoint_dir:
+            return None
+        steps = list_steps(self.checkpoint_dir)
+        if not steps:
+            return None
+        step = steps[-1]
+        path = os.path.join(self.checkpoint_dir, f"step_{step:08d}")
+        leaves = sorted(fn for fn in os.listdir(path)
+                        if fn.endswith(".npy"))
+        if not leaves:
+            return None
+        victim = os.path.join(path, leaves[int(rng.integers(len(leaves)))])
+        size = os.path.getsize(victim)
+        info = {"kind": f.kind, "step": step,
+                "leaf": os.path.basename(victim)}
+        if f.kind == "ckpt_truncate":
+            with open(victim, "r+b") as fh:
+                fh.truncate(size // 2)
+            return info
+        off = int(rng.integers(size))
+        with open(victim, "r+b") as fh:
+            fh.seek(off)
+            byte = fh.read(1)[0]
+            fh.seek(off)
+            fh.write(bytes([byte ^ (1 << int(rng.integers(8)))]))
+        info["offset"] = off
+        return info
+
     # -- checkpoint / recovery ----------------------------------------------
 
     def _ck_payload(self) -> dict:
@@ -367,6 +536,8 @@ class Executor:
                 "seq": {str(si): int(q) for si, q in self._seq.items()},
                 "n_shards": self.target.n_shards}
         self._last_ck = (payload, meta, len(self.history))
+        if self.scrubber is not None:
+            self.scrubber.set_checkpoint(payload["table"])
         if self.checkpoint_dir:
             from repro.checkpoint.disk import save_checkpoint
             save_checkpoint(self.checkpoint_dir, self._round, payload,
@@ -415,25 +586,32 @@ class Executor:
         self.recorder.recovery(rec.round, shard, rec.replayed, rec.latency_s)
 
     def resume(self, checkpoint_dir: str | None = None) -> int:
-        """Resume from the latest DISK checkpoint (preemption restart):
-        restores table state + link ctxs + stream cursors; `run()` then
-        continues bit-identically with the pre-preemption schedule."""
+        """Resume from the newest VERIFYING disk checkpoint (preemption
+        restart): restores table state + link ctxs + stream cursors;
+        `run()` then continues bit-identically with the pre-preemption
+        schedule.  A corrupt or truncated newest step is skipped —
+        `checkpoint.restore_latest` falls back CRC-verified step by step
+        (DESIGN.md §11)."""
         from repro.checkpoint import disk
         ckdir = checkpoint_dir or self.checkpoint_dir
-        step = disk.latest_step(ckdir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckdir}")
         template = self._ck_payload()
-        payload, meta = disk.restore_checkpoint(ckdir, step, template)
+        payload, meta, _step = disk.restore_latest(ckdir, template)
         self._load_ck(payload, meta, len(self.history))
         self._round = int(meta["round"])
         self._last_ck = (payload, meta, len(self.history))
+        if self.scrubber is not None:
+            self.scrubber.set_checkpoint(payload["table"])
         return self._round
 
     # -- the scheduling loop -------------------------------------------------
 
+    def _live_streams(self):
+        return [s for si, s in enumerate(self.streams)
+                if si not in self._shed_set]
+
     def done(self) -> bool:
-        return all(s.done() for s in self.streams) and not self._inflight
+        return all(s.done() for s in self._live_streams()) \
+            and not self._inflight
 
     def _run_round(self) -> None:
         self._round += 1
@@ -444,7 +622,11 @@ class Executor:
             self._poll_faults(issued)
             if self.guard is not None and self.guard.should_stop:
                 return
-            if stream.done():
+            if si in self._shed_set or stream.done():
+                continue
+            cd = self._cooldown.get(si, 0)
+            if cd > 0:
+                self._cooldown[si] = cd - 1     # backoff: sit out the round
                 continue
             if si in self._skip:
                 self._skip.discard(si)          # deprioritized: skip ONE slot
@@ -476,10 +658,11 @@ class Executor:
         if self.target is not None and self._last_ck is None \
                 and not self.history:
             self.checkpoint()                   # round-0 recovery baseline
-        while not all(s.done() for s in self.streams):
+        while not all(s.done() for s in self._live_streams()):
             if self._round >= max_rounds:
                 raise RuntimeError(f"executor exceeded {max_rounds} rounds")
             self._run_round()
+            self._guard_boundary()
             if self.guard is not None and self.guard.should_stop:
                 self.recorder.preempt(self._round,
                                       drained=len(self._inflight))
@@ -507,6 +690,13 @@ class Executor:
             "recoveries": [dataclasses.asdict(r) for r in self.recoveries],
             "faults_fired": [dataclasses.asdict(f) for f in
                              (self.injector.fired if self.injector else [])],
+            "shed": [dataclasses.asdict(s) for s in self.shed],
+            "data_faults": [{"round": r, **info}
+                            for r, _f, info in self.data_faults],
+            "scrubs": [rep.to_json() for rep in
+                       (self.scrubber.reports if self.scrubber else [])],
+            "poisoned": int(self.scrubber.poison.sum())
+            if self.scrubber else 0,
             "events": self.recorder.metrics(),
         }
 

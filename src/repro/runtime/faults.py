@@ -1,7 +1,8 @@
-"""Deterministic fault injection for the executor (DESIGN.md §9).
+"""Deterministic fault injection for the executor (DESIGN.md §9, §11).
 
-Faults fire at exact (round, issue-slot) points in the executor's schedule,
-so every failure scenario is replayable:
+Two fault families share one schedule.  *Scheduling* faults perturb when
+work runs; *data-plane* faults (repro.guard) corrupt the state work runs
+against — the half of the resilience story PR 6 left open:
 
   kind="delay"       stream `stream`'s reported step time is inflated by
                      `seconds` for `rounds` consecutive rounds — the
@@ -18,52 +19,130 @@ so every failure scenario is replayable:
                      tests/oracle.py accepts the claimed order spanning the
                      fault.
 
-`after_issues` makes the fault genuinely mid-round: it fires only after
-that many issue slots of its round have already dispatched (in-flight work
-exists when the fault lands).
+  kind="bit_flip"        flip one bit of one live table word (a cell's
+                         data/backup word or its version word).
+  kind="torn_write"      overwrite only a prefix of a k-word cell without
+                         touching its version — the exact hazard the
+                         paper's protocols defend readers against, landed
+                         as silent at-rest corruption.
+  kind="stale_resurrect" re-load the table (or one shard of a DistTarget)
+                         from the last checkpoint snapshot: a stale
+                         replica coming back as if it were current.
+  kind="ckpt_corrupt"    flip one byte of one leaf file of the newest
+  kind="ckpt_truncate"   disk checkpoint / truncate that leaf, so restore
+                         must fall back to the newest VERIFYING step
+                         (checkpoint/disk.py CRC paths).
+
+`after_issues` makes a scheduling fault genuinely mid-round: it fires only
+after that many issue slots of its round have already dispatched.
+
+Ordering contract (what makes chaos schedules reproducible in CI):
+
+  * Scheduling faults fire at the first `poll(round_idx, issues_done)`
+    with ``round_idx > f.round or (round_idx == f.round and issues_done >=
+    f.after_issues)``; simultaneous faults fire in schedule-list order.
+  * Data-plane faults are deferred to the DRAINED round boundary at the
+    end of round ``f.round`` (``after_issues`` is ignored: live state is
+    only well-defined with nothing in flight) and applied there in
+    schedule-list order, before the guard's scrub pass runs.
+  * Every choice a fault leaves unspecified (victim slot, word, bit,
+    torn-prefix length, victim checkpoint leaf) is drawn from a per-fault
+    ``np.random.default_rng(np.random.SeedSequence([seed, index]))``
+    stream, where ``index`` is the fault's position in the ORIGINAL
+    schedule list — so one fault's draws never shift another's, no matter
+    when either fires.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
+SCHED_KINDS = ("delay", "preempt", "shard_loss")
+DATA_KINDS = ("bit_flip", "torn_write", "stale_resurrect",
+              "ckpt_corrupt", "ckpt_truncate")
+
 
 @dataclasses.dataclass(frozen=True)
 class Fault:
     round: int                    # 1-based executor round the fault fires in
-    kind: str                     # "delay" | "preempt" | "shard_loss"
+    kind: str                     # SCHED_KINDS | DATA_KINDS
     stream: int | None = None     # delay: which stream is slow
-    shard: int | None = None      # shard_loss: which shard died
+    shard: int | None = None      # shard_loss / stale_resurrect: which shard
     seconds: float = 0.0          # delay: added reported step time
     rounds: int = 1               # delay: consecutive rounds affected
     after_issues: int = 0         # fire only after this many issues in-round
+    # -- data-plane knobs (None = drawn from the fault's seeded rng) --------
+    slot: int | None = None       # bit_flip/torn_write: victim cell
+    word: int | None = None       # bit_flip: word in [0, k] (k = version)
+    bit: int | None = None        # bit_flip: bit index in [0, 32)
+    words: int | None = None      # torn_write: prefix length in [1, k)
+    field: str | None = None      # bit_flip: raw layout field override
+                                  #   ("data" | "version" | "bptr" | "pool")
 
     def __post_init__(self):
-        if self.kind not in ("delay", "preempt", "shard_loss"):
+        if self.kind not in SCHED_KINDS + DATA_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.kind == "delay" and self.stream is None:
             raise ValueError("delay faults need stream=")
 
+    @property
+    def data_plane(self) -> bool:
+        return self.kind in DATA_KINDS
+
 
 class FaultInjector:
-    """Fires each fault exactly once at its (round, issue-slot) point; the
-    executor polls before every issue.  `fired` is the audit log."""
+    """Fires each fault exactly once; `fired` is the audit log.
 
-    def __init__(self, faults: list[Fault]):
-        self._pending = sorted(faults, key=lambda f: (f.round,
-                                                      f.after_issues))
+    The executor polls scheduling faults before every issue
+    (`poll(round_idx, issues_done)`) and data-plane faults at every
+    drained round boundary (`poll_boundary(round_idx)`).  See the module
+    docstring for the full ordering/determinism contract; `seed` makes
+    the unspecified choices of every data-plane fault reproducible."""
+
+    def __init__(self, faults: list[Fault], *, seed: int = 0):
+        self.seed = seed
+        indexed = list(enumerate(faults))
+        self._pending = sorted(
+            ((i, f) for i, f in indexed if not f.data_plane),
+            key=lambda kv: (kv[1].round, kv[1].after_issues))
+        self._pending_data = sorted(
+            ((i, f) for i, f in indexed if f.data_plane),
+            key=lambda kv: (kv[1].round, kv[0]))
         self.fired: list[Fault] = []
 
+    def rng(self, index: int) -> np.random.Generator:
+        """The per-fault random stream (position in the original list)."""
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, index]))
+
     def poll(self, round_idx: int, issues_done: int) -> list[Fault]:
+        """Due scheduling faults (fires each exactly once)."""
         out, keep = [], []
-        for f in self._pending:
+        for i, f in self._pending:
             due = (round_idx > f.round
                    or (round_idx == f.round and issues_done >= f.after_issues))
-            (out if due else keep).append(f)
+            (out if due else keep).append((i, f))
         self._pending = keep
-        self.fired.extend(out)
-        return out
+        self.fired.extend(f for _, f in out)
+        return [f for _, f in out]
+
+    def poll_boundary(self, round_idx: int) -> list[tuple[Fault,
+                                                          np.random.Generator]]:
+        """Due data-plane faults with their seeded rngs, in schedule order;
+        the executor calls this at the drained boundary ending each round."""
+        out, keep = [], []
+        for i, f in self._pending_data:
+            (out if f.round <= round_idx else keep).append((i, f))
+        self._pending_data = keep
+        self.fired.extend(f for _, f in out)
+        return [(f, self.rng(i)) for i, f in out]
+
+    @property
+    def pending_data(self) -> bool:
+        return bool(self._pending_data)
 
     @property
     def exhausted(self) -> bool:
-        return not self._pending
+        return not self._pending and not self._pending_data

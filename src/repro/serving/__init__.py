@@ -1,4 +1,6 @@
 from repro.serving.paged_kv import (  # noqa: F401
     PagedKV, init_paged, lookup_pages, alloc_pages, free_pages, page_key,
 )
-from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    Admitted, OverloadPolicy, Request, ServingEngine, Shed,
+)

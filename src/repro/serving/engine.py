@@ -71,6 +71,34 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Admission control under overload (DESIGN.md §11).  The engine is
+    *saturated* when no decode slot is free AND the admission queue sits
+    at or above `watermark` of its capacity; after more than `patience`
+    consecutive saturated submissions, new requests are shed with a typed
+    verdict instead of growing an unbounded backlog."""
+    watermark: float = 0.75
+    patience: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Admitted:
+    """submit() verdict: the request id is on the admission ring."""
+    rid: int
+    queue_depth: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Shed:
+    """submit() verdict: the request was refused under overload; the
+    caller owns retry/redirect.  Counted in `serving.shed` telemetry."""
+    rid: int
+    reason: str
+    queue_depth: int
+    free_slots: int
+
+
 @dataclasses.dataclass
 class _Slot:
     rid: int = -1
@@ -86,7 +114,8 @@ class ServingEngine:
                  max_pages_per_seq: int = 32, strategy: str | None = None,
                  max_queue: int = 256, seed: int = 0, fused: bool = True,
                  spec: pk.PagedSpec | None = None, mesh=None,
-                 shard_axis: str = "shard", txn_bookkeeping: bool = True):
+                 shard_axis: str = "shard", txn_bookkeeping: bool = True,
+                 overload: OverloadPolicy | None = None):
         assert all(k == "attn" for k in cfg.layer_kinds) and \
             cfg.causal and cfg.window == 0, \
             "paged engine serves causal full-attention archs; use " \
@@ -146,18 +175,44 @@ class ServingEngine:
         self.txn_bookkeeping = txn_bookkeeping
         self._pending_retire: list[tuple[int, int]] = []
         self._decode_inflight = False  # a dispatched, un-finished decode
+        self.overload = overload
+        self._overload_streak = 0
+        self.shed_count = 0
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> Admitted | Shed:
         """Lock-free intake: the request id rides the admission queue; the
-        Request object is parked in the host-side registry."""
+        Request object is parked in the host-side registry.
+
+        Returns a typed verdict.  With an `OverloadPolicy`, sustained
+        saturation (and a full ring) sheds the request — graceful
+        degradation instead of an unbounded backlog; without one, a full
+        ring still raises RuntimeError as before."""
         if req.rid < 0 or req.rid >= 2 ** 32:
             raise ValueError("rid must fit in a uint32 payload word")
+        depth, free = len(self.admit_q), len(self.slot_q)
+        if self.overload is not None:
+            saturated = free == 0 and \
+                depth >= self.overload.watermark * self.admit_q.capacity
+            self._overload_streak = self._overload_streak + 1 if saturated \
+                else 0
+            if saturated and self._overload_streak > self.overload.patience:
+                return self._shed(req, "sustained overload", depth, free)
         ok = self.admit_q.enqueue_batch(np.asarray([req.rid], np.uint32))
         if not ok[0]:
+            if self.overload is not None:
+                return self._shed(req, "admission queue full", depth, free)
             raise RuntimeError("admission queue full")
         self.requests[req.rid] = req
+        return Admitted(rid=req.rid, queue_depth=depth + 1)
+
+    def _shed(self, req: Request, reason: str, depth: int,
+              free: int) -> Shed:
+        self.shed_count += 1
+        obs_telemetry.record(**{"serving.shed": 1})
+        return Shed(rid=req.rid, reason=reason, queue_depth=depth,
+                    free_slots=free)
 
     def step(self):
         """Admit waiting requests into free slots, then decode one token for
